@@ -1,0 +1,45 @@
+"""Paper Table III analogue: the FASST NAF unit per function/precision.
+
+The FPGA table reports op-frequency/LUT/energy per activation function;
+here we measure per-element wall time of the shared NAF datapath (the
+jitted XLA path that the model uses — identical math to the Pallas
+kernel) for every supported function at bf16 and f32, demonstrating the
+"one reusable datapath, many NAFs" property the paper argues for.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fasst import MODES, _naf
+
+from .common import csv_row, time_fn
+
+ROWS, COLS = 4096, 1024
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for dtype, tag in [(jnp.float32, "f32"), (jnp.bfloat16, "bf16")]:
+        x = jnp.asarray(rng.standard_normal((ROWS, COLS)), dtype)
+        for mode in MODES:
+            if mode == "identity":
+                continue
+            f = jax.jit(lambda v, m=mode: _naf(v.astype(jnp.float32), m
+                                               ).astype(v.dtype))
+            us = time_fn(f, x, iters=8)
+            gops = ROWS * COLS / us / 1e3
+            csv_row(f"tableIII_naf_{mode}_{tag}", us, f"Gelem_s={gops:.2f}")
+
+        # fused softmax (the paper's SoftMax row)
+        f = jax.jit(lambda v: jax.nn.softmax(v.astype(jnp.float32), -1
+                                             ).astype(v.dtype))
+        us = time_fn(f, x, iters=8)
+        csv_row(f"tableIII_softmax_{tag}", us,
+                f"Gelem_s={ROWS*COLS/us/1e3:.2f}")
+
+
+if __name__ == "__main__":
+    run()

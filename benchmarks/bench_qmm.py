@@ -1,0 +1,57 @@
+"""Paper Table II analogue: the MAC unit, per precision mode.
+
+The FPGA table reports LUT/FF/delay/power per precision; the TPU-native
+equivalents are (a) HBM bytes moved per matmul — the quantity the RMMEC
+SIMD packing actually improves — and (b) arithmetic intensity (FLOP/byte),
+plus measured CPU wall time of the XLA dequant-matmul path as a relative
+latency signal. The Pallas kernel itself is validated in tests (interpret
+mode is a correctness tool, not a timing tool).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QTensor, qmatmul
+from repro.core.formats import get_format
+
+from .common import csv_row, time_fn
+
+M, K, N = 256, 2048, 2048
+FMTS = ["bf16", "int8", "fp8", "int4", "fp4", "nf4"]
+
+
+def weight_bytes(fmt: str, block=64) -> int:
+    if fmt == "bf16":
+        return K * N * 2
+    f = get_format(fmt)
+    scale_bytes = (K // block) * N * 4
+    return int(K * N * f.bits / 8) + scale_bytes
+
+
+def run():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((K, N)) * 0.02, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    flops = 2 * M * K * N
+
+    for fmt in FMTS:
+        if fmt == "bf16":
+            wq = w.astype(jnp.bfloat16)
+        else:
+            wq = QTensor.quantize(w, fmt, block_size=64)
+        act = "int8" if fmt == "int8" else "bf16"
+        f = jax.jit(lambda xx, ww=wq: qmatmul(xx, ww, act=act,
+                                              compute_dtype=jnp.bfloat16))
+        us = time_fn(f, x, iters=8)
+        wb = weight_bytes(fmt)
+        total_b = wb + M * K * 2 + M * N * 2        # w + x + y traffic
+        csv_row(f"tableII_qmm_{fmt}", us,
+                f"weight_bytes={wb};arith_intensity={flops/total_b:.1f}"
+                f";bytes_vs_bf16={weight_bytes('bf16')/wb:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Paper Table IV analogue: end-to-end accelerator throughput.
+
+The FPGA table compares GOPS across NLP accelerators; the TPU counterpart
+is projected decode throughput per architecture from the dry-run roofline
+records (memory-bound tokens/s on the production mesh), plus measured CPU
+serve-step latency on reduced configs as a relative signal across weight
+policies (bf16 vs the paper's int4 deployment).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY, SHAPES, reduce_config
+from repro.core import PRESETS, quantize_tree
+from repro.models import Ctx, build_model
+
+from .common import csv_row, time_fn
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/final")
+
+
+def projected_from_dryrun():
+    for path in sorted(glob.glob(f"{DRYRUN_DIR}/*decode_32k__16x16*.json")):
+        r = json.load(open(path))
+        sp = SHAPES["decode_32k"]
+        bound = r["roofline"]["bound_s"]
+        if bound <= 0:
+            continue
+        tps = sp.global_batch / bound
+        csv_row(f"tableIV_proj_{r['arch']}_{r['policy']}", bound * 1e6,
+                f"global_tok_s={tps:.0f};dominant={r['roofline']['dominant']}")
+
+
+def measured_reduced():
+    ctx = Ctx(compute_dtype=jnp.float32)
+    for arch in ("qwen2.5-14b", "moonshot-v1-16b-a3b", "mamba2-780m"):
+        rc = reduce_config(REGISTRY[arch])
+        model = build_model(rc)
+        params = model.init(jax.random.PRNGKey(0))
+        for pol in ("bf16", "int4"):
+            p = params if pol == "bf16" else quantize_tree(params,
+                                                           PRESETS[pol])
+            kv = "bf16" if pol == "bf16" else PRESETS[pol].kv_cache
+            cache = model.init_cache(8, 64, kv)
+            cache, _ = model.prefill(ctx, p, cache,
+                                     {"tokens": jnp.ones((8, 32), jnp.int32)})
+            tok = jnp.ones((8, 1), jnp.int32)
+            f = jax.jit(lambda pp, t, c: model.decode_step(ctx, pp, t, c)[1])
+            us = time_fn(f, p, tok, cache, iters=5)
+            csv_row(f"tableIV_cpu_{arch}_{pol}", us,
+                    f"host_tok_s={8e6/us:.1f}")
+
+
+def run():
+    projected_from_dryrun()
+    measured_reduced()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["time_fn", "tree_bytes_abstract", "csv_row"]
+
+
+def time_fn(fn, *args, iters=10, warmup=2):
+    """Median wall time (us) of a jitted callable on this host."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def tree_bytes_abstract(tree) -> int:
+    """Storage bytes of a pytree of arrays / ShapeDtypeStructs / QTensors."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if leaf is None:
+            continue
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        if shape is None or dtype is None:
+            continue
+        total += int(np.prod(shape)) * np.dtype(dtype).itemsize
+    return total
+
+
+def csv_row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,90 @@
+"""Roofline table builder (deliverable g): reads experiments/dryrun/*.json.
+
+For every (arch x shape x mesh) record, prints the three terms in seconds,
+the dominant bottleneck, MODEL_FLOPS / HLO_FLOPS, and (for decode cells)
+the implied global tokens/s at the roofline bound. --markdown emits the
+EXPERIMENTS.md table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import List
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/final")
+
+COLS = ["arch", "shape", "mesh", "policy", "compute_s", "memory_s",
+        "collective_s", "dominant", "useful_flop_frac"]
+
+
+def load(dirname=DRYRUN_DIR) -> List[dict]:
+    out = []
+    for p in sorted(glob.glob(f"{dirname}/*.json")):
+        r = json.load(open(p))
+        rl = r.get("roofline", {})
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "policy": r["policy"], "kind": r["kind"],
+            "compute_s": rl.get("compute_s", 0.0),
+            "memory_s": rl.get("memory_s", 0.0),
+            "collective_s": rl.get("collective_s", 0.0),
+            "bound_s": rl.get("bound_s", 0.0),
+            "dominant": rl.get("dominant", "?"),
+            "useful_flop_frac": rl.get("useful_flop_frac", 0.0),
+            "temp_gb": (r.get("memory_analysis", {})
+                        .get("temp_size_in_bytes") or 0) / 2 ** 30,
+            "collectives": r.get("collectives", {}),
+        })
+    return out
+
+
+def roofline_fraction(row) -> float:
+    """compute_term / bound — how close the cell sits to the compute roof."""
+    if row["bound_s"] <= 0:
+        return 0.0
+    return row["compute_s"] / row["bound_s"]
+
+
+def markdown(rows) -> str:
+    hdr = ("| arch | shape | mesh | policy | compute (s) | memory (s) | "
+           "collective (s) | dominant | MODEL/HLO flops | roofline frac |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['policy']} | "
+            f"{r['compute_s']:.4g} | {r['memory_s']:.4g} | "
+            f"{r['collective_s']:.4g} | {r['dominant'].replace('_s','')} | "
+            f"{r['useful_flop_frac']:.2f} | {roofline_fraction(r):.2f} |")
+    return "\n".join(lines)
+
+
+def run():
+    rows = load()
+    for r in rows:
+        if r["mesh"] != "16x16":
+            continue
+        print(f"roofline_{r['arch']}_{r['shape']}_{r['policy']},"
+              f"{r['bound_s']*1e6:.1f},"
+              f"dominant={r['dominant']};frac={roofline_fraction(r):.2f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = load()
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    if args.markdown:
+        print(markdown(rows))
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

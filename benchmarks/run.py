@@ -1,0 +1,31 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  fig10_*     — paper Fig. 10 (model size + throughput across precisions)
+  tableII_*   — paper Table II (MAC/qmm unit per precision mode)
+  tableIII_*  — paper Table III (FASST NAF unit per function)
+  tableIV_*   — paper Table IV (end-to-end accelerator throughput)
+  roofline_*  — per (arch x shape) roofline bound from the dry-run records
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import (bench_fasst, bench_qmm, bench_quant_formats,
+                   bench_throughput, roofline)
+    for mod in (bench_quant_formats, bench_qmm, bench_fasst,
+                bench_throughput, roofline):
+        try:
+            mod.run()
+        except Exception:
+            print(f"# {mod.__name__} FAILED", file=sys.stderr)
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Continuous-batching quantized serving (the paper's deployment mode).
+
+An INT4-weight / INT8-KV ServeEngine handles interleaved requests in
+fixed batch slots — the TPU analogue of the paper's real-time FPGA
+translation node.
+
+    PYTHONPATH=src python examples/serve_multilingual.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REGISTRY, reduce_config
+from repro.core import PRESETS, quantize_tree
+from repro.data import LANG_CODES, SyntheticTranslation
+from repro.models import Ctx, build_model
+from repro.serving import ServeEngine
+
+ctx = Ctx(compute_dtype=jnp.float32)
+cfg = reduce_config(REGISTRY["nllb600m"])
+model = build_model(cfg)
+params = quantize_tree(model.init(jax.random.PRNGKey(0)), PRESETS["int4"])
+
+eng = ServeEngine(model, params, slots=4, max_len=32, kv_dtype="int8",
+                  ctx=ctx)
+ds = SyntheticTranslation(cfg.vocab_size, 12, seed=0)
+
+t0 = time.perf_counter()
+queue = []
+for rid in range(8):
+    b = ds.sample(1)
+    queue.append((rid, {"src_tokens": jnp.asarray(b["src_tokens"]),
+                        "tgt_in": jnp.asarray([[LANG_CODES[b["tgt_lang"]]]])}))
+
+inflight, served = {}, 0
+while queue or inflight:
+    while queue and eng.free_slot() is not None:
+        rid, req = queue.pop(0)
+        inflight[eng.add_request(req, gen_tokens=6)] = rid
+    for slot in eng.tick():
+        rid = inflight.pop(slot)
+        print(f"request {rid} (slot {slot}): {eng.result(slot)}")
+        served += len(eng.result(slot))
+dt = time.perf_counter() - t0
+print(f"\n8 requests, {served} tokens in {dt:.2f}s "
+      f"({served/dt:.1f} tok/s on this host)")

@@ -1,0 +1,37 @@
+"""Config registry: 10 assigned architectures + the paper's NLLB-600M."""
+
+from . import (gemma3_1b, internlm2_20b, llava_next_mistral_7b, mamba2_780m,
+               moonshot_v1_16b_a3b, nemotron_4_15b, nllb600m, olmoe_1b_7b,
+               qwen2_5_14b, recurrentgemma_9b, whisper_base)
+from .base import (SHAPES, ModelConfig, MoECfg, ShapeSpec, SSMCfg,
+                   active_param_count, input_specs, param_count,
+                   reduce_config, supported_shapes)
+
+_ALL = [
+    mamba2_780m.CONFIG,
+    nemotron_4_15b.CONFIG,
+    internlm2_20b.CONFIG,
+    qwen2_5_14b.CONFIG,
+    gemma3_1b.CONFIG,
+    moonshot_v1_16b_a3b.CONFIG,
+    olmoe_1b_7b.CONFIG,
+    llava_next_mistral_7b.CONFIG,
+    whisper_base.CONFIG,
+    recurrentgemma_9b.CONFIG,
+    nllb600m.CONFIG,
+    nllb600m.CONFIG_MOE,
+]
+
+REGISTRY = {c.name: c for c in _ALL}
+ASSIGNED = [c.name for c in _ALL[:10]]     # the graded 10-arch pool
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+__all__ = ["get_config", "REGISTRY", "ASSIGNED", "SHAPES", "ModelConfig",
+           "MoECfg", "SSMCfg", "ShapeSpec", "input_specs", "param_count",
+           "active_param_count", "reduce_config", "supported_shapes"]

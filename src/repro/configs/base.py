@@ -1,0 +1,222 @@
+"""Config dataclasses, the assigned shape grid, and input_specs().
+
+Shapes (assignment):
+  train_4k     seq=4096,   global_batch=256  (training;   lowers train_step)
+  prefill_32k  seq=32768,  global_batch=32   (inference;  lowers prefill)
+  decode_32k   seq=32768,  global_batch=128  (one new token, KV cache = seq)
+  long_500k    seq=524288, global_batch=1    (decode; SSM/hybrid only)
+
+input_specs() returns ShapeDtypeStruct stand-ins (weak-type correct,
+shardable, no device allocation) for every model input of a given
+(arch x shape) cell — the dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MoECfg", "SSMCfg", "ModelConfig", "ShapeSpec", "SHAPES",
+           "supported_shapes", "input_specs", "reduce_config", "param_count"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    parallel_mode: str = "expert"        # expert | tensor
+    aux_loss_weight: float = 0.01
+    dispatch_groups: int = 0             # 0 = auto (DP-aligned); 1 = global
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    state_dim: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                          # dense|moe|ssm|hybrid|vlm|audio|encdec
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    mlp_act: str = "silu_glu"
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    window_pattern: Tuple[int, ...] = ()   # per-layer windows, cycled; 0=full
+    tie_embeddings: bool = False
+    embed_scale: bool = False
+    moe: Optional[MoECfg] = None
+    ssm: Optional[SSMCfg] = None
+    # enc-dec
+    enc_layers: int = 0
+    enc_len: int = 0                     # encoder sequence (frames/src tokens)
+    # hybrid (RG-LRU)
+    d_rec: int = 0
+    local_window: int = 0
+    # vlm
+    num_patches: int = 0
+    # source provenance
+    source: str = ""
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def supported_shapes(cfg: ModelConfig) -> list[str]:
+    """long_500k only for O(1)-state families (DESIGN.md §4 skip notes)."""
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.family in ("ssm", "hybrid"):
+        shapes.append("long_500k")
+    return shapes
+
+
+def _tok(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Batch ShapeDtypeStructs for one (arch x shape) cell.
+
+    train/prefill -> the full-sequence batch; decode -> the one-token batch
+    (the KV cache is built separately via jax.eval_shape(init_cache)).
+    """
+    sp = SHAPES[shape_name]
+    B, S = sp.global_batch, sp.seq_len
+    if sp.kind == "decode":
+        return {"tokens": _tok((B, 1))}
+
+    train = sp.kind == "train"
+    if cfg.family == "vlm":
+        P = cfg.num_patches
+        return {"tokens": _tok((B, S - P)),
+                "img_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model),
+                                                   jnp.bfloat16)}
+    if cfg.family == "audio":
+        specs = {"tgt_in": _tok((B, S)),
+                 "frames": jax.ShapeDtypeStruct((B, cfg.enc_len, cfg.d_model),
+                                                jnp.bfloat16)}
+    elif cfg.family == "encdec":
+        specs = {"tgt_in": _tok((B, S)), "src_tokens": _tok((B, cfg.enc_len))}
+    else:
+        return {"tokens": _tok((B, S))}
+    if train:   # teacher-forcing labels for the enc-dec loss
+        specs["tgt_out"] = _tok((B, S))
+        specs["loss_mask"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
+    return specs
+
+
+def reduce_config(cfg: ModelConfig, **over) -> ModelConfig:
+    """Smoke-test variant: same family/topology, tiny dims."""
+    heads = 4
+    kv = max(1, min(cfg.num_kv_heads * heads // max(cfg.num_heads, 1), heads))
+    if cfg.family == "hybrid":
+        layers = 4        # 1 super-block (r,r,a) + 1 tail recurrent layer
+    else:
+        layers = 2
+    changes = dict(
+        name=cfg.name + "-smoke",
+        num_layers=layers,
+        d_model=64,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 96,
+        vocab_size=256,
+        enc_layers=2 if cfg.enc_layers else 0,
+        enc_len=12 if cfg.enc_len else 0,
+        d_rec=64 if cfg.d_rec else 0,
+        local_window=8 if cfg.local_window else 0,
+        num_patches=4 if cfg.num_patches else 0,
+        window_pattern=tuple(min(w, 8) for w in cfg.window_pattern),
+        moe=None if cfg.moe is None else dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=2),
+        ssm=None if cfg.ssm is None else SSMCfg(state_dim=16, head_dim=16,
+                                                expand=2, chunk=8),
+    )
+    changes.update(over)
+    return dataclasses.replace(cfg, **changes)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (also used for MODEL_FLOPS in roofline)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    H, Hkv, V, ff = cfg.num_heads, cfg.num_kv_heads, cfg.vocab_size, cfg.d_ff
+    embed = V * d * (1 if cfg.tie_embeddings else 2)
+
+    def attn():
+        return d * H * hd * 2 + d * Hkv * hd * 2
+
+    def ffn(width):
+        mult = 3 if cfg.mlp_act.endswith("_glu") else 2
+        return mult * d * width
+
+    if cfg.family == "ssm":
+        d_inner = cfg.ssm.expand * d
+        nh = d_inner // cfg.ssm.head_dim
+        per = d * (2 * d_inner + 2 * cfg.ssm.state_dim + nh) + d_inner * d
+        return embed + cfg.num_layers * per
+
+    if cfg.family == "hybrid":
+        n_super = cfg.num_layers // 3
+        tail = cfg.num_layers - 3 * n_super
+        rec = (2 * d * cfg.d_rec + 2 * cfg.d_rec ** 2 + cfg.d_rec * d
+               + ffn(ff))
+        at = attn() + ffn(ff)
+        return embed + (2 * n_super + tail) * rec + n_super * at
+
+    if cfg.moe is not None:
+        per = attn() + d * cfg.moe.num_experts + cfg.moe.num_experts * ffn(ff)
+        dec = cfg.num_layers * per
+        if cfg.enc_layers:
+            dec += cfg.enc_layers * (attn() + ffn(ff))
+        return embed + dec
+
+    per = attn() + ffn(ff)
+    total = embed + cfg.num_layers * per
+    if cfg.enc_layers:
+        total += cfg.enc_layers * (attn() + ffn(ff))
+        total += cfg.num_layers * attn()      # decoder cross-attention
+    return total
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active (per-token) params — MoE uses top_k experts only."""
+    if cfg.moe is None:
+        return param_count(cfg)
+    d, ff = cfg.d_model, cfg.d_ff
+    mult = 3 if cfg.mlp_act.endswith("_glu") else 2
+    expert_delta = (cfg.moe.num_experts - cfg.moe.top_k) * mult * d * ff
+    layers = cfg.num_layers + (cfg.enc_layers or 0)
+    return param_count(cfg) - layers * expert_delta

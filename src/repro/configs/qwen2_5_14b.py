@@ -1,0 +1,10 @@
+"""qwen2.5-14b [dense] — GQA kv=8, QKV bias [hf:Qwen/Qwen2.5-14B]."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b", family="dense",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8, head_dim=128,
+    d_ff=13824, vocab_size=152064, mlp_act="silu_glu", qkv_bias=True,
+    rope_theta=1e6, norm_eps=1e-6,
+    source="[hf:Qwen/Qwen2.5-0.5B family; assignment line]",
+)

@@ -1,0 +1,20 @@
+"""Core library: the paper's contribution (sub-octet quantization +
+co-designed kernels' software interface) as composable JAX modules."""
+
+from .formats import FORMATS, Format, get_format
+from .policy import PRESETS, PrecisionPolicy, quantize_tree, tree_nbytes
+from .qlinear import embed_lookup, qmatmul, quantize_activations_int8
+from .qlora import (attach_lora, count_adapter_params, extract_adapters,
+                    inject_adapters, merge_lora)
+from .qtensor import QTensor, maybe_dequantize, tensor_nbytes
+from .quantize import dequantize_blockwise, quantize_blockwise
+
+__all__ = [
+    "FORMATS", "Format", "get_format",
+    "PRESETS", "PrecisionPolicy", "quantize_tree", "tree_nbytes",
+    "QTensor", "maybe_dequantize", "tensor_nbytes",
+    "quantize_blockwise", "dequantize_blockwise",
+    "qmatmul", "embed_lookup", "quantize_activations_int8",
+    "attach_lora", "extract_adapters", "inject_adapters", "merge_lora",
+    "count_adapter_params",
+]

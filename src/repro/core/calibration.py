@@ -1,0 +1,44 @@
+"""Activation calibration for static quantization (paper §III PTQ setup).
+
+For the w8a8 arm the paper calibrates on ~1000 queries/language; here the
+calibrator folds absmax / percentile statistics over sample activation
+batches and produces per-tensor scales usable by qlinear's int8 path.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Iterable
+
+import jax.numpy as jnp
+
+__all__ = ["ActStats", "calibrate"]
+
+
+class ActStats:
+    """Streaming absmax + histogram-free percentile estimate (P^2-lite)."""
+
+    def __init__(self, percentile: float = 99.9):
+        self.percentile = percentile
+        self.absmax = 0.0
+        self.samples: list[float] = []
+
+    def update(self, x: jnp.ndarray):
+        ax = float(jnp.max(jnp.abs(x)))
+        self.absmax = max(self.absmax, ax)
+        # store per-batch percentile; final estimate = median of batch stats
+        self.samples.append(float(jnp.percentile(jnp.abs(x), self.percentile)))
+
+    def scale(self, max_code: float = 127.0) -> float:
+        if not self.samples:
+            return 1.0
+        import statistics
+        pct = statistics.median(self.samples)
+        return max(pct, 1e-8) / max_code
+
+
+def calibrate(apply_fn: Callable, batches: Iterable, percentile=99.9) -> ActStats:
+    """Run ``apply_fn(batch) -> activation`` over batches, fold statistics."""
+    stats = ActStats(percentile)
+    for b in batches:
+        stats.update(apply_fn(b))
+    return stats

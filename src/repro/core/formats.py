@@ -1,0 +1,130 @@
+"""Numeric formats for sub-octet quantization (paper §II-A / §III).
+
+The paper deploys NLLB-600M at FP8 / INT8 / FP4 / INT4 (+BF16 accumulate).
+Each format here defines how a real value maps to a code and back:
+
+  * uniform integer formats (INT4, INT8): symmetric absmax scaling,
+    code = round(x / scale) clipped to the symmetric range;
+  * codebook formats (FP4 = E2M1 value set, NF4 = QLoRA normal-float):
+    code = index of the nearest codebook entry of x / scale;
+  * FP8 (E4M3 / E5M2): native jnp float8 storage with blockwise scale
+    so the dynamic range of each block is centred on the format's max.
+
+All formats quantize *blockwise* (paper uses BitsAndBytes blockwise PTQ):
+a block of `block_size` consecutive values along the quantization axis
+shares one scale = absmax(block) / fmt.max_code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Format", "get_format", "FORMATS", "SUB_OCTET", "pack_nibbles", "unpack_nibbles"]
+
+
+# E2M1 value set (sign x {0, 0.5, 1, 1.5, 2, 3, 4, 6}), sorted ascending.
+# 15 distinct values; index 7 and 8 both decode near zero (+-0).
+_FP4_E2M1 = np.sort(np.array(
+    [-6.0, -4.0, -3.0, -2.0, -1.5, -1.0, -0.5, -0.0,
+     0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], dtype=np.float32))
+
+# QLoRA NF4 table (Dettmers et al., 2023) — information-theoretically optimal
+# for N(0,1) weights; the paper's QLoRA arm uses this via bitsandbytes.
+_NF4 = np.array(
+    [-1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+     -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+     0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+     0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+     0.7229568362236023, 1.0], dtype=np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Format:
+    """A storage number format for quantized tensors."""
+
+    name: str
+    bits: int
+    kind: str                      # "int" | "codebook" | "float8" | "none"
+    max_code: float                # |value| that absmax maps to (scale divisor)
+    codebook: Optional[np.ndarray] = None
+    storage_dtype: Optional[jnp.dtype] = None
+
+    @property
+    def packed(self) -> bool:
+        """4-bit formats store two codes per uint8 byte."""
+        return self.bits == 4
+
+    @property
+    def bytes_per_param(self) -> float:
+        return self.bits / 8.0
+
+    def boundaries(self) -> np.ndarray:
+        """Decision boundaries (midpoints) for codebook nearest-neighbour."""
+        assert self.codebook is not None
+        cb = self.codebook
+        return (cb[1:] + cb[:-1]) / 2.0
+
+
+FORMATS: dict[str, Format] = {
+    "int4": Format("int4", 4, "int", 7.0, storage_dtype=jnp.uint8),
+    "int8": Format("int8", 8, "int", 127.0, storage_dtype=jnp.int8),
+    "fp4": Format("fp4", 4, "codebook", 6.0, codebook=_FP4_E2M1,
+                  storage_dtype=jnp.uint8),
+    "nf4": Format("nf4", 4, "codebook", 1.0, codebook=_NF4,
+                  storage_dtype=jnp.uint8),
+    "fp8": Format("fp8", 8, "float8", 448.0,
+                  storage_dtype=jnp.float8_e4m3fn),
+    "fp8_e5m2": Format("fp8_e5m2", 8, "float8", 57344.0,
+                       storage_dtype=jnp.float8_e5m2),
+    # passthrough (no quantization) — used by PrecisionPolicy for exempt layers
+    "bf16": Format("bf16", 16, "none", 0.0, storage_dtype=jnp.bfloat16),
+    "f32": Format("f32", 32, "none", 0.0, storage_dtype=jnp.float32),
+}
+
+SUB_OCTET = ("int4", "fp4", "nf4")  # formats packed two-per-byte
+
+
+def get_format(name: str) -> Format:
+    if name not in FORMATS:
+        raise ValueError(f"unknown format {name!r}; have {sorted(FORMATS)}")
+    return FORMATS[name]
+
+
+def pack_nibbles(codes: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Pack uint8 codes (values 0..15) two-per-byte along ``axis``.
+
+    Even positions go to the low nibble, odd to the high nibble — the
+    TPU-side analogue of the paper's RMMEC lane packing (6x INT4 operands
+    per MAC issue; here: 2x INT4 weights per HBM byte).
+    """
+    axis = axis % codes.ndim
+    if codes.shape[axis] % 2 != 0:
+        raise ValueError(f"axis {axis} length {codes.shape[axis]} must be even to pack")
+    lo = jnp.take(codes, jnp.arange(0, codes.shape[axis], 2), axis=axis)
+    hi = jnp.take(codes, jnp.arange(1, codes.shape[axis], 2), axis=axis)
+    return (lo.astype(jnp.uint8) | (hi.astype(jnp.uint8) << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_nibbles` (returns uint8 codes 0..15)."""
+    axis = axis % packed.ndim
+    lo = packed & jnp.uint8(0x0F)
+    hi = (packed >> 4) & jnp.uint8(0x0F)
+    stacked = jnp.stack([lo, hi], axis=axis + 1)  # (..., K/2, 2, ...)
+    new_shape = list(packed.shape)
+    new_shape[axis] = packed.shape[axis] * 2
+    return stacked.reshape(new_shape)
+
+
+def signed_from_nibble(codes: jnp.ndarray) -> jnp.ndarray:
+    """uint8 nibble (0..15) -> int8 two's-complement int4 value (-8..7)."""
+    return (codes.astype(jnp.int8) ^ jnp.int8(8)) - jnp.int8(8)
+
+
+def nibble_from_signed(vals: jnp.ndarray) -> jnp.ndarray:
+    """int values (-8..7) -> uint8 nibble (0..15)."""
+    return (vals.astype(jnp.int8) & jnp.int8(0x0F)).astype(jnp.uint8)

@@ -1,0 +1,104 @@
+"""Quantized linear algebra front-end.
+
+Every matmul in the model zoo routes through :func:`qmatmul`, which
+dispatches on the weight's storage:
+
+  * plain array            -> bf16 MXU matmul (baseline);
+  * QTensor, act bf16      -> fused dequant-matmul (w4a16 / w8a16 / fp8):
+                              XLA path dequantizes next to the dot (HBM
+                              reads stay sub-octet); the Pallas path
+                              (kernels/qmm.py) does it in VMEM tiles;
+  * QTensor int8 + act int8-> integer matmul on the int8 MXU mode with
+                              per-token x per-channel rescale (the TPU
+                              realisation of the paper's 6xINT4/
+                              3xFP8 SIMD MAC lanes — see DESIGN.md).
+
+QLoRA adapters attached to the QTensor contribute the trainable low-rank
+update: y += (x @ A) @ B * (alpha / r), with the base frozen via
+stop_gradient (paper §III: QLoRA keeps original quantized weights fixed).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .qtensor import QTensor
+
+__all__ = ["qmatmul", "embed_lookup", "quantize_activations_int8"]
+
+
+def quantize_activations_int8(x: jnp.ndarray):
+    """Dynamic per-token symmetric int8 quantization of activations."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.where(absmax == 0, 1.0, absmax / 127.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _lora_term(x, w: QTensor, compute_dtype):
+    if w.lora_a is None:
+        return None
+    r = w.lora_a.shape[-1]
+    scaling = w.lora_alpha / r
+    xa = jnp.matmul(x.astype(compute_dtype), w.lora_a.astype(compute_dtype))
+    return jnp.matmul(xa, w.lora_b.astype(compute_dtype)) * scaling
+
+
+def _int8_path(x, w: QTensor, compute_dtype):
+    """w8a8 integer matmul. Requires per-channel weight scales (1 K-block)."""
+    scales = w.block_scales()          # (..., nb, N)
+    if scales.shape[-2] != 1:
+        return None                    # blockwise int8: fall back to dequant
+    xq, sx = quantize_activations_int8(x)
+    out = jax.lax.dot_general(
+        xq, w.data,
+        dimension_numbers=(((x.ndim - 1,), (w.data.ndim - 2,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    sw = jnp.squeeze(scales, axis=-2)  # (..., N)
+    return (out.astype(jnp.float32) * sx * sw).astype(compute_dtype)
+
+
+def qmatmul(
+    x: jnp.ndarray,
+    w: Any,
+    *,
+    act: str = "bf16",
+    compute_dtype=jnp.bfloat16,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    """y = x @ w for plain or quantized ``w`` (last-2-axis contraction)."""
+    if not isinstance(w, QTensor):
+        return jnp.matmul(x.astype(compute_dtype), w.astype(compute_dtype))
+
+    lora = _lora_term(x, w, compute_dtype)
+
+    if act == "int8" and w.fmt == "int8":
+        y = _int8_path(x, w, compute_dtype)
+        if y is None:
+            y = jnp.matmul(x.astype(compute_dtype),
+                           jax.lax.stop_gradient(w.dequantize(compute_dtype)))
+    elif impl == "pallas" and w.fmt in ("int4", "fp4", "nf4") and w.data.ndim == 2:
+        from ..kernels import ops as kops  # lazy: avoid import cycle
+        y = kops.qmm(x, w, compute_dtype=compute_dtype)
+    else:
+        wd = jax.lax.stop_gradient(w.dequantize(compute_dtype))
+        y = jnp.matmul(x.astype(compute_dtype), wd)
+
+    if lora is not None:
+        y = y + lora.astype(y.dtype)
+    return y
+
+
+def embed_lookup(table: Any, ids: jnp.ndarray, compute_dtype=jnp.bfloat16):
+    """Embedding gather with row-wise dequantization for QTensor tables."""
+    if not isinstance(table, QTensor):
+        return jnp.take(table, ids, axis=0).astype(compute_dtype)
+    rows = jnp.take(table.data, ids, axis=0)
+    scales = jnp.take(table.block_scales(), ids, axis=0)
+    from .quantize import dequantize_blockwise
+    return dequantize_blockwise(rows, scales, table.fmt, q_axis=-1,
+                                out_dtype=compute_dtype)

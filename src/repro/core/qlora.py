@@ -1,0 +1,76 @@
+"""QLoRA: low-rank adapters over frozen quantized weights (paper §III).
+
+The paper finetunes the 4-bit NLLB deployment with QLoRA: base weights
+stay quantized+frozen, small trainable A/B adapters learn the update.
+Adapters live *inside* the QTensor (lora_a / lora_b children) so the
+param tree shape is stable; training extracts the adapter subtree,
+differentiates only it, and injects updates back.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .qtensor import QTensor
+
+__all__ = ["attach_lora", "extract_adapters", "inject_adapters",
+           "count_adapter_params", "merge_lora"]
+
+_DEFAULT_TARGETS = r"(wq|wk|wv|wo|wqkv|w_in|w_gate|w_up|w_down|w_out)"
+
+
+def attach_lora(params: Any, key: jax.Array, rank: int = 16,
+                targets: str = _DEFAULT_TARGETS, alpha: float = 16.0) -> Any:
+    """Attach zero-init-B / gaussian-A adapters to matching QTensors."""
+    pat = re.compile(targets)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QTensor))
+    keys = jax.random.split(key, max(len(flat), 1))
+    out = []
+    for (path, leaf), k in zip(flat, keys):
+        pstr = jax.tree_util.keystr(path)
+        if isinstance(leaf, QTensor) and pat.search(pstr) and len(leaf.shape) >= 2:
+            *batch, kdim, ndim = leaf.shape
+            a = jax.random.normal(k, (*batch, kdim, rank), jnp.float32) * (1.0 / kdim ** 0.5)
+            b = jnp.zeros((*batch, rank, ndim), jnp.float32)
+            leaf = leaf.with_lora(a, b, alpha=alpha)
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def extract_adapters(params: Any) -> Any:
+    """Parallel tree holding {'a','b'} per adapted QTensor, None elsewhere."""
+    def get(leaf):
+        if isinstance(leaf, QTensor) and leaf.lora_a is not None:
+            return {"a": leaf.lora_a, "b": leaf.lora_b}
+        return None
+    return jax.tree_util.tree_map(
+        get, params, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def inject_adapters(params: Any, adapters: Any) -> Any:
+    """Inverse of extract_adapters: write adapter arrays into the QTensors."""
+    def put(leaf, ad):
+        if isinstance(leaf, QTensor) and ad is not None:
+            return leaf.with_lora(ad["a"], ad["b"], alpha=leaf.lora_alpha)
+        return leaf
+    return jax.tree_util.tree_map(
+        put, params, adapters,
+        is_leaf=lambda x: isinstance(x, QTensor) or x is None)
+
+
+def count_adapter_params(adapters: Any) -> int:
+    return sum(l.size for l in jax.tree_util.tree_leaves(adapters))
+
+
+def merge_lora(qt: QTensor, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Export path: dense W' = dequant(W) + A @ B * alpha/r."""
+    w = qt.dequantize(jnp.float32)
+    if qt.lora_a is not None:
+        r = qt.lora_a.shape[-1]
+        w = w + jnp.matmul(qt.lora_a, qt.lora_b) * (qt.lora_alpha / r)
+    return w.astype(dtype)

@@ -1,0 +1,134 @@
+"""QTensor: a quantized-weight pytree leaf-group.
+
+Holds the packed payload + blockwise scales (optionally double-quantized)
++ optional QLoRA adapters. Registered as a JAX pytree so QTensors live
+inside param trees, shard under pjit, checkpoint, and donate like plain
+arrays. The *format metadata* is static (part of treedef) so jit traces
+specialize on it — the TPU analogue of the paper's RMMEC mode-control
+signal selecting the SIMD precision mode at issue time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import Format, get_format
+from .quantize import (dequantize_blockwise, dequantize_scales,
+                       quantize_blockwise, quantize_scales)
+
+__all__ = ["QTensor", "maybe_dequantize", "tensor_nbytes"]
+
+
+@jax.tree_util.register_pytree_with_keys_class
+@dataclasses.dataclass
+class QTensor:
+    # --- dynamic children (arrays) ---
+    data: jnp.ndarray                      # packed codes
+    scales: Optional[jnp.ndarray]          # f32 block scales (None if double-quantized)
+    scales_q: Optional[jnp.ndarray]        # int8 scale codes (double quant)
+    scales_cscale: Optional[jnp.ndarray]   # f32 per-chunk scale of scales
+    scales_offset: Optional[jnp.ndarray]   # f32 per-chunk offset of scales
+    lora_a: Optional[jnp.ndarray]          # (K, r) QLoRA adapter (trainable)
+    lora_b: Optional[jnp.ndarray]          # (r, N) QLoRA adapter (trainable)
+    # --- static aux ---
+    fmt: str = "int4"
+    q_axis: int = -2
+    shape: tuple = ()                      # logical (dequantized) shape
+    scales_shape: tuple = ()               # shape of the f32 scales tensor
+    lora_alpha: float = 16.0
+
+    # -- pytree protocol ----------------------------------------------------
+    _CHILDREN = ("data", "scales", "scales_q", "scales_cscale",
+                 "scales_offset", "lora_a", "lora_b")
+
+    def tree_flatten_with_keys(self):
+        children = tuple(
+            (jax.tree_util.GetAttrKey(n), getattr(self, n))
+            for n in self._CHILDREN)
+        aux = (self.fmt, self.q_axis, self.shape, self.scales_shape, self.lora_alpha)
+        return children, aux
+
+    def tree_flatten(self):
+        aux = (self.fmt, self.q_axis, self.shape, self.scales_shape, self.lora_alpha)
+        return tuple(getattr(self, n) for n in self._CHILDREN), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        fmt, q_axis, shape, scales_shape, lora_alpha = aux
+        return cls(*children, fmt=fmt, q_axis=q_axis, shape=shape,
+                   scales_shape=scales_shape, lora_alpha=lora_alpha)
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def quantize(cls, w: jnp.ndarray, fmt: str | Format, block_size: int = 64,
+                 q_axis: int = -2, double_quant: bool = False) -> "QTensor":
+        fmt_name = fmt if isinstance(fmt, str) else fmt.name
+        codes, scales = quantize_blockwise(w, fmt_name, block_size, q_axis)
+        scales_shape = tuple(scales.shape)
+        if double_quant:
+            sq, sc, so, _ = quantize_scales(scales)
+            return cls(codes, None, sq, sc, so, None, None, fmt=fmt_name,
+                       q_axis=q_axis % w.ndim - w.ndim, shape=tuple(w.shape),
+                       scales_shape=scales_shape)
+        return cls(codes, scales, None, None, None, None, None, fmt=fmt_name,
+                   q_axis=q_axis % w.ndim - w.ndim, shape=tuple(w.shape),
+                   scales_shape=scales_shape)
+
+    # -- access ---------------------------------------------------------------
+    def block_scales(self) -> jnp.ndarray:
+        if self.scales is not None:
+            return self.scales
+        # target shape derived from the *runtime* data shape (leading layer
+        # dims may have been sliced away by lax.scan); only the q_axis dim
+        # differs from data's (nb blocks vs packed codes), and q_axis is a
+        # negative index so it survives slicing.
+        nb = self.scales_shape[self.q_axis]
+        shape = list(self.data.shape)
+        shape[self.q_axis] = nb
+        return dequantize_scales(self.scales_q, self.scales_cscale,
+                                 self.scales_offset, tuple(shape))
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jnp.ndarray:
+        w = dequantize_blockwise(self.data, self.block_scales(), self.fmt,
+                                 q_axis=self.q_axis, out_dtype=dtype)
+        return w
+
+    def with_lora(self, lora_a: jnp.ndarray, lora_b: jnp.ndarray,
+                  alpha: float = 16.0) -> "QTensor":
+        return dataclasses.replace(self, lora_a=lora_a, lora_b=lora_b,
+                                   lora_alpha=alpha)
+
+    @property
+    def format(self) -> Format:
+        return get_format(self.fmt)
+
+    def nbytes(self) -> int:
+        total = 0
+        for arr in (self.data, self.scales, self.scales_q, self.scales_cscale,
+                    self.scales_offset, self.lora_a, self.lora_b):
+            if arr is not None:
+                total += arr.size * arr.dtype.itemsize
+        return total
+
+    def __repr__(self):  # pragma: no cover
+        return (f"QTensor({self.fmt}, shape={self.shape}, "
+                f"packed={tuple(self.data.shape)}, dq={self.scales is None}, "
+                f"lora={'yes' if self.lora_a is not None else 'no'})")
+
+
+def maybe_dequantize(w: Any, dtype=jnp.bfloat16) -> jnp.ndarray:
+    """QTensor -> dense array; plain arrays pass through (cast)."""
+    if isinstance(w, QTensor):
+        return w.dequantize(dtype)
+    return w.astype(dtype)
+
+
+def tensor_nbytes(w: Any) -> int:
+    if isinstance(w, QTensor):
+        return w.nbytes()
+    return w.size * w.dtype.itemsize

@@ -1,0 +1,158 @@
+"""Blockwise absmax quantization (paper §III: BitsAndBytes-style PTQ).
+
+A tensor is quantized along one axis (``q_axis``) in contiguous blocks of
+``block_size`` values; each block shares one scale = absmax / fmt.max_code.
+Supported axes:
+
+  * ``q_axis=-2`` — weight matrices ``(..., K, N)``: blocks run along the
+    contraction dim K, so the matmul kernel dequantizes K-slabs in VMEM
+    (mirrors the paper's output-stationary systolic accumulation);
+  * ``q_axis=-1`` — embedding tables ``(V, D)`` and vectors: blocks run
+    along the feature dim so row-gathers stay cheap.
+
+Double quantization (QLoRA trick, used by the paper's 4-bit arm): the f32
+block scales are themselves quantized to int8 in chunks of 256, cutting
+scale overhead from 32/block_size to ~8.25/block_size bits per weight.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import (Format, get_format, nibble_from_signed, pack_nibbles,
+                      signed_from_nibble, unpack_nibbles)
+
+__all__ = [
+    "quantize_blockwise", "dequantize_blockwise",
+    "quantize_scales", "dequantize_scales", "effective_block_size",
+]
+
+_DQ_CHUNK = 256  # scales-of-scales chunk (bitsandbytes default)
+
+
+def effective_block_size(dim: int, block_size: int) -> int:
+    """Largest usable block size: must divide ``dim`` (fallback: whole dim)."""
+    if block_size <= 0 or dim % block_size != 0:
+        return dim
+    return block_size
+
+
+def _block_view(x: jnp.ndarray, q_axis: int, block: int) -> jnp.ndarray:
+    """Reshape so blocks get their own axis right after the split q_axis."""
+    q_axis = q_axis % x.ndim
+    dim = x.shape[q_axis]
+    shape = list(x.shape)
+    shape[q_axis:q_axis + 1] = [dim // block, block]
+    return x.reshape(shape)
+
+
+def quantize_blockwise(
+    w: jnp.ndarray,
+    fmt: Format | str,
+    block_size: int = 64,
+    q_axis: int = -2,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize ``w`` -> (codes, scales).
+
+    codes:  packed uint8 (4-bit fmts), int8 (int8), float8 (fp8 fmts)
+    scales: f32, shape = w.shape with q_axis replaced by n_blocks
+    """
+    if isinstance(fmt, str):
+        fmt = get_format(fmt)
+    if fmt.kind == "none":
+        raise ValueError(f"format {fmt.name} is a passthrough; nothing to quantize")
+    q_axis = q_axis % w.ndim
+    block = effective_block_size(w.shape[q_axis], block_size)
+    xb = _block_view(w.astype(jnp.float32), q_axis, block)   # (..., nb, B, ...)
+    absmax = jnp.max(jnp.abs(xb), axis=q_axis + 1)            # (..., nb, ...)
+    scales = (absmax / fmt.max_code).astype(jnp.float32)
+    safe = jnp.where(scales == 0, 1.0, scales)
+    xs = xb / jnp.expand_dims(safe, q_axis + 1)               # normalized block
+
+    if fmt.kind == "int":
+        q = jnp.clip(jnp.round(xs), -fmt.max_code, fmt.max_code)
+        codes = q.reshape(w.shape)
+        if fmt.bits == 4:
+            codes = pack_nibbles(nibble_from_signed(codes), axis=q_axis)
+        else:
+            codes = codes.astype(jnp.int8)
+    elif fmt.kind == "codebook":
+        cb = jnp.asarray(fmt.codebook)
+        bounds = jnp.asarray(fmt.boundaries())
+        idx = jnp.searchsorted(bounds, xs).astype(jnp.uint8)  # nearest entry
+        del cb
+        codes = pack_nibbles(idx.reshape(w.shape), axis=q_axis)
+    elif fmt.kind == "float8":
+        codes = xs.reshape(w.shape).astype(fmt.storage_dtype)
+    else:  # pragma: no cover
+        raise ValueError(fmt.kind)
+    return codes, scales
+
+
+def dequantize_blockwise(
+    codes: jnp.ndarray,
+    scales: jnp.ndarray,
+    fmt: Format | str,
+    q_axis: int = -2,
+    out_dtype: jnp.dtype = jnp.bfloat16,
+) -> jnp.ndarray:
+    """Inverse of :func:`quantize_blockwise` (up to rounding error)."""
+    if isinstance(fmt, str):
+        fmt = get_format(fmt)
+    q_axis = q_axis % codes.ndim
+
+    if fmt.kind == "int" and fmt.bits == 4:
+        vals = signed_from_nibble(unpack_nibbles(codes, axis=q_axis)).astype(jnp.float32)
+    elif fmt.kind == "int":
+        vals = codes.astype(jnp.float32)
+    elif fmt.kind == "codebook":
+        idx = unpack_nibbles(codes, axis=q_axis)
+        vals = jnp.asarray(fmt.codebook)[idx]
+    elif fmt.kind == "float8":
+        vals = codes.astype(jnp.float32)
+    else:  # pragma: no cover
+        raise ValueError(fmt.kind)
+
+    dim = vals.shape[q_axis]
+    nb = scales.shape[q_axis]
+    block = dim // nb
+    vb = _block_view(vals, q_axis, block)
+    out = vb * jnp.expand_dims(scales.astype(jnp.float32), q_axis + 1)
+    return out.reshape(vals.shape).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Double quantization: int8-quantize the f32 block scales themselves.
+# Scales are positive, so we quantize (scale - mean) symmetrically per chunk.
+# ---------------------------------------------------------------------------
+
+def quantize_scales(scales: jnp.ndarray):
+    """f32 scales -> (int8 codes, f32 chunk scale, f32 offset, orig shape).
+
+    Stacked-layer scales (ndim >= 3, leading layer axis) keep that axis on
+    every output so the QTensor stays lax.scan-sliceable.
+    """
+    shape = scales.shape
+    lead = shape[0] if len(shape) >= 3 else 1
+    flat = scales.reshape(lead, -1).astype(jnp.float32)
+    n = flat.shape[1]
+    pad = (-n) % _DQ_CHUNK
+    flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    chunks = flat.reshape(lead, -1, _DQ_CHUNK)
+    offset = jnp.mean(chunks, axis=-1, keepdims=True)
+    centred = chunks - offset
+    absmax = jnp.max(jnp.abs(centred), axis=-1, keepdims=True)
+    cscale = jnp.where(absmax == 0, 1.0, absmax / 127.0)
+    codes = jnp.clip(jnp.round(centred / cscale), -127, 127).astype(jnp.int8)
+    if len(shape) < 3:   # unstacked: drop the synthetic batch dim
+        codes, cscale, offset = codes[0], cscale[0], offset[0]
+    return codes, cscale.astype(jnp.float32), offset.astype(jnp.float32), shape
+
+
+def dequantize_scales(codes, cscale, offset, shape) -> jnp.ndarray:
+    flat = codes.astype(jnp.float32) * cscale + offset
+    n = int(np.prod(shape))
+    return flat.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,5 @@
+from .synthetic import (LANG_CODES, SyntheticLM, SyntheticTranslation,
+                        make_batch, batch_iterator)
+
+__all__ = ["SyntheticTranslation", "SyntheticLM", "LANG_CODES", "make_batch",
+           "batch_iterator"]

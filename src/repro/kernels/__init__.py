@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+qmm.py         -- fused dequant-matmul (RMMEC SIMD MAC analogue)
+fasst.py       -- reconfigurable NAF + fused softmax (FASST analogue)
+decode_attn.py -- flash-decode over an int8-quantized KV cache (beyond-paper)
+ops.py         -- shape-safe jit wrappers;  ref.py -- pure-jnp oracles
+"""
+
+from . import ops, ref  # noqa: F401

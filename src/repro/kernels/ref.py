@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quantize import dequantize_blockwise
+from .fasst import _naf
+
+__all__ = ["qmm_ref", "fasst_act_ref", "fasst_softmax_ref", "decode_attn_ref",
+           "quantize_kv_ref"]
+
+
+def qmm_ref(x, packed, scales, fmt_name: str, out_dtype=jnp.float32):
+    """Dense oracle: dequantize fully in f32, then matmul."""
+    w = dequantize_blockwise(packed, scales, fmt_name, q_axis=-2,
+                             out_dtype=jnp.float32)
+    return jnp.matmul(x.astype(jnp.float32), w).astype(out_dtype)
+
+
+def fasst_act_ref(x, mode: str, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    return _naf(x.astype(jnp.float32), mode).astype(out_dtype)
+
+
+def fasst_softmax_ref(x, valid_cols: int = -1, scale: float = 1.0,
+                      out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    xf = x.astype(jnp.float32) * scale
+    if valid_cols >= 0:
+        col = jax.lax.broadcasted_iota(jnp.int32, xf.shape, xf.ndim - 1)
+        xf = jnp.where(col < valid_cols, xf, -jnp.inf)
+    return jax.nn.softmax(xf, axis=-1).astype(out_dtype)
+
+
+def quantize_kv_ref(kv: jnp.ndarray):
+    """Per-(token, head) symmetric int8 quantization of a (..., d) cache."""
+    absmax = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=-1)
+    scales = jnp.where(absmax == 0, 1.0, absmax / 127.0)
+    codes = jnp.clip(jnp.round(kv / scales[..., None]), -127, 127
+                     ).astype(jnp.int8)
+    return codes, scales.astype(jnp.float32)
+
+
+def decode_attn_ref(q, k_codes, k_scales, v_codes, v_scales, lengths,
+                    sm_scale: float, out_dtype=jnp.float32):
+    """Oracle for decode_attn_call; same (B, Hkv, G, d) layouts."""
+    k = k_codes.astype(jnp.float32) * k_scales[..., None]   # (B,Hkv,S,d)
+    v = v_codes.astype(jnp.float32) * v_scales[..., None]
+    scores = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32), k) * sm_scale
+    S = k.shape[2]
+    pos = jnp.arange(S)[None, None, None, :]
+    mask = pos < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    return jnp.einsum("bhgs,bhsd->bhgd", p, v).astype(out_dtype)

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- multi-pod dry-run driver (MUST set XLA_FLAGS before any jax import) ---
+#
+# For every (architecture x input shape x mesh) cell this lowers + compiles
+# the real step function (train_step / prefill / serve_step) against
+# ShapeDtypeStruct inputs on the production mesh, then records
+# memory_analysis / cost_analysis / collective schedule for the roofline.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+#       --shape decode_32k [--multi-pod] [--policy int4] [--out DIR]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import (ASSIGNED, SHAPES, active_param_count, get_config,  # noqa: E402
+                       input_specs, param_count, supported_shapes)
+from ..core.policy import PRESETS, quantize_tree  # noqa: E402
+from ..models import Ctx, build_model  # noqa: E402
+from ..parallel import (batch_axes, batch_shardings, cache_shardings,  # noqa: E402
+                        param_shardings, set_mesh)
+from ..train import make_train_step  # noqa: E402
+from .hlo_analysis import roofline_terms  # noqa: E402
+from .hlo_cost import analyze_hlo  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+__all__ = ["run_cell", "main"]
+
+
+def _ctx_for(shape_spec):
+    chunked = shape_spec.seq_len >= 4096 and shape_spec.kind != "decode"
+    # chunk sizes bound the per-layer f32 score tile (see EXPERIMENTS §Perf)
+    chunk = 256 if shape_spec.kind == "train" else 512
+    return Ctx(compute_dtype=jnp.bfloat16,
+               attn_impl="chunked" if chunked else "full",
+               attn_chunk=chunk)
+
+
+def _replicated(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def build_cell(cfg, shape_name: str, mesh, policy_name: str):
+    """Returns (fn, arg_shapes, in_shardings, out_shardings, donate)."""
+    sp = SHAPES[shape_name]
+    ctx = _ctx_for(sp)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    dp = batch_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    if sp.kind == "train":
+        init_state, step = make_train_step(
+            model, lr_fn=lambda s: 1e-4, remat=True, ctx=ctx,
+            state_bits=32, param_dtype=jnp.bfloat16)
+        params_shape = jax.eval_shape(model.init, key)
+        state_shape = jax.eval_shape(init_state, params_shape)
+        batch_shape = input_specs(cfg, shape_name)
+        ss = param_shardings(mesh, state_shape,
+                             expert_mode=cfg.moe.parallel_mode if cfg.moe else "expert",
+                             fsdp_scope="opt")
+        bs = batch_shardings(mesh, batch_shape)
+        metrics_shape = jax.eval_shape(step, state_shape, batch_shape)[1]
+        out_sh = (ss, _replicated(mesh, metrics_shape))
+        return (step, (state_shape, batch_shape), (ss, bs), out_sh, (0,))
+
+    policy = PRESETS[policy_name]
+    params_shape = jax.eval_shape(
+        lambda k: quantize_tree(model.init(k), policy), key)
+    ps = param_shardings(mesh, params_shape,
+                         expert_mode=cfg.moe.parallel_mode if cfg.moe else "expert")
+    B = sp.global_batch
+
+    if sp.kind == "prefill":
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(B, sp.seq_len + 8, policy.kv_cache))
+        batch_shape = input_specs(cfg, shape_name)
+        cs = cache_shardings(mesh, cache_shape)
+        bs = batch_shardings(mesh, batch_shape)
+
+        def fn(params, cache, batch):
+            cache, logits = model.prefill(ctx, params, cache, batch)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return cache, nxt
+
+        nxt_sh = NamedSharding(
+            mesh, P(dp) if dp and B % _axsize(mesh, dp) == 0 else P())
+        return (fn, (params_shape, cache_shape, batch_shape),
+                (ps, cs, bs), (cs, nxt_sh), (1,))
+
+    # decode: serve_step = one token against a full cache
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(B, sp.seq_len, policy.kv_cache))
+    tok_shape = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    cs = cache_shardings(mesh, cache_shape)
+    ts = NamedSharding(
+        mesh, P(dp) if dp and B % _axsize(mesh, dp) == 0 else P())
+
+    def fn(params, tokens, cache):
+        cache, logits = model.decode_step(ctx, params, tokens, cache)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return cache, nxt
+
+    return (fn, (params_shape, tok_shape, cache_shape),
+            (ps, ts, cs), (cs, ts), (2,))
+
+
+def _axsize(mesh, ax):
+    size = 1
+    for a in (ax if isinstance(ax, tuple) else (ax,)):
+        size *= mesh.shape[a]
+    return size
+
+
+def _model_flops(cfg, sp):
+    n_active = active_param_count(cfg)
+    n_total = param_count(cfg)
+    if sp.kind == "train":
+        return 6.0 * n_active * sp.global_batch * sp.seq_len, n_total
+    if sp.kind == "prefill":
+        return 2.0 * n_active * sp.global_batch * sp.seq_len, n_total
+    return 2.0 * n_active * sp.global_batch, n_total   # decode: 1 tok/seq
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             policy: str = "int4", out_dir: str = "experiments/dryrun",
+             save_hlo: bool = False, moe_groups: int = 0):
+    import dataclasses
+    cfg = get_config(arch)
+    if moe_groups and cfg.moe is not None:   # ablation: 1 = global dispatch
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=moe_groups))
+    sp = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    pol = policy if sp.kind != "train" else "bf16"
+
+    t0 = time.perf_counter()
+    fn, arg_shapes, in_sh, out_sh, donate = build_cell(cfg, shape_name, mesh,
+                                                       pol)
+    with set_mesh(mesh):
+        jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=donate)
+        lowered = jfn.lower(*arg_shapes)
+    t_lower = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    # --- analyses ---
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            mem[k] = getattr(ma, k, None)
+    except Exception as e:   # pragma: no cover
+        mem["error"] = repr(e)
+
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+
+    # loop-aware cost model (XLA's cost_analysis counts scan bodies ONCE —
+    # flops/bytes/collectives would be ~num_layers x under-reported)
+    hlo = compiled.as_text()
+    acc = analyze_hlo(hlo, chips)
+    flops_dev = acc["flops"]
+    bytes_dev = acc["bytes"]
+    link_bytes_dev = acc["link_bytes"]
+    by_kind = acc["coll"]
+
+    mf, n_total = _model_flops(cfg, sp)
+    terms = roofline_terms(flops_dev * chips, bytes_dev * chips,
+                           link_bytes_dev, chips, model_flops=mf)
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "chips": chips,
+        "policy": pol, "kind": sp.kind,
+        "params_total": n_total, "params_active": active_param_count(cfg),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_dev": flops_dev, "bytes_per_dev": bytes_dev,
+        "collective_link_bytes_per_dev": link_bytes_dev,
+        "xla_cost_analysis_flops_per_dev": float(cost.get("flops", 0.0)),
+        "xla_cost_analysis_bytes_per_dev": float(cost.get("bytes accessed", 0.0)),
+        "collectives": by_kind,
+        "memory_analysis": mem,
+        "roofline": terms,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_name}__{pol}"
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(record, f, indent=1)
+    if save_hlo:
+        with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    print(f"[ok] {tag}: compile {t_compile:.1f}s  "
+          f"flops/dev {flops_dev:.3e}  bytes/dev {bytes_dev:.3e}  "
+          f"link B/dev {link_bytes_dev:.3e}  dominant {terms['dominant']}")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--policy", default="int4",
+                    help="serve-cell weight policy (train cells use bf16)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--moe-groups", type=int, default=0,
+                    help="override MoE dispatch groups (1 = global dispatch)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shp in supported_shapes(get_config(arch)):
+                cells.append((arch, shp))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shp in cells:
+        try:
+            run_cell(arch, shp, multi_pod=args.multi_pod,
+                     policy=args.policy, out_dir=args.out,
+                     save_hlo=args.save_hlo, moe_groups=args.moe_groups)
+        except Exception:
+            failures.append((arch, shp))
+            print(f"[FAIL] {arch} x {shp}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cell(s) failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Compiled-HLO analysis: collective-byte accounting + roofline terms.
+
+The roofline's collective term is not in cost_analysis(): we parse the
+post-SPMD optimized HLO (compiled.as_text()) and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, converting to *per-device link bytes* with ring-
+algorithm factors. Hardware model: TPU v5e.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+__all__ = ["HW", "parse_collectives", "roofline_terms"]
+
+# TPU v5e hardware constants (assignment-specified)
+HW = {
+    "peak_flops_bf16": 197e12,     # FLOP/s per chip
+    "hbm_bw": 819e9,               # B/s per chip
+    "ici_bw": 50e9,                # B/s per link (~per direction)
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e4m3b11fnuz": 1,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    if dtype not in _DTYPE_BYTES:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(line: str) -> float:
+    """Sum of the result-side array sizes of an HLO instruction line."""
+    eq = line.find(" = ")
+    if eq < 0:
+        return 0.0
+    head = line[:line.find("(", eq) if "(" in line[eq:] else len(line)]
+    # result shapes live between '=' and the op name; op name has no '['
+    total = 0.0
+    for m in _SHAPE_RE.finditer(head[eq:]):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:   # replica_groups=[G,N] iota form: N per group
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0]
+        n = len([x for x in first.split(",") if x.strip() != ""])
+        return max(n, 1)
+    return total_devices
+
+
+def parse_collectives(hlo_text: str, total_devices: int):
+    """Returns (ops list, per_device_link_bytes).
+
+    Per-device ring-model link bytes:
+      all-gather      R*(g-1)/g          (R = gathered result, per device)
+      reduce-scatter  R*(g-1)            (R = scattered result)
+      all-reduce      2*R*(g-1)/g
+      all-to-all      R*(g-1)/g
+      collective-permute  R
+    """
+    ops = []
+    per_dev = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not any(f"{c}(" in s or f"{c}-start(" in s or f"{c}-done(" in s
+                   for c in _COLLECTIVES):
+            continue
+        if "-done(" in s:           # bytes counted at -start
+            continue
+        kind = next(c for c in _COLLECTIVES if f"{c}(" in s or f"{c}-start(" in s)
+        r = _result_bytes(s)
+        if r == 0:
+            continue
+        g = _group_size(s, total_devices)
+        if kind == "all-gather":
+            b = r * (g - 1) / g
+        elif kind == "reduce-scatter":
+            b = r * (g - 1)
+        elif kind == "all-reduce":
+            b = 2 * r * (g - 1) / g
+        elif kind == "all-to-all":
+            b = r * (g - 1) / g
+        else:
+            b = r
+        ops.append({"kind": kind, "result_bytes": r, "group": g,
+                    "link_bytes": b})
+        per_dev += b
+    return ops, per_dev
+
+
+def roofline_terms(flops_total: float, hbm_bytes_total: float,
+                   collective_link_bytes_per_dev: float, chips: int,
+                   *, model_flops: Optional[float] = None):
+    """The three roofline terms in seconds (assignment formulas).
+
+    cost_analysis flops/bytes on post-SPMD HLO are *per device*; the
+    assignment formulas divide totals by chips, so totals = per_dev*chips.
+    """
+    compute_t = flops_total / (chips * HW["peak_flops_bf16"])
+    memory_t = hbm_bytes_total / (chips * HW["hbm_bw"])
+    coll_t = (collective_link_bytes_per_dev * chips) / (chips * HW["ici_bw"])
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": coll_t}
+    dom = max(terms, key=terms.get)
+    out = dict(terms, dominant=dom,
+               bound_s=max(compute_t, memory_t, coll_t))
+    if model_flops is not None and flops_total > 0:
+        out["model_flops"] = model_flops
+        out["useful_flop_frac"] = model_flops / flops_total
+    return out

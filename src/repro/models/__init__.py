@@ -1,0 +1,6 @@
+"""Model zoo: dense / MoE / SSM / hybrid / VLM / enc-dec families."""
+
+from .api import ModelAPI, build_model
+from .layers import Ctx
+
+__all__ = ["ModelAPI", "build_model", "Ctx"]

@@ -1,0 +1,104 @@
+"""Unified model facade: one callable surface per architecture family.
+
+build_model(cfg) -> ModelAPI with
+  init(key)                         -> params
+  forward(ctx, params, batch, ...)  -> (logits, aux_loss)
+  init_cache(batch, max_len, kv)    -> serving cache
+  prefill(ctx, params, cache, batch)-> (cache, logits)
+  decode_step(ctx, params, tok, c)  -> (cache, logits)
+
+Batches are dicts:
+  LM families:   {"tokens" (B,S)}  [+ "img_embeds" (B,P,d) for vlm]
+  enc-dec:       {"tgt_in" (B,Sd)} + {"src_tokens" (B,Se) | "frames" (B,F,d)}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax.numpy as jnp
+
+from . import encdec as ed
+from . import hybrid as hy
+from . import transformer as tf
+
+__all__ = ["ModelAPI", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: Any
+    init: Callable
+    forward: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+def build_model(cfg) -> ModelAPI:
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "ssm", "vlm"):
+        def forward(ctx, params, batch, remat=False):
+            logits, aux, _ = tf.lm_forward(
+                ctx, params, cfg, batch["tokens"],
+                img_embeds=batch.get("img_embeds"), remat=remat)
+            return logits, aux
+
+        def init_cache(batch_size, max_len, kv_dtype="bf16"):
+            return tf.lm_init_cache(cfg, batch_size, max_len, kv_dtype)
+
+        def prefill(ctx, params, cache, batch):
+            return tf.lm_prefill(ctx, params, cfg, batch["tokens"], cache,
+                                 lengths=batch.get("lengths"),
+                                 img_embeds=batch.get("img_embeds"))
+
+        def decode_step(ctx, params, tokens, cache):
+            return tf.lm_decode_step(ctx, params, cfg, tokens, cache)
+
+        return ModelAPI(cfg, lambda key: tf.lm_init(key, cfg), forward,
+                        init_cache, prefill, decode_step)
+
+    if fam == "hybrid":
+        def forward(ctx, params, batch, remat=False):
+            return hy.hybrid_forward(ctx, params, cfg, batch["tokens"],
+                                     remat=remat)
+
+        def init_cache(batch_size, max_len, kv_dtype="bf16"):
+            return hy.hybrid_init_cache(cfg, batch_size, max_len, kv_dtype)
+
+        def prefill(ctx, params, cache, batch):
+            return hy.hybrid_prefill(ctx, params, cfg, batch["tokens"], cache,
+                                     lengths=batch.get("lengths"))
+
+        def decode_step(ctx, params, tokens, cache):
+            return hy.hybrid_decode_step(ctx, params, cfg, tokens, cache)
+
+        return ModelAPI(cfg, lambda key: hy.hybrid_init(key, cfg), forward,
+                        init_cache, prefill, decode_step)
+
+    if fam in ("encdec", "audio"):
+        def forward(ctx, params, batch, remat=False):
+            return ed.encdec_forward(ctx, params, cfg, batch["tgt_in"],
+                                     src_tokens=batch.get("src_tokens"),
+                                     frames=batch.get("frames"), remat=remat)
+
+        def init_cache(batch_size, max_len, kv_dtype="bf16"):
+            return ed.encdec_init_cache(cfg, batch_size, max_len,
+                                        cfg.enc_len, kv_dtype)
+
+        def prefill(ctx, params, cache, batch):
+            return ed.encdec_prefill(ctx, params, cfg, cache,
+                                     batch["tgt_in"],
+                                     src_tokens=batch.get("src_tokens"),
+                                     frames=batch.get("frames"),
+                                     lengths=batch.get("lengths"))
+
+        def decode_step(ctx, params, tokens, cache):
+            return ed.encdec_decode_step(ctx, params, cfg, tokens, cache)
+
+        return ModelAPI(cfg, lambda key: ed.encdec_init(key, cfg), forward,
+                        init_cache, prefill, decode_step)
+
+    raise ValueError(f"unknown family {fam!r}")

@@ -1,0 +1,347 @@
+"""Encoder-decoder transformer: NLLB-600M (the paper's model) + whisper.
+
+Paper §II-A: distilled NLLB-200 600M — pre-norm residual encoder/decoder
+stacks, multi-head attention, two-layer FFNs, per-language tokenizers,
+many-to-many translation driven by target-language code tokens; the MoE
+variant (Fig. 3b) swaps the FFN for top-k experts. Whisper-base reuses the
+same skeleton with a stub conv frontend (input_specs feeds precomputed
+frame embeddings) and cross-attention from the decoder.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.qlinear import embed_lookup
+from ..core.qtensor import maybe_dequantize
+from ..parallel import hint, hint_pick
+from . import moe as moe_mod
+from .layers import (Ctx, attention_init, attn_apply, decode_attn_apply,
+                     mlp, mlp_init, rms_norm)
+from .transformer import (_dense_kv, _fp8_token_kv, _quantize_token_kv,
+                          _scatter_tokens)
+
+__all__ = ["encdec_init", "encdec_encode", "encdec_forward",
+           "encdec_init_cache", "encdec_prefill", "encdec_decode_step"]
+
+
+def _enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn": attention_init(k1, cfg.d_model, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.head_dim),
+        "norm1_scale": jnp.ones((cfg.d_model,), jnp.float32),
+        "norm2_scale": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.moe is not None:   # paper Fig. 3b: MoE encoder variant
+        p["moe"] = moe_mod.moe_init(k2, cfg.d_model, cfg.d_ff,
+                                    cfg.moe.num_experts, cfg.mlp_act)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act)
+    return p
+
+
+def _dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "attn": attention_init(k1, cfg.d_model, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.head_dim),
+        "cross": attention_init(k2, cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.head_dim),
+        "norm1_scale": jnp.ones((cfg.d_model,), jnp.float32),
+        "norm2_scale": jnp.ones((cfg.d_model,), jnp.float32),
+        "norm3_scale": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.moe_init(k3, cfg.d_model, cfg.d_ff,
+                                    cfg.moe.num_experts, cfg.mlp_act)
+    else:
+        p["mlp"] = mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.mlp_act)
+    return p
+
+
+def encdec_init(key, cfg):
+    ke, k1, k2, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k1, cfg.enc_layers)
+    dec_keys = jax.random.split(k2, cfg.num_layers)
+    params = {
+        "embedding": jax.random.normal(
+            ke, (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02,
+        "encoder": {
+            "layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+            "norm_f_scale": jnp.ones((cfg.d_model,), jnp.float32)},
+        "decoder": {
+            "layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+            "norm_f_scale": jnp.ones((cfg.d_model,), jnp.float32)},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            kh, (cfg.d_model, cfg.vocab_size), jnp.float32) * cfg.d_model ** -0.5
+    return params
+
+
+def encdec_encode(ctx: Ctx, params, cfg, src_tokens=None, frames=None,
+                  remat: bool = False):
+    """Bidirectional encoder. src_tokens (B,Se) or frames (B,F,d) (audio)."""
+    if frames is not None:
+        x = frames.astype(ctx.compute_dtype)          # stub conv frontend
+    else:
+        x = embed_lookup(params["embedding"], src_tokens, ctx.compute_dtype)
+    x = hint(x, "batch", None, None)
+    B, Se, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["norm1_scale"], cfg.norm_eps)
+        y, _ = attn_apply(ctx, lp["attn"], h, positions,
+                          num_heads=cfg.num_heads,
+                          num_kv_heads=cfg.num_kv_heads,
+                          head_dim=cfg.head_dim, causal=False, window=0,
+                          rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+        x = x + y
+        h = rms_norm(x, lp["norm2_scale"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = moe_mod.moe_apply(ctx, lp["moe"], h, top_k=cfg.moe.top_k,
+                                     capacity_factor=cfg.moe.capacity_factor,
+                                     act=cfg.mlp_act,
+                                     parallel_mode=cfg.moe.parallel_mode,
+                                     dispatch_groups=cfg.moe.dispatch_groups)
+        else:
+            y = mlp(ctx, lp["mlp"], h, cfg.mlp_act)
+        x = x + y
+        return hint_pick(x, ("batch", "model", None),
+                         ("batch", None, None)), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["encoder"]["layers"])
+    return rms_norm(x, params["encoder"]["norm_f_scale"], cfg.norm_eps)
+
+
+def _dec_layer(ctx, cfg, lp, x, positions, enc_kv, collect_kv):
+    """enc_kv = (k, v, enc_positions) precomputed cross K/V."""
+    h = rms_norm(x, lp["norm1_scale"], cfg.norm_eps)
+    y, kv = attn_apply(ctx, lp["attn"], h, positions,
+                       num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                       head_dim=cfg.head_dim, causal=True, window=0,
+                       rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+    x = x + y
+    h = rms_norm(x, lp["norm2_scale"], cfg.norm_eps)
+    y, _ = attn_apply(ctx, lp["cross"], h, positions,
+                      num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                      head_dim=cfg.head_dim, causal=False, window=0,
+                      kv_override=enc_kv, use_rope=False,
+                      norm_eps=cfg.norm_eps)
+    x = x + y
+    h = rms_norm(x, lp["norm3_scale"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = moe_mod.moe_apply(ctx, lp["moe"], h, top_k=cfg.moe.top_k,
+                                   capacity_factor=cfg.moe.capacity_factor,
+                                   act=cfg.mlp_act,
+                                   parallel_mode=cfg.moe.parallel_mode,
+                                     dispatch_groups=cfg.moe.dispatch_groups)
+    else:
+        y, aux = mlp(ctx, lp["mlp"], h, cfg.mlp_act), jnp.zeros((), jnp.float32)
+    return hint_pick(x + y, ("batch", "model", None),
+                     ("batch", None, None)), aux, kv
+
+
+def _cross_kv(ctx, lp, cfg, enc_out):
+    """Per-layer cross-attention K/V from encoder output."""
+    B, Se, _ = enc_out.shape
+    k = ctx.dot(enc_out, lp["cross"]["wk"]).reshape(
+        B, Se, cfg.num_kv_heads, cfg.head_dim)
+    v = ctx.dot(enc_out, lp["cross"]["wv"]).reshape(
+        B, Se, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def _head(ctx, params, cfg, x):
+    if cfg.tie_embeddings:
+        w = maybe_dequantize(params["embedding"], ctx.compute_dtype)
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(ctx.compute_dtype), w)
+    else:
+        logits = ctx.dot(x, params["lm_head"])
+    return hint_pick(logits.astype(jnp.float32),
+                     ("batch", "model", None), ("batch", None, "model"))
+
+
+def encdec_forward(ctx: Ctx, params, cfg, tgt_tokens, src_tokens=None,
+                   frames=None, remat: bool = False):
+    """Teacher-forced decoder pass. Returns (logits, aux_loss)."""
+    enc_out = encdec_encode(ctx, params, cfg, src_tokens, frames, remat)
+    B, Sd = tgt_tokens.shape
+    Se = enc_out.shape[1]
+    x = embed_lookup(params["embedding"], tgt_tokens, ctx.compute_dtype)
+    x = hint(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(Sd, dtype=jnp.int32), (B, Sd))
+    enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+    def body(carry, lp):
+        x, aux = carry
+        k, v = _cross_kv(ctx, lp, cfg, enc_out)
+        x, aux_l, _ = _dec_layer(ctx, cfg, lp, x, positions,
+                                 (k, v, enc_pos), False)
+        return (x, aux + aux_l), None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["decoder"]["layers"])
+    x = rms_norm(x, params["decoder"]["norm_f_scale"], cfg.norm_eps)
+    return _head(ctx, params, cfg, x), aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def encdec_init_cache(cfg, batch: int, max_len: int, enc_len: int,
+                      kv_dtype: str = "bf16"):
+    L, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    cache = {
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    if kv_dtype == "int8":
+        # the paper's quantization applied to BOTH self and cross caches
+        # (SS Perf iteration on the whisper decode cell: the static cross
+        # cache is read every step and dominated decode bytes)
+        cache.update(
+            k_codes=jnp.zeros((L, batch, max_len, Hkv, hd), jnp.int8),
+            k_scales=jnp.zeros((L, batch, max_len, Hkv), jnp.float32),
+            v_codes=jnp.zeros((L, batch, max_len, Hkv, hd), jnp.int8),
+            v_scales=jnp.zeros((L, batch, max_len, Hkv), jnp.float32),
+            cross_k_codes=jnp.zeros((L, batch, enc_len, Hkv, hd), jnp.int8),
+            cross_k_scales=jnp.zeros((L, batch, enc_len, Hkv), jnp.float32),
+            cross_v_codes=jnp.zeros((L, batch, enc_len, Hkv, hd), jnp.int8),
+            cross_v_scales=jnp.zeros((L, batch, enc_len, Hkv), jnp.float32))
+        return cache
+    dt = jnp.float32 if kv_dtype == "f32" else jnp.bfloat16
+    cache.update(
+        cross_k=jnp.zeros((L, batch, enc_len, Hkv, hd), dt),
+        cross_v=jnp.zeros((L, batch, enc_len, Hkv, hd), dt),
+        k=jnp.zeros((L, batch, max_len, Hkv, hd), dt),
+        v=jnp.zeros((L, batch, max_len, Hkv, hd), dt))
+    return cache
+
+
+def encdec_prefill(ctx: Ctx, params, cfg, cache, tgt_tokens, src_tokens=None,
+                   frames=None, lengths=None):
+    """Encode source, run decoder prompt, fill self+cross caches."""
+    enc_out = encdec_encode(ctx, params, cfg, src_tokens, frames)
+    B, Sd = tgt_tokens.shape
+    Se = enc_out.shape[1]
+    x = embed_lookup(params["embedding"], tgt_tokens, ctx.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(Sd, dtype=jnp.int32), (B, Sd))
+    enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+    def body(carry, lp):
+        x, = carry
+        ck, cv = _cross_kv(ctx, lp, cfg, enc_out)
+        x, _, kv = _dec_layer(ctx, cfg, lp, x, positions,
+                              (ck, cv, enc_pos), True)
+        return (x,), (kv[0], kv[1], ck, cv)
+
+    (x,), (ks, vs, cks, cvs) = jax.lax.scan(
+        body, (x,), params["decoder"]["layers"])
+    x = rms_norm(x, params["decoder"]["norm_f_scale"], cfg.norm_eps)
+    logits = _head(ctx, params, cfg, x)
+
+    lens = lengths if lengths is not None else jnp.full((B,), Sd, jnp.int32)
+    new_cache = dict(cache)
+    if "k_codes" in cache:
+        kc, ksc = _quantize_token_kv(ks)
+        vc, vsc = _quantize_token_kv(vs)
+        new_cache["k_codes"] = cache["k_codes"].at[:, :, :Sd].set(kc)
+        new_cache["k_scales"] = cache["k_scales"].at[:, :, :Sd].set(ksc)
+        new_cache["v_codes"] = cache["v_codes"].at[:, :, :Sd].set(vc)
+        new_cache["v_scales"] = cache["v_scales"].at[:, :, :Sd].set(vsc)
+        ckc, cksc = _quantize_token_kv(cks)
+        cvc, cvsc = _quantize_token_kv(cvs)
+        new_cache["cross_k_codes"], new_cache["cross_k_scales"] = ckc, cksc
+        new_cache["cross_v_codes"], new_cache["cross_v_scales"] = cvc, cvsc
+    else:
+        new_cache["cross_k"] = cks.astype(cache["cross_k"].dtype)
+        new_cache["cross_v"] = cvs.astype(cache["cross_v"].dtype)
+        new_cache["k"] = cache["k"].at[:, :, :Sd].set(ks.astype(cache["k"].dtype))
+        new_cache["v"] = cache["v"].at[:, :, :Sd].set(vs.astype(cache["v"].dtype))
+    pos = jnp.where(positions < lens[:, None], positions, -1)
+    new_cache["pos"] = cache["pos"].at[:, :Sd].set(pos)
+    new_cache["len"] = lens
+    return new_cache, logits
+
+
+def encdec_decode_step(ctx: Ctx, params, cfg, tokens, cache):
+    """One decoder token against self + cross caches. tokens (B,1)."""
+    B = tokens.shape[0]
+    positions = cache["len"][:, None]
+    x = embed_lookup(params["embedding"], tokens, ctx.compute_dtype)
+    quant = "k_codes" in cache
+    Se = (cache["cross_k_codes"] if quant else cache["cross_k"]).shape[2]
+    enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+
+    if quant:
+        xs = (params["decoder"]["layers"], cache["k_codes"], cache["k_scales"],
+              cache["v_codes"], cache["v_scales"], cache["cross_k_codes"],
+              cache["cross_k_scales"], cache["cross_v_codes"],
+              cache["cross_v_scales"])
+    else:
+        xs = (params["decoder"]["layers"], cache["k"], cache["v"],
+              cache["cross_k"], cache["cross_v"])
+
+    def body(x, layer_xs):
+        if quant:
+            lp, kc, ksc, vc, vsc, ckc, cksc, cvc, cvsc = layer_xs
+            k_dense, v_dense = _dense_kv(kc, ksc), _dense_kv(vc, vsc)
+            ck, cv = _dense_kv(ckc, cksc), _dense_kv(cvc, cvsc)
+        else:
+            lp, k_dense, v_dense, ck, cv = layer_xs
+            kc, vc, ksc, vsc = k_dense, v_dense, None, None
+        h = rms_norm(x, lp["norm1_scale"], cfg.norm_eps)
+        y, k_new, v_new = decode_attn_apply(
+            ctx, lp["attn"], h, positions, k_dense, v_dense, cache["pos"],
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, window=0, rope_theta=cfg.rope_theta,
+            norm_eps=cfg.norm_eps)
+        x = x + y
+        h = rms_norm(x, lp["norm2_scale"], cfg.norm_eps)
+        y, _ = attn_apply(ctx, lp["cross"], h, positions,
+                          num_heads=cfg.num_heads,
+                          num_kv_heads=cfg.num_kv_heads,
+                          head_dim=cfg.head_dim, causal=False, window=0,
+                          kv_override=(ck, cv, enc_pos), use_rope=False,
+                          norm_eps=cfg.norm_eps)
+        x = x + y
+        h = rms_norm(x, lp["norm3_scale"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = moe_mod.moe_apply(ctx, lp["moe"], h, top_k=cfg.moe.top_k,
+                                     capacity_factor=cfg.moe.capacity_factor,
+                                     act=cfg.mlp_act,
+                                     parallel_mode=cfg.moe.parallel_mode,
+                                     dropless=True,
+                                     dispatch_groups=cfg.moe.dispatch_groups)
+        else:
+            y = mlp(ctx, lp["mlp"], h, cfg.mlp_act)
+        x = x + y
+        if quant:
+            nkc, nks = _quantize_token_kv(k_new)
+            nvc, nvs = _quantize_token_kv(v_new)
+            return x, (_scatter_tokens(kc, nkc, cache["len"]),
+                       _scatter_tokens(ksc, nks, cache["len"]),
+                       _scatter_tokens(vc, nvc, cache["len"]),
+                       _scatter_tokens(vsc, nvs, cache["len"]))
+        return x, (_scatter_tokens(kc, k_new, cache["len"]),
+                   _scatter_tokens(vc, v_new, cache["len"]))
+
+    x, new_kv = jax.lax.scan(body, x, xs)
+    x = rms_norm(x, params["decoder"]["norm_f_scale"], cfg.norm_eps)
+    logits = _head(ctx, params, cfg, x)
+    new_cache = dict(cache)
+    if quant:
+        (new_cache["k_codes"], new_cache["k_scales"],
+         new_cache["v_codes"], new_cache["v_scales"]) = new_kv
+    else:
+        new_cache["k"], new_cache["v"] = new_kv
+    new_cache["pos"] = _scatter_tokens(cache["pos"], positions, cache["len"])
+    new_cache["len"] = cache["len"] + 1
+    return new_cache, logits

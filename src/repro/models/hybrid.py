@@ -1,0 +1,290 @@
+"""Griffin-style hybrid LM (recurrentgemma-9b): RG-LRU + local attention.
+
+Layer pattern is 2 recurrent : 1 local-attention (arXiv:2402.19427). The
+38-layer stack runs as a scan over 12 uniform super-blocks of
+(rglru, rglru, attn) plus a scanned 2-layer recurrent tail — compile-time
+O(1) in depth while keeping the heterogeneous pattern.
+
+Decode state is O(1) per recurrent layer (conv + h) and the attention
+layers use a *rolling* KV buffer of window size W (2048): slot = pos % W,
+with absolute positions stored so the window mask self-invalidates stale
+slots. This is what makes long_500k feasible (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.qlinear import embed_lookup
+from ..core.qtensor import maybe_dequantize
+from ..parallel import hint, hint_pick
+from .layers import (Ctx, attention_init, attn_apply, decode_attn_apply,
+                     mlp, mlp_init, rms_norm)
+from .rglru import (rglru_apply, rglru_decode_step, rglru_init,
+                    rglru_init_state)
+
+__all__ = ["hybrid_init", "hybrid_forward", "hybrid_init_cache",
+           "hybrid_prefill", "hybrid_decode_step", "hybrid_layout"]
+
+
+def hybrid_layout(cfg):
+    """(#super-blocks, #tail recurrent layers) for the 2:1 pattern."""
+    n_super = cfg.num_layers // 3
+    tail = cfg.num_layers - 3 * n_super
+    return n_super, tail
+
+
+def _mixer_block_init(key, cfg, kind: str):
+    k1, k2 = jax.random.split(key)
+    p = {"norm_t_scale": jnp.ones((cfg.d_model,), jnp.float32),
+         "norm_m_scale": jnp.ones((cfg.d_model,), jnp.float32),
+         "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act)}
+    if kind == "rglru":
+        p["rglru"] = rglru_init(k1, cfg.d_model, cfg.d_rec)
+    else:
+        p["attn"] = attention_init(k1, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim)
+    return p
+
+
+def hybrid_init(key, cfg):
+    n_super, tail = hybrid_layout(cfg)
+    ke, kb, kt, kh = jax.random.split(key, 4)
+
+    def super_init(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"r1": _mixer_block_init(k1, cfg, "rglru"),
+                "r2": _mixer_block_init(k2, cfg, "rglru"),
+                "at": _mixer_block_init(k3, cfg, "attn")}
+
+    params = {
+        "embedding": jax.random.normal(
+            ke, (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02,
+        "blocks": jax.vmap(super_init)(jax.random.split(kb, n_super)),
+        "norm_f_scale": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if tail:
+        params["tail"] = jax.vmap(
+            lambda k: _mixer_block_init(k, cfg, "rglru")
+        )(jax.random.split(kt, tail))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            kh, (cfg.d_model, cfg.vocab_size), jnp.float32) * cfg.d_model ** -0.5
+    return params
+
+
+def _residual_mixer(ctx, cfg, bp, x, positions, kind: str, state=None,
+                    collect=False):
+    """One (mixer + MLP) residual pair. Returns (x, new_state_or_kv)."""
+    h = rms_norm(x, bp["norm_t_scale"], cfg.norm_eps)
+    out_state = None
+    if kind == "rglru":
+        if state is not None or collect:
+            y, out_state = rglru_apply(ctx, bp["rglru"], h, state,
+                                       return_state=True)
+        else:
+            y = rglru_apply(ctx, bp["rglru"], h)
+    else:
+        y, kv = attn_apply(ctx, bp["attn"], h, positions,
+                           num_heads=cfg.num_heads,
+                           num_kv_heads=cfg.num_kv_heads,
+                           head_dim=cfg.head_dim, causal=True,
+                           window=cfg.local_window,
+                           rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+        out_state = kv
+    x = x + y
+    h = rms_norm(x, bp["norm_m_scale"], cfg.norm_eps)
+    x = x + mlp(ctx, bp["mlp"], h, cfg.mlp_act)
+    return hint_pick(x, ("batch", "model", None),
+                     ("batch", None, None)), out_state
+
+
+def _head(ctx, params, cfg, x):
+    x = rms_norm(x, params["norm_f_scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = maybe_dequantize(params["embedding"], ctx.compute_dtype)
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(ctx.compute_dtype), w)
+    else:
+        logits = ctx.dot(x, params["lm_head"])
+    return hint_pick(logits.astype(jnp.float32),
+                     ("batch", "model", None), ("batch", None, "model"))
+
+
+def hybrid_forward(ctx: Ctx, params, cfg, tokens, remat: bool = False):
+    """Full-sequence forward. Returns (logits, aux=0)."""
+    B, S = tokens.shape
+    x = embed_lookup(params["embedding"], tokens, ctx.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, ctx.compute_dtype)
+    x = hint(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, bp):
+        x, _ = _residual_mixer(ctx, cfg, bp["r1"], x, positions, "rglru")
+        x, _ = _residual_mixer(ctx, cfg, bp["r2"], x, positions, "rglru")
+        x, _ = _residual_mixer(ctx, cfg, bp["at"], x, positions, "attn")
+        return x, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+    if "tail" in params:
+        def tail_body(x, bp):
+            x, _ = _residual_mixer(ctx, cfg, bp, x, positions, "rglru")
+            return x, None
+        x, _ = jax.lax.scan(jax.checkpoint(tail_body) if remat else tail_body,
+                            x, params["tail"])
+    return _head(ctx, params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving: O(1) recurrent state + rolling local-attention KV
+# ---------------------------------------------------------------------------
+
+def hybrid_init_cache(cfg, batch: int, max_len: int, kv_dtype: str = "bf16"):
+    n_super, tail = hybrid_layout(cfg)
+    W = min(cfg.local_window, max_len)
+    dr, Hkv, hd = cfg.d_rec, cfg.num_kv_heads, cfg.head_dim
+    cache = {
+        "b_conv1": jnp.zeros((n_super, batch, 3, dr), jnp.bfloat16),
+        "b_h1": jnp.zeros((n_super, batch, dr), jnp.float32),
+        "b_conv2": jnp.zeros((n_super, batch, 3, dr), jnp.bfloat16),
+        "b_h2": jnp.zeros((n_super, batch, dr), jnp.float32),
+        "b_k": jnp.zeros((n_super, batch, W, Hkv, hd), jnp.bfloat16),
+        "b_v": jnp.zeros((n_super, batch, W, Hkv, hd), jnp.bfloat16),
+        "pos_roll": jnp.full((batch, W), -1, jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    if tail:
+        cache["t_conv"] = jnp.zeros((tail, batch, 3, dr), jnp.bfloat16)
+        cache["t_h"] = jnp.zeros((tail, batch, dr), jnp.float32)
+    return cache
+
+
+def _roll_slots(S: int, W: int):
+    """Rolling-buffer fill for a prompt of length S (python-static)."""
+    if S <= W:
+        return jnp.arange(S), jnp.arange(S)          # src rows, dst slots
+    src = jnp.arange(S - W, S)
+    return src, src % W
+
+
+def hybrid_prefill(ctx: Ctx, params, cfg, tokens, cache, lengths=None):
+    B, S = tokens.shape
+    W = cache["b_k"].shape[2]
+    x = embed_lookup(params["embedding"], tokens, ctx.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, ctx.compute_dtype)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    src, dst = _roll_slots(S, W)
+
+    def body(x, xs):
+        bp, c1, h1, c2, h2 = xs
+        x, st1 = _residual_mixer(ctx, cfg, bp["r1"], x, positions, "rglru",
+                                 state=(c1, h1))
+        x, st2 = _residual_mixer(ctx, cfg, bp["r2"], x, positions, "rglru",
+                                 state=(c2, h2))
+        x, kv = _residual_mixer(ctx, cfg, bp["at"], x, positions, "attn",
+                                collect=True)
+        k, v = kv
+        k_roll = jnp.zeros((B, W) + k.shape[2:], jnp.bfloat16
+                           ).at[:, dst].set(k[:, src].astype(jnp.bfloat16))
+        v_roll = jnp.zeros((B, W) + v.shape[2:], jnp.bfloat16
+                           ).at[:, dst].set(v[:, src].astype(jnp.bfloat16))
+        return x, (st1[0].astype(jnp.bfloat16), st1[1],
+                   st2[0].astype(jnp.bfloat16), st2[1], k_roll, v_roll)
+
+    x, (c1, h1, c2, h2, kr, vr) = jax.lax.scan(
+        body, x, (params["blocks"], cache["b_conv1"], cache["b_h1"],
+                  cache["b_conv2"], cache["b_h2"]))
+    new_cache = dict(cache, b_conv1=c1, b_h1=h1, b_conv2=c2, b_h2=h2,
+                     b_k=kr, b_v=vr)
+    if "tail" in params:
+        def tail_body(x, xs):
+            bp, c, h = xs
+            x, st = _residual_mixer(ctx, cfg, bp, x, positions, "rglru",
+                                    state=(c, h))
+            return x, (st[0].astype(jnp.bfloat16), st[1])
+        x, (tc, th) = jax.lax.scan(tail_body, x,
+                                   (params["tail"], cache["t_conv"],
+                                    cache["t_h"]))
+        new_cache["t_conv"], new_cache["t_h"] = tc, th
+
+    logits = _head(ctx, params, cfg, x)
+    lens = lengths if lengths is not None else jnp.full((B,), S, jnp.int32)
+    pos_roll = jnp.full((B, W), -1, jnp.int32).at[:, dst].set(
+        jnp.broadcast_to(src, (B, src.shape[0])).astype(jnp.int32))
+    new_cache["pos_roll"] = pos_roll
+    new_cache["len"] = lens
+    return new_cache, logits
+
+
+def hybrid_decode_step(ctx: Ctx, params, cfg, tokens, cache):
+    B = tokens.shape[0]
+    W = cache["b_k"].shape[2]
+    positions = cache["len"][:, None]
+    slot = cache["len"] % W
+    x = embed_lookup(params["embedding"], tokens, ctx.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, ctx.compute_dtype)
+
+    def upd(c, t, i):
+        return jax.lax.dynamic_update_slice(
+            c, t.astype(c.dtype), (i,) + (0,) * (c.ndim - 1))
+
+    def body(x, xs):
+        bp, c1, h1, c2, h2, kc, vc = xs
+
+        h = rms_norm(x, bp["r1"]["norm_t_scale"], cfg.norm_eps)
+        y, st1 = rglru_decode_step(ctx, bp["r1"]["rglru"], h, (c1, h1))
+        x = x + y
+        h = rms_norm(x, bp["r1"]["norm_m_scale"], cfg.norm_eps)
+        x = x + mlp(ctx, bp["r1"]["mlp"], h, cfg.mlp_act)
+
+        h = rms_norm(x, bp["r2"]["norm_t_scale"], cfg.norm_eps)
+        y, st2 = rglru_decode_step(ctx, bp["r2"]["rglru"], h, (c2, h2))
+        x = x + y
+        h = rms_norm(x, bp["r2"]["norm_m_scale"], cfg.norm_eps)
+        x = x + mlp(ctx, bp["r2"]["mlp"], h, cfg.mlp_act)
+
+        h = rms_norm(x, bp["at"]["norm_t_scale"], cfg.norm_eps)
+        y, k_new, v_new = decode_attn_apply(
+            ctx, bp["at"]["attn"], h, positions, kc, vc, cache["pos_roll"],
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, window=cfg.local_window,
+            rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+        x = x + y
+        h = rms_norm(x, bp["at"]["norm_m_scale"], cfg.norm_eps)
+        x = x + mlp(ctx, bp["at"]["mlp"], h, cfg.mlp_act)
+
+        kc = jax.vmap(upd)(kc, k_new, slot)
+        vc = jax.vmap(upd)(vc, v_new, slot)
+        return x, (st1[0].astype(jnp.bfloat16), st1[1],
+                   st2[0].astype(jnp.bfloat16), st2[1], kc, vc)
+
+    x, (c1, h1, c2, h2, kr, vr) = jax.lax.scan(
+        body, x, (params["blocks"], cache["b_conv1"], cache["b_h1"],
+                  cache["b_conv2"], cache["b_h2"], cache["b_k"],
+                  cache["b_v"]))
+    new_cache = dict(cache, b_conv1=c1, b_h1=h1, b_conv2=c2, b_h2=h2,
+                     b_k=kr, b_v=vr)
+    if "tail" in params:
+        def tail_body(x, xs):
+            bp, c, h = xs
+            hh = rms_norm(x, bp["norm_t_scale"], cfg.norm_eps)
+            y, st = rglru_decode_step(ctx, bp["rglru"], hh, (c, h))
+            x2 = x + y
+            hh = rms_norm(x2, bp["norm_m_scale"], cfg.norm_eps)
+            x2 = x2 + mlp(ctx, bp["mlp"], hh, cfg.mlp_act)
+            return x2, (st[0].astype(jnp.bfloat16), st[1])
+        x, (tc, th) = jax.lax.scan(tail_body, x,
+                                   (params["tail"], cache["t_conv"],
+                                    cache["t_h"]))
+        new_cache["t_conv"], new_cache["t_h"] = tc, th
+
+    logits = _head(ctx, params, cfg, x)
+    new_cache["pos_roll"] = jax.vmap(
+        lambda c, t, i: jax.lax.dynamic_update_slice(c, t, (i,))
+    )(cache["pos_roll"], positions, slot)
+    new_cache["len"] = cache["len"] + 1
+    return new_cache, logits

@@ -1,0 +1,298 @@
+"""Shared neural layers (functional, quantization-aware).
+
+Every matmul routes through core.qlinear.qmatmul so any layer deploys at
+any PrecisionPolicy format. Activation functions come from the FASST NAF
+datapath (kernels.fasst._naf) — a single source of truth shared by the
+Pallas kernel and the differentiable model path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.qlinear import qmatmul
+from ..kernels.fasst import _naf
+from ..parallel import hint, hint_pick
+
+__all__ = ["Ctx", "rms_norm", "layer_norm", "rope", "linear", "mlp",
+           "mlp_init", "attention", "attention_init", "attn_apply",
+           "decode_attn_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Per-call execution context threaded through model code."""
+    compute_dtype: Any = jnp.bfloat16
+    act_fmt: str = "bf16"          # matmul activation format (bf16 | int8)
+    attn_impl: str = "full"        # full | chunked
+    attn_chunk: int = 1024
+    use_fasst_kernel: bool = False # route NAFs through the Pallas kernel
+    matmul_impl: str = "xla"       # xla | pallas (quantized weights)
+
+    def dot(self, x, w):
+        return qmatmul(x, w, act=self.act_fmt, compute_dtype=self.compute_dtype,
+                       impl=self.matmul_impl)
+
+    def naf(self, x, mode):
+        if self.use_fasst_kernel:
+            from ..kernels import ops as kops
+            return kops.fasst(x, mode)
+        return _naf(x.astype(jnp.float32), mode).astype(x.dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# -- rotary position embedding ------------------------------------------------
+
+def rope(x, positions, theta: float = 1e4):
+    """x (..., S, H, hd), positions (..., S) -> rotated x (pairs convention)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) *
+                    (jnp.log(theta) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def linear(ctx: Ctx, x, w, b=None):
+    y = ctx.dot(x, w)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# -- MLP ----------------------------------------------------------------------
+
+GLU_ACTS = {"silu_glu": "silu", "gelu_glu": "gelu", "relu_glu": "relu"}
+PLAIN_ACTS = {"squared_relu": "squared_relu", "gelu": "gelu", "relu": "relu",
+              "silu": "silu"}
+
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    if act in GLU_ACTS:
+        return {"w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+                "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s_in,
+                "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * s_out}
+    return {"w_in": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+            "w_out": jax.random.normal(k2, (d_ff, d_model), dtype) * s_out}
+
+
+def mlp(ctx: Ctx, params, x, act: str):
+    if act in GLU_ACTS:
+        h = ctx.naf(ctx.dot(x, params["w_gate"]), GLU_ACTS[act])
+        h = h * ctx.dot(x, params["w_up"])
+        h = hint(h, None, None, "model")
+        return ctx.dot(h, params["w_down"])
+    h = ctx.naf(ctx.dot(x, params["w_in"]), PLAIN_ACTS[act])
+    h = hint(h, None, None, "model")
+    return ctx.dot(h, params["w_out"])
+
+
+# -- attention ----------------------------------------------------------------
+
+def attention_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, qkv_bias: bool = False, qk_norm: bool = False,
+                   dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {"wq": jax.random.normal(ks[0], (d_model, num_heads * head_dim), dtype) * s,
+         "wk": jax.random.normal(ks[1], (d_model, num_kv_heads * head_dim), dtype) * s,
+         "wv": jax.random.normal(ks[2], (d_model, num_kv_heads * head_dim), dtype) * s,
+         "wo": jax.random.normal(ks[3], (num_heads * head_dim, d_model), dtype)
+               * (num_heads * head_dim) ** -0.5}
+    if qkv_bias:
+        p["bias_q"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bias_k"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bias_v"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    if qk_norm:
+        p["q_norm_scale"] = jnp.ones((head_dim,), dtype)
+        p["k_norm_scale"] = jnp.ones((head_dim,), dtype)
+    return p
+
+
+def _mask(pos_q, pos_k, window, causal: bool):
+    """Attention mask (..., Sq, Sk). pos_k < 0 marks invalid cache slots.
+
+    ``window`` may be a traced scalar: 0 => full span, w>0 => local window
+    (enables gemma3's 5:1 local:global pattern inside one scanned stack).
+    """
+    pq = pos_q[..., :, None]
+    pk = pos_k[..., None, :]
+    m = pk >= 0
+    if causal:
+        m &= pk <= pq
+    w = jnp.asarray(window)
+    m &= jnp.where(w > 0, (pq - pk) < w, True) & jnp.where(w > 0, (pk - pq) < w, True)
+    return m
+
+
+def _sdpa(q, k, v, mask, sm_scale):
+    """q (B,Sq,Hkv,G,hd), k/v (B,Sk,Hkv,hd), mask (B,Sq,Sk) -> (B,Sq,Hkv,G,hd).
+
+    bf16 MXU einsums with f32 accumulation (paper's quire-style wide
+    accumulate, cast once). Scores are explicitly sharding-hinted: KV-head
+    sharding when the head count divides the model axis (Megatron
+    attention), otherwise batch-only (heads replicated on the model axis
+    — revisit per-arch in §Perf).
+    """
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k.astype(q.dtype),
+                        preferred_element_type=jnp.float32) * sm_scale
+    # layout preference: (1) KV-heads on model (zero-comm Megatron attention,
+    # kv=16 archs); (2) *query-sequence* on model — softmax over Sk stays
+    # local, K/V are gathered once per layer; removes the 16x head
+    # replication for GQA kv=8 / MQA kv=1 archs (SS Perf iteration 2);
+    # (3) batch-only fallback.
+    score_specs = (("batch", "model", None, None, None),
+                   ("batch", None, None, "model", None),
+                   ("batch",))
+    scores = hint_pick(scores, *score_specs)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    p = hint_pick(p, *score_specs)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v,
+                     preferred_element_type=jnp.float32)
+    out = hint_pick(out, ("batch", None, "model", None, None),
+                    ("batch", "model", None, None, None), ("batch",))
+    return out.astype(v.dtype)
+
+
+def attn_apply(ctx: Ctx, params, x, positions, *, num_heads, num_kv_heads,
+               head_dim, causal=True, window=0, rope_theta=1e4,
+               kv_override=None, kv_positions=None, use_rope=True,
+               norm_eps=1e-6):
+    """Self- (or cross-, via kv_override) attention block body."""
+    B, S, _ = x.shape
+    H, Hkv = num_heads, num_kv_heads
+    G = H // Hkv
+
+    q = linear(ctx, x, params["wq"], params.get("bias_q"))
+    q = q.reshape(B, S, H, head_dim)
+    if kv_override is None:
+        xk = linear(ctx, x, params["wk"], params.get("bias_k"))
+        xv = linear(ctx, x, params["wv"], params.get("bias_v"))
+        k = xk.reshape(B, S, Hkv, head_dim)
+        v = xv.reshape(B, S, Hkv, head_dim)
+        pos_k = positions
+    else:
+        k, v, pos_k = kv_override          # precomputed (cross-attn / cache)
+
+    if "q_norm_scale" in params:
+        q = rms_norm(q, params["q_norm_scale"], norm_eps)
+        if kv_override is None:
+            k = rms_norm(k, params["k_norm_scale"], norm_eps)
+    if use_rope:
+        q = rope(q, positions, rope_theta)
+        if kv_override is None:
+            k = rope(k, pos_k, rope_theta)
+
+    q = hint(q, "batch", None, "model", None)
+    k = hint(k, "batch", None, None, None)
+    v = hint(v, "batch", None, None, None)
+
+    qg = q.reshape(B, S, Hkv, G, head_dim)
+    sm_scale = head_dim ** -0.5
+    mask = _mask(positions, pos_k if kv_positions is None else kv_positions,
+                 window, causal)
+    if mask.ndim == 2:
+        mask = mask[None]
+    mask = jnp.broadcast_to(mask, (B,) + mask.shape[-2:])
+
+    if ctx.attn_impl == "chunked" and S > ctx.attn_chunk and S % ctx.attn_chunk == 0:
+        nc = S // ctx.attn_chunk
+        qc = qg.reshape(B, nc, ctx.attn_chunk, Hkv, G, head_dim)
+        mc = mask.reshape(B, nc, ctx.attn_chunk, mask.shape[-1])
+
+        def body(_, qm):
+            qi, mi = qm
+            return None, _sdpa(qi, k, v, mi, sm_scale)
+
+        _, oc = jax.lax.scan(body, None,
+                             (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(mc, 1, 0)))
+        out = jnp.moveaxis(oc, 0, 1).reshape(B, S, H, head_dim)
+    else:
+        out = _sdpa(qg, k, v, mask, sm_scale).reshape(B, S, H, head_dim)
+
+    out = hint(out, "batch", None, "model", None)
+    y = ctx.dot(out.reshape(B, S, H * head_dim), params["wo"])
+    return y, (k, v)
+
+
+def decode_attn_apply(ctx: Ctx, params, x, positions, cache_k, cache_v,
+                      cache_positions, *, num_heads, num_kv_heads, head_dim,
+                      window=0, rope_theta=1e4, norm_eps=1e-6):
+    """One-token decode against a (possibly quantized) KV cache.
+
+    x (B, 1, d); cache_k/v (B, Smax, Hkv, hd) dense view (dequantized by
+    the caller if stored int8); cache_positions (B, Smax) with -1 = empty.
+    Returns (y, new_k_token, new_v_token).
+    """
+    B, S, _ = x.shape
+    assert S == 1
+    H, Hkv = num_heads, num_kv_heads
+
+    q = linear(ctx, x, params["wq"], params.get("bias_q")).reshape(B, 1, H, head_dim)
+    k_new = linear(ctx, x, params["wk"], params.get("bias_k")).reshape(B, 1, Hkv, head_dim)
+    v_new = linear(ctx, x, params["wv"], params.get("bias_v")).reshape(B, 1, Hkv, head_dim)
+    if "q_norm_scale" in params:
+        q = rms_norm(q, params["q_norm_scale"], norm_eps)
+        k_new = rms_norm(k_new, params["k_norm_scale"], norm_eps)
+    q = rope(q, positions, rope_theta)
+    k_new = rope(k_new, positions, rope_theta)
+
+    G = H // Hkv
+    qg = q.reshape(B, 1, Hkv, G, head_dim)
+    # Flash-decoding split softmax: scores against the (sharded) cache and
+    # the current token are merged through a numerically-stable two-part
+    # combine — NO concat, so the cache keeps its (divisible) sequence dim
+    # and sequence-sharded KV decomposes into per-shard partials + a small
+    # reduce, instead of an all-gather of the whole cache. The caller
+    # commits (and possibly quantizes) k_new/v_new into the cache after.
+    sm_scale = head_dim ** -0.5
+    cd = qg.dtype
+    s_cache = jnp.einsum("bqhgd,bkhd->bhgqk", qg, cache_k.astype(cd),
+                         preferred_element_type=jnp.float32) * sm_scale
+    s_cache = hint_pick(s_cache, ("batch", "model", None, None, None),
+                        ("batch", None, None, None, "model"), ("batch",))
+    mask = _mask(positions, cache_positions, window, causal=True)  # (B,1,S)
+    s_cache = jnp.where(mask[:, None, None, :, :], s_cache, -1e30)
+    s_new = jnp.einsum("bqhgd,bqhd->bhgq", qg, k_new.astype(cd),
+                       preferred_element_type=jnp.float32)[..., None] * sm_scale
+
+    m = jnp.maximum(jnp.max(s_cache, axis=-1, keepdims=True), s_new)
+    e_cache = jnp.exp(s_cache - m)                       # (B,Hkv,G,1,S)
+    e_new = jnp.exp(s_new - m)                           # (B,Hkv,G,1,1)
+    denom = jnp.sum(e_cache, axis=-1, keepdims=True) + e_new
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", e_cache.astype(cd),
+                     cache_v.astype(cd), preferred_element_type=jnp.float32)
+    out = out + e_new.transpose(0, 3, 1, 2, 4) * v_new[:, :, :, None, :].astype(jnp.float32)
+    out = out / denom.transpose(0, 3, 1, 2, 4)
+    out = hint_pick(out, ("batch", None, "model", None, None), ("batch",))
+    y = ctx.dot(out.astype(cd).reshape(B, 1, H * head_dim), params["wo"])
+    return y, k_new, v_new

@@ -1,0 +1,107 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The hybrid arch interleaves 2 recurrent blocks : 1 local-attention block.
+The RG-LRU is a gated first-order linear recurrence:
+
+    r_t = sigmoid(x_t W_rg)          (recurrence gate)
+    i_t = sigmoid(x_t W_ig)          (input gate)
+    a_t = exp(-c * softplus(L) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Full-sequence form runs as a log-depth jax.lax.associative_scan; decode
+carries h (B, d_rec) — O(1) state, so long_500k is feasible (DESIGN.md).
+Recurrence math stays f32; the surrounding projections are quantizable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Ctx
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_decode_step",
+           "rglru_init_state"]
+
+_C = 8.0
+_CONV_W = 4
+
+
+def rglru_init(key, d_model: int, d_rec: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    s = d_model ** -0.5
+    sr = d_rec ** -0.5
+    return {
+        "gate_proj": jax.random.normal(ks[0], (d_model, d_rec), dtype) * s,
+        "in_proj": jax.random.normal(ks[1], (d_model, d_rec), dtype) * s,
+        "conv_w": jax.random.normal(ks[2], (_CONV_W, d_rec), dtype) * 0.2,
+        "conv_bias": jnp.zeros((d_rec,), dtype),
+        "w_rg": jax.random.normal(ks[3], (d_rec, d_rec), dtype) * sr,
+        "w_ig": jax.random.normal(ks[4], (d_rec, d_rec), dtype) * sr,
+        "a_param": jnp.full((d_rec,), -4.0, dtype),   # a ~ 0.95 at r=0.5
+        "out_proj": jax.random.normal(ks[5], (d_rec, d_model), dtype) * sr,
+    }
+
+
+def _gates(ctx: Ctx, params, xr):
+    r = jax.nn.sigmoid(ctx.dot(xr, params["w_rg"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(ctx.dot(xr, params["w_ig"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["a_param"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * xr.astype(jnp.float32)
+    return a, b
+
+
+def _conv(x, w, bias, state=None):
+    B, S, C = x.shape
+    if state is None:
+        state = jnp.zeros((B, _CONV_W - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(_CONV_W):
+        out = out + xp[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + bias.astype(jnp.float32)).astype(x.dtype), xp[:, -(_CONV_W - 1):]
+
+
+def rglru_apply(ctx: Ctx, params, x, state=None, return_state: bool = False):
+    """Full-sequence recurrent block. x (B,S,d) -> (B,S,d)."""
+    gate = ctx.naf(ctx.dot(x, params["gate_proj"]), "gelu")
+    xr = ctx.dot(x, params["in_proj"])
+    conv_state, h0 = state if state is not None else (None, None)
+    xr, new_conv = _conv(xr, params["conv_w"], params["conv_bias"], conv_state)
+
+    a, b = _gates(ctx, params, xr)                      # (B,S,d_rec) f32
+    if h0 is not None:  # fold initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(ctx.compute_dtype) * gate)
+    out = ctx.dot(y, params["out_proj"])
+    if return_state:
+        return out, (new_conv, h[:, -1])
+    return out
+
+
+def rglru_init_state(batch: int, d_rec: int):
+    return (jnp.zeros((batch, _CONV_W - 1, d_rec), jnp.bfloat16),
+            jnp.zeros((batch, d_rec), jnp.float32))
+
+
+def rglru_decode_step(ctx: Ctx, params, x, state):
+    """One-token step. x (B,1,d); state = (conv (B,3,d_rec), h (B,d_rec))."""
+    conv_state, h = state
+    gate = ctx.naf(ctx.dot(x, params["gate_proj"]), "gelu")   # (B,1,d_rec)
+    xr = ctx.dot(x, params["in_proj"])
+    xp = jnp.concatenate([conv_state.astype(xr.dtype), xr], axis=1)  # (B,4,dr)
+    conv = jnp.einsum("bwc,wc->bc", xp.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32))
+    xr1 = (conv + params["conv_bias"].astype(jnp.float32))[:, None, :]  # (B,1,dr)
+    a, b = _gates(ctx, params, xr1.astype(ctx.compute_dtype))
+    h_new = a[:, 0] * h + b[:, 0]
+    y = h_new[:, None, :].astype(ctx.compute_dtype) * gate
+    return ctx.dot(y, params["out_proj"]), (xp[:, 1:], h_new)

@@ -1,0 +1,202 @@
+"""Mamba-2 SSD layer (state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD dual form: quadratic attention-like
+math inside chunks of length Q, a linear recurrence across chunk states
+(lax.scan) — O(S·Q) work, O(S/Q) sequential depth. Decode carries an O(1)
+recurrent state (B, nh, hp, ds), which is what makes the long_500k cell
+feasible for this family (no KV cache at all).
+
+Projections (in_proj/out_proj, ~90% of params) are quantizable via the
+paper's policy; the recurrence itself runs in f32 (DESIGN.md
+§Arch-applicability: state recurrences are precision-sensitive).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Ctx, rms_norm
+
+__all__ = ["ssm_init", "ssm_apply", "ssm_decode_step", "ssm_init_state",
+           "ssm_naive_ref"]
+
+_CONV_W = 4
+
+
+def _dims(d_model, ssm_cfg):
+    d_inner = ssm_cfg.expand * d_model
+    nh = d_inner // ssm_cfg.head_dim
+    ds = ssm_cfg.state_dim
+    conv_dim = d_inner + 2 * ds          # x + B + C (n_groups = 1)
+    d_in_proj = 2 * d_inner + 2 * ds + nh
+    return d_inner, nh, ds, conv_dim, d_in_proj
+
+
+def ssm_init(key, d_model: int, ssm_cfg, dtype=jnp.float32):
+    d_inner, nh, ds, conv_dim, d_in_proj = _dims(d_model, ssm_cfg)
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    return {
+        "in_proj": jax.random.normal(ks[0], (d_model, d_in_proj), dtype) * s,
+        "out_proj": jax.random.normal(ks[1], (d_inner, d_model), dtype)
+                    * d_inner ** -0.5,
+        "conv_w": jax.random.normal(ks[2], (_CONV_W, conv_dim), dtype) * 0.2,
+        "conv_bias": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(dtype)),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "D": jnp.ones((nh,), dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+    }
+
+
+def _split_proj(ctx: Ctx, params, x, d_model, ssm_cfg):
+    d_inner, nh, ds, conv_dim, _ = _dims(d_model, ssm_cfg)
+    zxbcdt = ctx.dot(x, params["in_proj"])
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_bias, init_state=None):
+    """Depthwise causal conv, width 4. xbc (B,S,Cd); state (B,3,Cd)."""
+    B, S, Cd = xbc.shape
+    if init_state is None:
+        init_state = jnp.zeros((B, _CONV_W - 1, Cd), xbc.dtype)
+    xp = jnp.concatenate([init_state, xbc], axis=1)
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(_CONV_W):
+        out = out + xp[:, i:i + S].astype(jnp.float32) * conv_w[i].astype(jnp.float32)
+    new_state = xp[:, -(_CONV_W - 1):]
+    return jax.nn.silu(out + conv_bias.astype(jnp.float32)).astype(xbc.dtype), new_state
+
+
+def _ssd_chunked(xh, Bm, Cm, dt, A, chunk: int):
+    """Chunked SSD. xh (B,S,nh,hp); Bm/Cm (B,S,ds); dt (B,S,nh); A (nh,)<0.
+
+    Returns y (B,S,nh,hp) and final state (B,nh,hp,ds). f32 throughout.
+    """
+    Bsz, S, nh, hp = xh.shape
+    ds = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:          # largest chunk <= requested that divides S
+        Q -= 1
+    nc = S // Q
+
+    xh = xh.astype(jnp.float32).reshape(Bsz, nc, Q, nh, hp)
+    Bm = Bm.astype(jnp.float32).reshape(Bsz, nc, Q, ds)
+    Cm = Cm.astype(jnp.float32).reshape(Bsz, nc, Q, ds)
+    dt = dt.astype(jnp.float32).reshape(Bsz, nc, Q, nh)
+
+    a = dt * A[None, None, None, :]                  # (B,nc,Q,nh) log-decay
+    cum = jnp.cumsum(a, axis=2)                      # within-chunk cumsum
+    tot = cum[:, :, -1:, :]                          # (B,nc,1,nh)
+
+    # intra-chunk (dual quadratic form); mask the *exponent* so backward
+    # never sees 0 * exp(+large) = NaN
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,Q,Q,nh)
+    iota = jnp.arange(Q)
+    causal = (iota[:, None] >= iota[None, :])[None, None, :, :, None]
+    L = jnp.exp(jnp.where(causal, li, -1e30))
+    cb = jnp.einsum("bcqs,bcks->bcqk", Cm, Bm)              # (B,nc,Q,Q)
+    xdt = xh * dt[..., None]                                # (B,nc,Q,nh,hp)
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", cb, L, xdt)
+
+    # chunk states: S_c = sum_j exp(tot - cum_j) dt_j B_j (x) x_j
+    decay_out = jnp.exp(tot - cum)                          # (B,nc,Q,nh)
+    sc = jnp.einsum("bcqs,bcqh,bcqhp->bchps", Bm, decay_out * dt, xh)
+
+    # inter-chunk recurrence over nc (sequential, length S/Q)
+    chunk_decay = jnp.exp(tot[:, :, 0, :])                  # (B,nc,nh)
+
+    def step(h, inp):
+        dec, s_c = inp                                      # (B,nh), (B,nh,hp,ds)
+        h_new = h * dec[:, :, None, None] + s_c
+        return h_new, h                                     # emit state *before* chunk
+
+    h0 = jnp.zeros((Bsz, nh, hp, ds), jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        step, h0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(sc, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                     # (B,nc,nh,hp,ds)
+
+    # inter-chunk contribution: C_i . h_prev * exp(cum_i)
+    y_inter = jnp.einsum("bcqs,bchps,bcqh->bcqhp", Cm, h_prev, jnp.exp(cum))
+
+    y = (y_intra + y_inter).reshape(Bsz, S, nh, hp)
+    return y, h_last
+
+
+def ssm_apply(ctx: Ctx, params, x, *, d_model: int, ssm_cfg,
+              conv_state=None, ssm_state=None, return_state: bool = False):
+    """Full-sequence SSD block. x (B,S,d) -> y (B,S,d)."""
+    d_inner, nh, ds, conv_dim, _ = _dims(d_model, ssm_cfg)
+    B, S, _ = x.shape
+    z, xbc, dt = _split_proj(ctx, params, x, d_model, ssm_cfg)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_bias"],
+                                 conv_state)
+    xs = xbc[..., :d_inner].reshape(B, S, nh, ssm_cfg.head_dim)
+    Bm = xbc[..., d_inner:d_inner + ds]
+    Cm = xbc[..., d_inner + ds:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    y, h_last = _ssd_chunked(xs, Bm, Cm, dt, A, ssm_cfg.chunk)
+    y = y + xs.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(ctx.compute_dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(ctx.compute_dtype)
+    y = rms_norm(y, params["norm_scale"])
+    out = ctx.dot(y, params["out_proj"])
+    if return_state:
+        return out, (new_conv, h_last)
+    return out
+
+
+def ssm_init_state(cfg, batch: int, d_model: int, ssm_cfg):
+    d_inner, nh, ds, conv_dim, _ = _dims(d_model, ssm_cfg)
+    return (jnp.zeros((batch, _CONV_W - 1, conv_dim), jnp.bfloat16),
+            jnp.zeros((batch, nh, ssm_cfg.head_dim, ds), jnp.float32))
+
+
+def ssm_decode_step(ctx: Ctx, params, x, state, *, d_model: int, ssm_cfg):
+    """One-token recurrent update. x (B,1,d); state (conv, h)."""
+    d_inner, nh, ds, conv_dim, _ = _dims(d_model, ssm_cfg)
+    B = x.shape[0]
+    conv_state, h = state
+    z, xbc, dt = _split_proj(ctx, params, x, d_model, ssm_cfg)
+
+    # conv over [state, new token]
+    xp = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)  # (B,4,Cd)
+    conv = jnp.einsum("bwc,wc->bc", xp.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32))
+    xbc1 = jax.nn.silu(conv + params["conv_bias"].astype(jnp.float32))  # (B,Cd)
+    new_conv = xp[:, 1:]
+
+    xs = xbc1[:, :d_inner].reshape(B, nh, ssm_cfg.head_dim)
+    Bm = xbc1[:, d_inner:d_inner + ds]
+    Cm = xbc1[:, d_inner + ds:]
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))      # (B,nh)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    decay = jnp.exp(dtv * A[None, :])                                   # (B,nh)
+    h = h * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bs->bhps", dtv, xs.astype(jnp.float32), Bm.astype(jnp.float32))
+    y = jnp.einsum("bhps,bs->bhp", h, Cm.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(ctx.compute_dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(ctx.compute_dtype)
+    y = rms_norm(y, params["norm_scale"])
+    return ctx.dot(y, params["out_proj"]), (new_conv, h)
+
+
+def ssm_naive_ref(ctx: Ctx, params, x, *, d_model: int, ssm_cfg):
+    """Step-by-step recurrence oracle (tests: chunked == naive)."""
+    B, S, _ = x.shape
+    state = ssm_init_state(None, B, d_model, ssm_cfg)
+    outs = []
+    for t in range(S):
+        y, state = ssm_decode_step(ctx, params, x[:, t:t + 1], state,
+                                   d_model=d_model, ssm_cfg=ssm_cfg)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)

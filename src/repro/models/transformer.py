@@ -1,0 +1,427 @@
+"""Decoder-only LM family: dense / MoE / VLM-backbone / SSM (Mamba-2).
+
+One skeleton (embed -> scanned layer stack -> final norm -> lm head) with
+the temporal mixer and FFN chosen per config. Layer stacks run under
+jax.lax.scan with stacked weights (compile-time O(1) in depth — required
+for the 512-device dry-run) and optional per-layer remat.
+
+Decode caches are pytrees scanned as xs/ys alongside the layer weights:
+  attn archs:  k/v (L, B, Smax, Hkv, hd) — bf16, or int8 codes + scales
+               when the policy quantizes the KV cache (paper's technique
+               applied to activations-at-rest);
+  mamba2:      conv (L, B, 3, conv_dim) + ssd state (L, B, nh, hp, ds).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.qlinear import embed_lookup
+from ..core.qtensor import maybe_dequantize
+from ..parallel import hint, hint_pick
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (Ctx, attention_init, attn_apply, decode_attn_apply,
+                     mlp, mlp_init, rms_norm)
+
+__all__ = ["lm_init", "lm_forward", "lm_init_cache", "lm_prefill",
+           "lm_decode_step", "window_array"]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def window_array(cfg) -> jnp.ndarray:
+    """Per-layer attention window (0 = full). Encodes gemma3's 5:1 pattern."""
+    if cfg.window_pattern:
+        pat = list(cfg.window_pattern)
+        wins = [pat[i % len(pat)] for i in range(cfg.num_layers)]
+    else:
+        wins = [0] * cfg.num_layers
+    return jnp.asarray(wins, jnp.int32)
+
+
+def _layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    p = {"norm1_scale": jnp.ones((cfg.d_model,), jnp.float32),
+         "norm2_scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.family == "ssm":
+        p["ssm"] = ssm_mod.ssm_init(k1, cfg.d_model, cfg.ssm)
+        del p["norm2_scale"]
+        return p
+    p["attn"] = attention_init(k1, cfg.d_model, cfg.num_heads,
+                               cfg.num_kv_heads, cfg.head_dim,
+                               qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm)
+    if cfg.moe is not None:
+        p["moe"] = moe_mod.moe_init(k2, cfg.d_model, cfg.d_ff,
+                                    cfg.moe.num_experts, cfg.mlp_act)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act)
+    return p
+
+
+def lm_init(key, cfg):
+    ke, kl, kh = jax.random.split(key, 3)
+    # stacked per-layer params: init each leaf once, tile via vmap over keys
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys)
+    params = {
+        "embedding": jax.random.normal(
+            ke, (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02,
+        "layers": layers,
+        "norm_f_scale": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            kh, (cfg.d_model, cfg.vocab_size), jnp.float32) * cfg.d_model ** -0.5
+    return params
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(ctx: Ctx, cfg, lp, window, x, positions, collect_kv: bool):
+    h = hint(rms_norm(x, lp["norm1_scale"], cfg.norm_eps),
+             "batch", None, None)   # gather S for the projections
+    if cfg.family == "ssm":
+        y = ssm_mod.ssm_apply(ctx, lp["ssm"], h, d_model=cfg.d_model,
+                              ssm_cfg=cfg.ssm)
+        return x + y, jnp.zeros((), jnp.float32), None
+    y, kv = attn_apply(ctx, lp["attn"], h, positions,
+                       num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                       head_dim=cfg.head_dim, causal=True, window=window,
+                       rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+    x = x + y
+    h = hint(rms_norm(x, lp["norm2_scale"], cfg.norm_eps), "batch", None, None)
+    if cfg.moe is not None:
+        y, aux = moe_mod.moe_apply(
+            ctx, lp["moe"], h, top_k=cfg.moe.top_k,
+            capacity_factor=cfg.moe.capacity_factor, act=cfg.mlp_act,
+            parallel_mode=cfg.moe.parallel_mode,
+                dispatch_groups=cfg.moe.dispatch_groups)
+    else:
+        y, aux = mlp(ctx, lp["mlp"], h, cfg.mlp_act), jnp.zeros((), jnp.float32)
+    x = x + y
+    # residual stream sequence-sharded between layers (Megatron-SP): remat
+    # saves shrink by the model-axis size; projections re-gather via hints
+    x = hint_pick(x, ("batch", "model", None), ("batch", None, None))
+    return x, aux, (kv if collect_kv else None)
+
+
+def _embed(ctx: Ctx, params, cfg, tokens, img_embeds=None):
+    x = embed_lookup(params["embedding"], tokens, ctx.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, ctx.compute_dtype)
+    if img_embeds is not None:  # VLM: prepend stub-frontend patch embeddings
+        x = jnp.concatenate([img_embeds.astype(ctx.compute_dtype), x], axis=1)
+    return hint_pick(x, ("batch", "model", None), ("batch", None, None))
+
+
+def _head(ctx: Ctx, params, cfg, x):
+    x = rms_norm(x, params["norm_f_scale"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = maybe_dequantize(params["embedding"], ctx.compute_dtype)
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(ctx.compute_dtype), w)
+    else:
+        logits = ctx.dot(x, params["lm_head"])
+    # prefer sequence-sharded logits (local full-vocab softmax in the loss)
+    return hint_pick(logits.astype(jnp.float32),
+                     ("batch", "model", None), ("batch", None, "model"))
+
+
+def _pick_groups(L: int) -> int:
+    """Divisor of L closest to sqrt(L): minimizes (G + L/G) save stacks."""
+    best, best_cost = 1, L + 1
+    for g in range(1, L + 1):
+        if L % g == 0:
+            cost = g + L // g
+            if cost < best_cost:
+                best, best_cost = g, cost
+    return best
+
+
+def grouped_scan(body, carry, xs, L: int, *, remat: bool, groups: int = 0):
+    """Two-level remat scan over a stacked layer axis.
+
+    Memory under remat drops from L x residual to (G + L/G) x residual:
+    the outer scan checkpoints per *group* (saves G carries), the inner
+    scan checkpoints per layer during the group's backward recompute
+    (transient L/G carries) — the standard trick for deep stacks at
+    fixed HBM (MaxText "layer grouping").
+    """
+    if not remat:
+        return jax.lax.scan(body, carry, xs)
+    G = groups or _pick_groups(L)
+    if G <= 1 or L % G != 0:
+        return jax.lax.scan(jax.checkpoint(body), carry, xs)
+    xs2 = jax.tree.map(lambda a: a.reshape((G, L // G) + a.shape[1:]), xs)
+
+    def outer(c, xs_g):
+        c, ys = jax.lax.scan(jax.checkpoint(body), c, xs_g)
+        return c, ys
+
+    carry, ys = jax.lax.scan(jax.checkpoint(outer), carry, xs2)
+    ys = jax.tree.map(
+        lambda a: a.reshape((L,) + a.shape[2:]) if a is not None else None,
+        ys, is_leaf=lambda a: a is None)
+    return carry, ys
+
+
+def lm_forward(ctx: Ctx, params, cfg, tokens, positions=None,
+               img_embeds=None, remat: bool = False, collect_kv: bool = False):
+    """tokens (B, S) -> (logits (B, S_total, V) f32, aux_loss, kv_stack|None)."""
+    B = tokens.shape[0]
+    x = _embed(ctx, params, cfg, tokens, img_embeds)
+    S = x.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    windows = window_array(cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, window = xs
+        # entry hint pins the layout of the remat-saved per-layer input
+        # stack (sequence-sharded -> saves shrink by the model-axis size)
+        x = hint_pick(x, ("batch", "model", None), ("batch", None, None))
+        x, aux_l, kv = _layer_fwd(ctx, cfg, lp, window, x, positions,
+                                  collect_kv)
+        return (x, aux + aux_l), kv
+
+    (x, aux), kvs = grouped_scan(body, (x, jnp.zeros((), jnp.float32)),
+                                 (params["layers"], windows),
+                                 cfg.num_layers, remat=remat)
+    logits = _head(ctx, params, cfg, x)
+    return logits, aux, kvs
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+def lm_init_cache(cfg, batch: int, max_len: int, kv_dtype: str = "bf16"):
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        d_inner = cfg.ssm.expand * cfg.d_model
+        nh = d_inner // cfg.ssm.head_dim
+        conv_dim = d_inner + 2 * cfg.ssm.state_dim
+        return {
+            "conv": jnp.zeros((L, batch, 3, conv_dim), jnp.bfloat16),
+            "ssd": jnp.zeros((L, batch, nh, cfg.ssm.head_dim,
+                              cfg.ssm.state_dim), jnp.float32),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    cache = {
+        "pos": jnp.full((batch, max_len), -1, jnp.int32),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+    if kv_dtype == "int8":
+        cache.update(
+            k_codes=jnp.zeros((L, batch, max_len, Hkv, hd), jnp.int8),
+            k_scales=jnp.zeros((L, batch, max_len, Hkv), jnp.float32),
+            v_codes=jnp.zeros((L, batch, max_len, Hkv, hd), jnp.int8),
+            v_scales=jnp.zeros((L, batch, max_len, Hkv), jnp.float32))
+    elif kv_dtype == "fp8":
+        cache.update(k=jnp.zeros((L, batch, max_len, Hkv, hd), jnp.float8_e4m3fn),
+                     k_scales=jnp.zeros((L, batch, max_len, Hkv), jnp.float32),
+                     v=jnp.zeros((L, batch, max_len, Hkv, hd), jnp.float8_e4m3fn),
+                     v_scales=jnp.zeros((L, batch, max_len, Hkv), jnp.float32))
+    else:
+        dt = jnp.float32 if kv_dtype == "f32" else jnp.bfloat16
+        cache.update(k=jnp.zeros((L, batch, max_len, Hkv, hd), dt),
+                     v=jnp.zeros((L, batch, max_len, Hkv, hd), dt))
+    return cache
+
+
+def _quantize_token_kv(t):
+    """(B, S, Hkv, hd) -> int8 codes + per-(token, head) scales."""
+    absmax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scales = jnp.where(absmax == 0, 1.0, absmax / 127.0)
+    codes = jnp.clip(jnp.round(t / scales[..., None]), -127, 127).astype(jnp.int8)
+    return codes, scales.astype(jnp.float32)
+
+
+def _fp8_token_kv(t):
+    absmax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+    scales = jnp.where(absmax == 0, 1.0, absmax / 448.0)
+    codes = (t / scales[..., None]).astype(jnp.float8_e4m3fn)
+    return codes, scales.astype(jnp.float32)
+
+
+def _dense_kv(cache_layer_k, scales):
+    if scales is None:
+        return cache_layer_k
+    return (cache_layer_k.astype(jnp.float32) * scales[..., None]
+            ).astype(jnp.bfloat16)
+
+
+def _scatter_tokens(cache, new, lens):
+    """Insert (B, S_new, ...) rows into (B, Smax, ...) at per-seq offsets."""
+    def upd(c, t, i):
+        return jax.lax.dynamic_update_slice(
+            c, t.astype(c.dtype), (i,) + (0,) * (c.ndim - 1))
+    return jax.vmap(upd)(cache, new, lens)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def lm_prefill(ctx: Ctx, params, cfg, tokens, cache, lengths=None,
+               img_embeds=None, positions=None):
+    """Run the full prompt, fill the cache. tokens (B, S_prompt)."""
+    B, S = tokens.shape
+    if cfg.family == "ssm":
+        # recurrent prefill: chunked scan already yields final state per layer
+        x = _embed(ctx, params, cfg, tokens, img_embeds)
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                                         (B, x.shape[1]))
+
+        def body(x, xs):
+            lp, conv0, ssd0 = xs
+            h = rms_norm(x, lp["norm1_scale"], cfg.norm_eps)
+            y, (conv, ssd) = ssm_mod.ssm_apply(
+                ctx, lp["ssm"], h, d_model=cfg.d_model, ssm_cfg=cfg.ssm,
+                conv_state=conv0, ssm_state=ssd0, return_state=True)
+            return x + y, (conv, ssd)
+
+        x, (convs, ssds) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["ssd"]))
+        logits = _head(ctx, params, cfg, x)
+        lens = lengths if lengths is not None else jnp.full((B,), S, jnp.int32)
+        new_cache = dict(cache, conv=convs, ssd=ssds, len=lens)
+        return new_cache, logits
+
+    logits, _aux, kvs = lm_forward(ctx, params, cfg, tokens,
+                                   positions=positions,
+                                   img_embeds=img_embeds, collect_kv=True)
+    ks, vs = kvs                                   # (L, B, S_tot, Hkv, hd)
+    S_tot = ks.shape[2]
+    lens = lengths if lengths is not None else jnp.full((B,), S_tot, jnp.int32)
+    new_cache = dict(cache)
+    if "k_codes" in cache:   # prompt fills slots [0, S_tot)
+        kc, ksc = _quantize_token_kv(ks)
+        vc, vsc = _quantize_token_kv(vs)
+        new_cache["k_codes"] = cache["k_codes"].at[:, :, :S_tot].set(kc)
+        new_cache["k_scales"] = cache["k_scales"].at[:, :, :S_tot].set(ksc)
+        new_cache["v_codes"] = cache["v_codes"].at[:, :, :S_tot].set(vc)
+        new_cache["v_scales"] = cache["v_scales"].at[:, :, :S_tot].set(vsc)
+    elif "k_scales" in cache:  # fp8
+        kc, ksc = _fp8_token_kv(ks)
+        vc, vsc = _fp8_token_kv(vs)
+        new_cache["k"] = cache["k"].at[:, :, :S_tot].set(kc)
+        new_cache["k_scales"] = cache["k_scales"].at[:, :, :S_tot].set(ksc)
+        new_cache["v"] = cache["v"].at[:, :, :S_tot].set(vc)
+        new_cache["v_scales"] = cache["v_scales"].at[:, :, :S_tot].set(vsc)
+    else:
+        new_cache["k"] = cache["k"].at[:, :, :S_tot].set(ks.astype(cache["k"].dtype))
+        new_cache["v"] = cache["v"].at[:, :, :S_tot].set(vs.astype(cache["v"].dtype))
+    pos = jnp.broadcast_to(jnp.arange(S_tot, dtype=jnp.int32), (B, S_tot))
+    pos = jnp.where(pos < lens[:, None], pos, -1)
+    new_cache["pos"] = cache["pos"].at[:, :S_tot].set(pos)
+    new_cache["len"] = lens
+    return new_cache, logits
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def lm_decode_step(ctx: Ctx, params, cfg, tokens, cache):
+    """One decode step. tokens (B, 1) -> (new_cache, logits (B, 1, V))."""
+    B = tokens.shape[0]
+    positions = cache["len"][:, None]                       # (B,1)
+    x = _embed(ctx, params, cfg, tokens)
+    windows = window_array(cfg)
+
+    if cfg.family == "ssm":
+        def body(x, xs):
+            lp, conv0, ssd0 = xs
+            h = rms_norm(x, lp["norm1_scale"], cfg.norm_eps)
+            y, (conv, ssd) = ssm_mod.ssm_decode_step(
+                ctx, lp["ssm"], h, (conv0, ssd0),
+                d_model=cfg.d_model, ssm_cfg=cfg.ssm)
+            return x + y, (conv, ssd)
+
+        x, (convs, ssds) = jax.lax.scan(
+            body, x, (params["layers"], cache["conv"], cache["ssd"]))
+        logits = _head(ctx, params, cfg, x)
+        new_cache = dict(cache, conv=convs, ssd=ssds, len=cache["len"] + 1)
+        return new_cache, logits
+
+    quant = "k_codes" in cache
+    fp8 = "k_scales" in cache and not quant
+    if quant:
+        xs = (params["layers"], windows, cache["k_codes"], cache["k_scales"],
+              cache["v_codes"], cache["v_scales"])
+    elif fp8:
+        xs = (params["layers"], windows, cache["k"], cache["k_scales"],
+              cache["v"], cache["v_scales"])
+    else:
+        xs = (params["layers"], windows, cache["k"], cache["v"])
+
+    def body(x, layer_xs):
+        if quant or fp8:
+            lp, window, kc, ksc, vc, vsc = layer_xs
+            k_dense = _dense_kv(kc, ksc)
+            v_dense = _dense_kv(vc, vsc)
+        else:
+            lp, window, k_dense, v_dense = layer_xs
+            ksc = vsc = None
+            kc, vc = k_dense, v_dense
+        h = rms_norm(x, lp["norm1_scale"], cfg.norm_eps)
+        y, k_new, v_new = decode_attn_apply(
+            ctx, lp["attn"], h, positions, k_dense, v_dense, cache["pos"],
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, window=window, rope_theta=cfg.rope_theta,
+            norm_eps=cfg.norm_eps)
+        x = x + y
+        h = rms_norm(x, lp["norm2_scale"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = moe_mod.moe_apply(
+                ctx, lp["moe"], h, top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor, act=cfg.mlp_act,
+                parallel_mode=cfg.moe.parallel_mode, dropless=True,
+                dispatch_groups=cfg.moe.dispatch_groups)
+        else:
+            y = mlp(ctx, lp["mlp"], h, cfg.mlp_act)
+        x = x + y
+        # commit the new token into this layer's cache slice
+        if quant:
+            nkc, nks = _quantize_token_kv(k_new)
+            nvc, nvs = _quantize_token_kv(v_new)
+            return x, (_scatter_tokens(kc, nkc, cache["len"]),
+                       _scatter_tokens(ksc, nks, cache["len"]),
+                       _scatter_tokens(vc, nvc, cache["len"]),
+                       _scatter_tokens(vsc, nvs, cache["len"]))
+        if fp8:
+            nkc, nks = _fp8_token_kv(k_new)
+            nvc, nvs = _fp8_token_kv(v_new)
+            return x, (_scatter_tokens(kc, nkc, cache["len"]),
+                       _scatter_tokens(ksc, nks, cache["len"]),
+                       _scatter_tokens(vc, nvc, cache["len"]),
+                       _scatter_tokens(vsc, nvs, cache["len"]))
+        return x, (_scatter_tokens(kc, k_new, cache["len"]),
+                   _scatter_tokens(vc, v_new, cache["len"]))
+
+    x, new_kv = jax.lax.scan(body, x, xs)
+    logits = _head(ctx, params, cfg, x)
+    new_cache = dict(cache)
+    if quant:
+        (new_cache["k_codes"], new_cache["k_scales"],
+         new_cache["v_codes"], new_cache["v_scales"]) = new_kv
+    elif fp8:
+        (new_cache["k"], new_cache["k_scales"],
+         new_cache["v"], new_cache["v_scales"]) = new_kv
+    else:
+        new_cache["k"], new_cache["v"] = new_kv
+    new_cache["pos"] = _scatter_tokens(cache["pos"], positions, cache["len"])
+    new_cache["len"] = cache["len"] + 1
+    return new_cache, logits

@@ -1,0 +1,23 @@
+"""LR schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_linear(step, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    decay = peak_lr + (floor - peak_lr) * frac
+    return jnp.where(step < warmup, warm, decay)
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+    decay = floor + 0.5 * (peak_lr - floor) * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, decay)

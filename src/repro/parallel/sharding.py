@@ -1,0 +1,294 @@
+"""Mesh context + logical sharding rules (GSPMD/pjit distribution layer).
+
+Mesh axes:
+  single-pod (16, 16): ("data", "model")
+  multi-pod (2, 16, 16): ("pod", "data", "model")
+
+"pod"+"data" form the DP/FSDP domain (batch + parameter-shard axis);
+"model" is the tensor/expert-parallel domain. Model code never touches the
+mesh directly — it calls :func:`hint` with *logical* axis names which
+resolve against the active mesh (identity when no mesh is set, so tests
+and CPU smoke runs need no distribution machinery).
+
+Param shardings are derived from path-pattern rules (:func:`param_shardings`)
+so plain arrays and QTensor children (packed codes / scales) both resolve.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["set_mesh", "current_mesh", "hint", "hint_pick", "batch_axes",
+           "activation_spec", "param_shardings", "batch_shardings",
+           "cache_shardings"]
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh: Optional[Mesh]):
+    tok = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(tok)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def batch_axes(mesh: Mesh) -> tuple:
+    """Mesh axes forming the DP domain ('pod' + 'data' when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _resolve(mesh: Mesh, logical: Optional[str]):
+    if logical is None:
+        return None
+    if logical == "batch":
+        ax = batch_axes(mesh)
+        return ax if len(ax) > 1 else (ax[0] if ax else None)
+    if logical == "fsdp":  # parameter-shard domain == DP domain
+        ax = batch_axes(mesh)
+        return ax if len(ax) > 1 else (ax[0] if ax else None)
+    if logical in mesh.axis_names:
+        return logical
+    return None
+
+
+def activation_spec(mesh: Mesh, *logical) -> P:
+    return P(*[_resolve(mesh, l) for l in logical])
+
+
+def hint_pick(x, *specs):
+    """Apply the first logical spec whose named axes all divide x's dims.
+
+    Unlike :func:`hint` (which drops only the offending dim), this keeps a
+    spec atomic — used where alternatives are semantically different
+    layouts (e.g. attention scores: heads-sharded vs sequence-sharded).
+    """
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    for spec in specs:
+        resolved = [_resolve(mesh, l) for l in spec]
+        ok = True
+        for dim, ax in zip(x.shape, resolved):
+            if ax is None:
+                continue
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            if dim % size != 0:
+                ok = False
+                break
+        if ok:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*resolved)))
+    return x
+
+
+def hint(x, *logical):
+    """with_sharding_constraint against the context mesh (no-op if unset).
+
+    Logical names: "batch", "fsdp", "model", None. Constraint is skipped
+    for any dim the resolved axes do not divide (robustness for reduced
+    smoke configs on tiny meshes).
+    """
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    spec = activation_spec(mesh, *logical)
+    # drop constraints that do not divide the dim (GSPMD pads activations,
+    # but uneven *activation* sharding is usually a perf bug -> replicate)
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= mesh.shape[a]
+        fixed.append(ax if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules.
+#
+# Matched top-down against the flattened param path; first hit wins. The
+# rule gives logical axes for the trailing dims (leading stacked-layer and
+# expert dims are handled explicitly). Biases/norms/scalars replicate.
+# ---------------------------------------------------------------------------
+
+# (path regex, spec for the last N dims, N). Paths look like
+# ['layers']['attn']['wq'].data  (dict keys quoted, QTensor children as attrs)
+_RULES: list[tuple[str, tuple, int]] = [
+    (r"'(embedding|pos_embed)'", ("model", "fsdp"), 2),
+    (r"'lm_head'", ("fsdp", "model"), 2),
+    (r"'(wq|wk|wv|wqkv|w_gate|w_up|w_in)'", ("fsdp", "model"), 2),
+    (r"'(wo|w_down|w_out)'", ("model", "fsdp"), 2),
+    (r"'router'", (None, None), 2),
+    (r"'(in_proj|gate_proj)'", ("fsdp", "model"), 2),
+    (r"'(out_proj)'", ("model", "fsdp"), 2),
+    (r"'conv_w'", (None, "model"), 2),
+]
+
+
+def _leaf_spec(mesh: Mesh, path: str, leaf: Any, expert_axis: Optional[str],
+               fsdp_scope: str = "all"):
+    shape = getattr(leaf, "shape", ())
+    ndim = len(shape)
+    if ndim <= 1:
+        return P()
+    # scales of weight QTensors replicate (tiny; avoids divisibility traps)
+    if re.search(r"(scales|cscale|offset)", path) and "embedding" not in path:
+        return P()
+    if re.search(r"(lora_a|lora_b)", path):
+        return P()  # adapters are small; replicate
+    # fsdp_scope="opt": only optimizer state (master/m/v) is FSDP-2D-sharded;
+    # live params are TP-only so forward/backward propagation has a single
+    # stable solution (no FSDP-gather vs batch-gather ambiguity)
+    use_fsdp = (fsdp_scope == "all"
+                or (fsdp_scope == "opt" and re.search(r"'opt'", path)))
+    for pat, spec, n in _RULES:
+        if re.search(pat, path):
+            if ndim < n:
+                return P()
+            lead: list = [None] * (ndim - n)
+            spec = list(spec)
+            if not use_fsdp:
+                spec = [None if s == "fsdp" else s for s in spec]
+            # stacked MoE experts: (L, E, ...) -> shard E on the expert axis
+            # and release that axis from the trailing dims (no axis reuse)
+            if expert_axis and re.search(r"experts", path) and ndim >= n + 1:
+                lead[-1] = expert_axis
+                spec = [None if s == expert_axis else s for s in spec]
+            full = lead + spec
+            # drop non-dividing axes (GSPMD would pad; for weights we prefer
+            # replication over padded shards for odd dims like vocab=51865)
+            out = []
+            for dim, ax in zip(shape, full):
+                if ax is None:
+                    out.append(None)
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                resolved = []
+                for a in axes:
+                    r = _resolve(mesh, a)
+                    if r is None:
+                        continue
+                    resolved.extend(r if isinstance(r, tuple) else [r])
+                size = 1
+                for a in resolved:
+                    size *= mesh.shape[a]
+                if resolved and dim % size == 0:
+                    out.append(tuple(resolved) if len(resolved) > 1 else resolved[0])
+                else:
+                    out.append(None)
+            return P(*out)
+    return P()
+
+
+def param_shardings(mesh: Mesh, params: Any, expert_mode: str = "expert",
+                    fsdp_scope: str = "all"):
+    """NamedSharding tree for a (possibly quantized) parameter pytree.
+
+    fsdp_scope: "all" (2-D FSDPxTP everywhere — inference default, weights
+    are read-only), "opt" (TP-only live params, FSDP-2D optimizer state —
+    training default), "none" (TP-only).
+    """
+    expert_axis = "model" if expert_mode == "expert" else None
+
+    def visit(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        return NamedSharding(mesh, _leaf_spec(mesh, pstr, leaf, expert_axis,
+                                              fsdp_scope))
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def _divides(mesh: Mesh, axes, dim: int) -> bool:
+    if axes is None:
+        return False
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return size > 0 and dim % size == 0
+
+
+def batch_shardings(mesh: Mesh, batch: Any):
+    """Shard every batch leaf's leading (batch) dim over the DP domain."""
+    dp = batch_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def visit(leaf):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) >= 1 and _divides(mesh, dp, shape[0]):
+            return NamedSharding(mesh, P(dp, *([None] * (len(shape) - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(visit, batch)
+
+
+def cache_shardings(mesh: Mesh, cache: Any):
+    """Decode-cache shardings (DESIGN.md §3):
+
+    KV leaves (L, B, S, Hkv, hd): batch -> DP axes; heads -> model when
+    divisible (kv=16 archs), otherwise the *sequence* dim shards on model
+    (flash-decoding-style split-S — required for GQA kv=8 / MQA kv=1 on a
+    16-way tensor axis). Recurrent states shard their channel dim on model.
+    """
+    dp = batch_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def visit(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        shape = getattr(leaf, "shape", ())
+        nd = len(shape)
+        if re.search(r"'(pos|len|pos_roll)'", pstr) or nd <= 1:
+            return NamedSharding(mesh, P())
+        spec = [None] * nd
+        if re.search(r"'(k|v|k_codes|v_codes|cross_k|cross_v|cross_k_codes|cross_v_codes|b_k|b_v)'", pstr) and nd == 5:
+            L, B, S, Hkv, hd = shape
+            if _divides(mesh, dp, B):
+                spec[1] = dp
+            if _divides(mesh, "model", Hkv):
+                spec[3] = "model"
+            elif _divides(mesh, "model", S):
+                spec[2] = "model"
+        elif re.search(r"'(k_scales|v_scales|cross_k_scales|cross_v_scales)'", pstr) and nd == 4:
+            L, B, S, Hkv = shape
+            if _divides(mesh, dp, B):
+                spec[1] = dp
+            if _divides(mesh, "model", Hkv):
+                spec[3] = "model"
+            elif _divides(mesh, "model", S):
+                spec[2] = "model"
+        elif re.search(r"'(conv|b_conv1|b_conv2|t_conv)'", pstr) and nd == 4:
+            if _divides(mesh, dp, shape[1]):
+                spec[1] = dp
+            if _divides(mesh, "model", shape[3]):
+                spec[3] = "model"
+        elif re.search(r"'ssd'", pstr) and nd == 5:
+            if _divides(mesh, dp, shape[1]):
+                spec[1] = dp
+            if _divides(mesh, "model", shape[2]):
+                spec[2] = "model"
+        elif re.search(r"'(b_h1|b_h2|t_h)'", pstr) and nd == 3:
+            if _divides(mesh, dp, shape[1]):
+                spec[1] = dp
+            if _divides(mesh, "model", shape[2]):
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(visit, cache)

@@ -1,0 +1,3 @@
+from .engine import ServeEngine, greedy_generate, translate
+
+__all__ = ["ServeEngine", "greedy_generate", "translate"]

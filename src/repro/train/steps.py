@@ -1,0 +1,164 @@
+"""Loss + train-step factories (full training and QLoRA finetuning).
+
+Losses:
+  * LM families: next-token CE, labels = tokens shifted left, pad-masked;
+    VLM slices the text-aligned logits (image patches produce no loss).
+  * enc-dec (NLLB/whisper): teacher-forced CE vs tgt_out with label
+    smoothing 0.1 (NMT standard, matches the paper's training recipe
+    lineage) + the MoE load-balancing aux loss (paper §II-A).
+
+Steps:
+  * make_train_step  — full AdamW training, optional microbatch gradient
+    accumulation (lax.scan over microbatches) and remat; donated state.
+  * make_qlora_step  — paper §III: base weights stay quantized+frozen,
+    only LoRA adapters receive gradients/updates.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.qlora import extract_adapters, inject_adapters
+from ..models.layers import Ctx
+from ..optim import adamw_init, adamw_update
+
+__all__ = ["compute_loss", "make_train_step", "make_qlora_step"]
+
+
+def _xent(logits, labels, mask, label_smoothing: float = 0.0):
+    """Masked token-mean cross-entropy, f32. logits (B,S,V)."""
+    V = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if label_smoothing > 0:
+        smooth = -jnp.mean(logp, axis=-1)
+        nll = (1 - label_smoothing) * nll + label_smoothing * smooth
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def compute_loss(ctx: Ctx, model, params, batch, *, remat: bool = False,
+                 label_smoothing: Optional[float] = None):
+    cfg = model.cfg
+    logits, aux = model.forward(ctx, params, batch, remat=remat)
+    if cfg.family in ("encdec", "audio"):
+        ls = 0.1 if label_smoothing is None else label_smoothing
+        loss = _xent(logits, batch["tgt_out"], batch["loss_mask"], ls)
+    else:
+        tokens = batch["tokens"]
+        mask = batch.get("loss_mask", jnp.ones_like(tokens, jnp.float32))
+        if cfg.family == "vlm" and "img_embeds" in batch:
+            P = batch["img_embeds"].shape[1]
+            S = tokens.shape[1]
+            # position P-1+i predicts text token i: slice is already shifted
+            logits = logits[:, P - 1:P + S - 1]
+        else:
+            logits = logits[:, :-1]
+            tokens, mask = tokens[:, 1:], mask[:, 1:]
+        ls = 0.0 if label_smoothing is None else label_smoothing
+        loss = _xent(logits, tokens, mask, ls)
+    aux_w = cfg.moe.aux_loss_weight if cfg.moe is not None else 0.0
+    total = loss + aux_w * aux
+    return total, {"loss": loss, "aux_loss": aux, "total_loss": total}
+
+
+def _split_microbatches(batch, n: int):
+    def split(x):
+        if hasattr(x, "shape") and x.ndim >= 1 and x.shape[0] % n == 0:
+            return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+        return None
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model, *, lr_fn, weight_decay=0.01, clip_norm=1.0,
+                    state_bits=32, microbatches: int = 1, remat: bool = False,
+                    label_smoothing: Optional[float] = None,
+                    ctx: Optional[Ctx] = None, donate: bool = True,
+                    param_dtype=None):
+    """Returns (init_state_fn, step_fn). step(state, batch)->(state, metrics).
+
+    param_dtype=jnp.bfloat16 enables the Megatron-style distributed
+    optimizer: live params are bf16 (TP-sharded), an f32 master copy +
+    moments live in opt state (FSDP-sharded over DP) — see
+    parallel.param_shardings(fsdp_scope="opt").
+    """
+    ctx = ctx or Ctx()
+    master = param_dtype is not None
+
+    def init_state(params):
+        if master:
+            params = jax.tree.map(
+                lambda p: p.astype(param_dtype)
+                if hasattr(p, "dtype") and jnp.issubdtype(p.dtype, jnp.floating)
+                else p, params)
+        return {"params": params,
+                "opt": adamw_init(params, state_bits=state_bits,
+                                  master=master)}
+
+    def loss_fn(params, batch):
+        return compute_loss(ctx, model, params, batch, remat=remat,
+                            label_smoothing=label_smoothing)
+
+    def step(state, batch):
+        params = state["params"]
+        if microbatches > 1:
+            mb = _split_microbatches(batch, microbatches)
+
+            def acc_body(carry, mbatch):
+                gsum, msum = carry
+                (_, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mbatch)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                msum = jax.tree.map(jnp.add, msum, metrics)
+                return (gsum, msum), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zero_m = {"loss": 0.0, "aux_loss": 0.0, "total_loss": 0.0}
+            zero_m = jax.tree.map(jnp.float32, zero_m)
+            (grads, metrics), _ = jax.lax.scan(acc_body, (zero_g, zero_m), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, metrics)
+        else:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        lr = lr_fn(state["opt"]["step"])
+        new_params, new_opt, om = adamw_update(
+            grads, state["opt"], params, lr=lr, weight_decay=weight_decay,
+            clip_norm=clip_norm, state_bits=state_bits)
+        metrics = dict(metrics, **om, lr=lr)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return init_state, step
+
+
+def make_qlora_step(model, *, lr_fn, clip_norm=1.0, remat=False,
+                    label_smoothing=None, ctx: Optional[Ctx] = None):
+    """QLoRA finetune step: grads/updates on adapters only (paper §III)."""
+    ctx = ctx or Ctx()
+
+    def init_state(qparams):
+        adapters = extract_adapters(qparams)
+        return {"adapters": adapters,
+                "opt": adamw_init(adapters, state_bits=32)}
+
+    def step(state, qparams, batch):
+        def loss_fn(adapters):
+            p = inject_adapters(qparams, adapters)
+            return compute_loss(ctx, model, p, batch, remat=remat,
+                                label_smoothing=label_smoothing)
+
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["adapters"])
+        lr = lr_fn(state["opt"]["step"])
+        new_ad, new_opt, om = adamw_update(
+            grads, state["opt"], state["adapters"], lr=lr, weight_decay=0.0,
+            clip_norm=clip_norm)
+        return {"adapters": new_ad, "opt": new_opt}, dict(metrics, **om, lr=lr)
+
+    return init_state, step

@@ -1,0 +1,126 @@
+"""Serving correctness: prefill + decode_step == full teacher-forced forward.
+
+The strongest system invariant — exercises KV caches (dense + int8
+quantized), rolling buffers, recurrent states, cross-attention caches and
+dropless-MoE decode across every architecture family.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import REGISTRY, reduce_config
+from repro.models import Ctx, build_model
+
+CTX = Ctx(compute_dtype=jnp.float32)
+B, S_FULL, S_PREF = 2, 12, 8
+
+
+def _setup(name):
+    rc = reduce_config(REGISTRY[name])
+    if rc.moe is not None:  # large capacity: no train/serve routing drops
+        rc = dataclasses.replace(
+            rc, moe=dataclasses.replace(rc.moe, capacity_factor=8.0))
+    model = build_model(rc)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S_FULL), 0,
+                              rc.vocab_size)
+    if rc.family == "audio":
+        extra = {"frames": 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (B, rc.enc_len, rc.d_model))}
+        tkey = "tgt_in"
+    elif rc.family == "encdec":
+        extra = {"src_tokens": jax.random.randint(
+            jax.random.PRNGKey(3), (B, rc.enc_len), 0, rc.vocab_size)}
+        tkey = "tgt_in"
+    else:
+        extra = {}
+        tkey = "tokens"
+    return rc, model, params, toks, extra, tkey
+
+
+def _max_err(model, params, toks, extra, tkey, kv_dtype):
+    full, _ = model.forward(CTX, params, {tkey: toks, **extra})
+    cache = model.init_cache(B, 16, kv_dtype)
+    cache, lg = model.prefill(CTX, params, cache,
+                              {tkey: toks[:, :S_PREF], **extra})
+    errs = [float(jnp.max(jnp.abs(lg[:, -1] - full[:, S_PREF - 1])))]
+    for t in range(S_PREF, S_FULL):
+        cache, lg = model.decode_step(CTX, params, toks[:, t:t + 1], cache)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    return max(errs)
+
+
+@pytest.mark.parametrize("arch", list(REGISTRY))
+def test_decode_matches_forward(arch):
+    rc, model, params, toks, extra, tkey = _setup(arch)
+    kv = "bf16" if rc.family in ("ssm", "hybrid") else "f32"
+    # bf16 cross-attn caches (enc-dec) round at ~1e-3 on random-init logits
+    assert _max_err(model, params, toks, extra, tkey, kv) < 5e-3
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "gemma3-1b", "nllb600m"])
+def test_decode_with_int8_kv_cache(arch):
+    """Paper technique on the KV cache: small, bounded degradation."""
+    rc, model, params, toks, extra, tkey = _setup(arch)
+    err = _max_err(model, params, toks, extra, tkey, "int8")
+    assert err < 0.15, err   # int8 KV noise, still tracks full forward
+
+
+def test_long_prompt_rolling_buffer_hybrid():
+    """recurrentgemma: prompt longer than the local window stays exact."""
+    rc = reduce_config(REGISTRY["recurrentgemma-9b"])
+    model = build_model(rc)
+    params = model.init(jax.random.PRNGKey(0))
+    S = 3 * rc.local_window       # prompt >> window
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 2), 0,
+                              rc.vocab_size)
+    full, _ = model.forward(CTX, params, {"tokens": toks})
+    cache = model.init_cache(B, S + 2, "bf16")
+    cache, lg = model.prefill(CTX, params, cache, {"tokens": toks[:, :S]})
+    errs = [float(jnp.max(jnp.abs(lg[:, -1] - full[:, S - 1])))]
+    for t in range(S, S + 2):
+        cache, lg = model.decode_step(CTX, params, toks[:, t:t + 1], cache)
+        errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full[:, t]))))
+    assert max(errs) < 5e-3, errs
+
+
+def test_decode_with_fp8_kv_cache():
+    """fp8(e4m3)+scale KV storage tracks the full forward.
+
+    e4m3 carries a 3-bit mantissa vs int8's ~7 effective bits under
+    per-(token, head) scaling, so its logit error is ~2.4x int8's
+    (measured: 0.10 vs 0.042 on this config) — bounded, not exact.
+    """
+    rc, model, params, toks, extra, tkey = _setup("qwen2.5-14b")
+    err = _max_err(model, params, toks, extra, tkey, "fp8")
+    assert err < 0.25, err
+
+
+def test_grouped_remat_scan_matches_plain():
+    """Two-level remat scan is a pure memory optimization: same math."""
+    import jax
+    import numpy as np
+    from repro.models.transformer import grouped_scan
+
+    def body(c, w):
+        return jnp.tanh(c @ w), jnp.sum(c)
+
+    ws = jax.random.normal(jax.random.PRNGKey(0), (6, 8, 8)) * 0.5
+    c0 = jax.random.normal(jax.random.PRNGKey(1), (4, 8))
+
+    def loss(c0, remat, groups):
+        c, ys = grouped_scan(body, c0, ws, 6, remat=remat, groups=groups)
+        return jnp.sum(c ** 2) + jnp.sum(ys), ys
+
+    for groups in (2, 3):
+        (l0, ys0), g0 = jax.value_and_grad(
+            lambda c: loss(c, False, 1), has_aux=True)(c0)
+        (l1, ys1), g1 = jax.value_and_grad(
+            lambda c: loss(c, True, groups), has_aux=True)(c0)
+        np.testing.assert_allclose(float(l0), float(l1), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(ys0), np.asarray(ys1),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(g0), np.asarray(g1), rtol=1e-5)

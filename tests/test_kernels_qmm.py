@@ -1,0 +1,61 @@
+"""qmm Pallas kernel vs pure-jnp oracle: shape/dtype/format sweep."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QTensor
+from repro.kernels import ops, ref
+
+
+def _case(m, k, n, fmt, block, seed=0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32) * 0.05
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    qt = QTensor.quantize(w, fmt, block_size=block)
+    y = ops.qmm(x, qt, compute_dtype=jnp.float32)
+    yr = ref.qmm_ref(x, qt.data, qt.block_scales(), fmt)
+    rel = float(jnp.linalg.norm(y - yr) / (jnp.linalg.norm(yr) + 1e-9))
+    return rel
+
+
+@pytest.mark.parametrize("fmt", ["int4", "fp4", "nf4", "int8"])
+@pytest.mark.parametrize("m,k,n,block", [
+    (8, 128, 64, 32),
+    (48, 256, 128, 64),
+    (1, 64, 96, 16),       # decode-like single row
+    (130, 512, 256, 128),  # M not tile-aligned -> padding path
+])
+def test_qmm_matches_oracle(fmt, m, k, n, block):
+    # bf16 MXU vs f32 oracle: tolerance covers bf16 mantissa rounding
+    assert _case(m, k, n, fmt, block) < 6e-3
+
+
+def test_qmm_batched_input_reshape():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.standard_normal((128, 64)), jnp.float32) * 0.05
+    qt = QTensor.quantize(w, "int4", 32)
+    x = jnp.asarray(rng.standard_normal((2, 3, 128)), jnp.float32)
+    y = ops.qmm(x, qt, compute_dtype=jnp.float32)
+    assert y.shape == (2, 3, 64)
+    yr = ref.qmm_ref(x.reshape(-1, 128), qt.data, qt.block_scales(), "int4")
+    assert float(jnp.linalg.norm(y.reshape(-1, 64) - yr)
+                 / jnp.linalg.norm(yr)) < 6e-3
+
+
+def test_qmm_whole_dim_block():
+    """block_size > K falls back to one block per column."""
+    assert _case(16, 96, 32, "int8", 0) < 6e-3
+
+
+def test_qlinear_pallas_path_matches_xla_path():
+    from repro.core.qlinear import qmatmul
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32) * 0.03
+    x = jnp.asarray(rng.standard_normal((8, 256)), jnp.float32)
+    qt = QTensor.quantize(w, "nf4", 64)
+    y_xla = qmatmul(x, qt, compute_dtype=jnp.float32, impl="xla")
+    y_pl = qmatmul(x, qt, compute_dtype=jnp.float32, impl="pallas")
+    assert float(jnp.max(jnp.abs(y_xla - y_pl))) < 0.05 * float(
+        jnp.max(jnp.abs(y_xla)) + 1e-9)

@@ -1,0 +1,122 @@
+"""Property tests for the blockwise quantization core (hypothesis)."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import QTensor, quantize_blockwise, dequantize_blockwise
+from repro.core.formats import (get_format, nibble_from_signed, pack_nibbles,
+                                signed_from_nibble, unpack_nibbles)
+from repro.core.quantize import dequantize_scales, quantize_scales
+
+FMTS = ["int4", "fp4", "nf4", "int8", "fp8"]
+# worst-case relative block error bounds (absmax-normalized grids)
+ERR_BOUND = {"int4": 1 / 7, "fp4": 0.26, "nf4": 0.18, "int8": 1 / 127,
+             "fp8": 0.07}
+
+
+@st.composite
+def weight_case(draw):
+    k = draw(st.sampled_from([16, 32, 64, 128]))
+    n = draw(st.sampled_from([8, 24, 64]))
+    block = draw(st.sampled_from([8, 16, 32, 0]))   # 0 -> whole-dim block
+    fmt = draw(st.sampled_from(FMTS))
+    seed = draw(st.integers(0, 2 ** 16))
+    scale = draw(st.sampled_from([1e-3, 0.05, 1.0, 40.0]))
+    return k, n, block, fmt, seed, scale
+
+
+@settings(max_examples=40, deadline=None)
+@given(weight_case())
+def test_roundtrip_error_bound(case):
+    """|dequant(quant(w)) - w| <= bound * blockwise absmax."""
+    k, n, block, fmt, seed, scale = case
+    w = np.random.default_rng(seed).standard_normal((k, n)).astype(np.float32)
+    w *= scale
+    codes, scales = quantize_blockwise(jnp.asarray(w), fmt, block, q_axis=-2)
+    deq = np.asarray(dequantize_blockwise(codes, scales, fmt, q_axis=-2,
+                                          out_dtype=jnp.float32))
+    f = get_format(fmt)
+    nb = scales.shape[-2]
+    wb = w.reshape(nb, k // nb, n)
+    absmax = np.abs(wb).max(axis=1, keepdims=True)
+    bound = ERR_BOUND[fmt] * absmax + 1e-12
+    err = np.abs(deq.reshape(nb, k // nb, n) - wb)
+    assert (err <= bound + 1e-6).all(), (fmt, err.max(), bound.min())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 16), st.sampled_from([(6, 16), (4, 32), (2, 8, 16)]))
+def test_pack_unpack_inverse(seed, shape):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(-8, 8, size=shape).astype(np.int8)
+    nib = nibble_from_signed(jnp.asarray(vals))
+    packed = pack_nibbles(nib, axis=-2)
+    back = signed_from_nibble(unpack_nibbles(packed, axis=-2))
+    np.testing.assert_array_equal(np.asarray(back), vals)
+
+
+def test_zero_weights_roundtrip():
+    w = jnp.zeros((32, 8))
+    for fmt in FMTS:
+        qt = QTensor.quantize(w, fmt, block_size=16)
+        np.testing.assert_allclose(np.asarray(qt.dequantize(jnp.float32)), 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 16))
+def test_double_quant_scales(seed):
+    scales = np.abs(np.random.default_rng(seed).standard_normal(
+        (37, 11)).astype(np.float32)) * 0.1
+    q = quantize_scales(jnp.asarray(scales))
+    back = np.asarray(dequantize_scales(*q))
+    # int8 over a mean-centred grid: 1% of the chunk dynamic range
+    assert np.abs(back - scales).max() <= 0.02 * scales.max() + 1e-6
+
+
+def test_scale_equivariance():
+    """quant is scale-equivariant: dequant(quant(c*w)) ~= c*dequant(quant(w))."""
+    w = np.random.default_rng(0).standard_normal((64, 16)).astype(np.float32)
+    for fmt in ["int4", "nf4", "int8"]:
+        a = QTensor.quantize(jnp.asarray(w), fmt, 16).dequantize(jnp.float32)
+        b = QTensor.quantize(jnp.asarray(4.0 * w), fmt, 16).dequantize(jnp.float32)
+        np.testing.assert_allclose(np.asarray(b), 4.0 * np.asarray(a),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_axis_quant():
+    emb = np.random.default_rng(1).standard_normal((40, 32)).astype(np.float32)
+    qt = QTensor.quantize(jnp.asarray(emb), "int8", 16, q_axis=-1)
+    from repro.core import embed_lookup
+    ids = jnp.asarray([0, 7, 39])
+    got = np.asarray(embed_lookup(qt, ids, jnp.float32))
+    assert np.abs(got - emb[[0, 7, 39]]).max() < 0.02 * np.abs(emb).max()
+
+
+def test_qtensor_pytree_roundtrip():
+    w = jnp.asarray(np.random.default_rng(2).standard_normal((32, 16)),
+                    dtype=jnp.float32)
+    qt = QTensor.quantize(w, "nf4", 16, double_quant=True)
+    leaves, treedef = jax.tree_util.tree_flatten(qt)
+    qt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(np.asarray(qt2.dequantize(jnp.float32)),
+                                  np.asarray(qt.dequantize(jnp.float32)))
+
+
+def test_policy_presets_quantize_tree():
+    from repro.core import PRESETS, quantize_tree, tree_nbytes
+    params = {"layers": {"attn": {"wq": jnp.ones((64, 64))},
+                         "norm1_scale": jnp.ones((64,))},
+              "embedding": jnp.ones((128, 64))}
+    base = tree_nbytes(jax.tree.map(lambda x: x.astype(jnp.float32), params))
+    for name in ["int4", "fp4", "nf4", "int8", "fp8", "w8a8"]:
+        qp = quantize_tree(params, PRESETS[name])
+        assert tree_nbytes(qp) < base, name
+        from repro.core import QTensor as QT
+        assert isinstance(qp["layers"]["attn"]["wq"], QT)
+        assert not isinstance(qp["layers"]["norm1_scale"], QT)
+    q4 = quantize_tree(params, PRESETS["int4"])
+    assert tree_nbytes(q4) < base / 3.5  # int4 weights + int8 embeddings

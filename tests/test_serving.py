@@ -1,0 +1,88 @@
+"""Serving engine: greedy generation, translation API, continuous batching."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, reduce_config
+from repro.data import LANG_CODES
+from repro.models import Ctx, build_model
+from repro.serving import ServeEngine, greedy_generate, translate
+
+CTX = Ctx(compute_dtype=jnp.float32)
+
+
+def _lm(name="gemma3-1b"):
+    rc = reduce_config(REGISTRY[name])
+    model = build_model(rc)
+    params = model.init(jax.random.PRNGKey(0))
+    return rc, model, params
+
+
+def test_greedy_generate_deterministic():
+    rc, model, params = _lm()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, rc.vocab_size)
+    out1, _ = greedy_generate(model, CTX, params, {"tokens": toks}, steps=5,
+                              max_len=16)
+    out2, _ = greedy_generate(model, CTX, params, {"tokens": toks}, steps=5,
+                              max_len=16)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.shape == (2, 5)
+
+
+def test_translate_api_shapes():
+    rc = reduce_config(REGISTRY["nllb600m"])
+    model = build_model(rc)
+    params = model.init(jax.random.PRNGKey(0))
+    src = jax.random.randint(jax.random.PRNGKey(1), (3, rc.enc_len), 0,
+                             rc.vocab_size)
+    toks = translate(model, CTX, params, src, LANG_CODES["ita"], steps=6,
+                     max_len=16)
+    assert toks.shape == (3, 6)
+    assert int(toks.min()) >= 0 and int(toks.max()) < rc.vocab_size
+
+
+def test_int8_kv_generation_tracks_bf16():
+    rc, model, params = _lm("qwen2.5-14b")
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, rc.vocab_size)
+    g16, _ = greedy_generate(model, CTX, params, {"tokens": toks}, steps=4,
+                             max_len=16, kv_dtype="bf16")
+    g8, _ = greedy_generate(model, CTX, params, {"tokens": toks}, steps=4,
+                            max_len=16, kv_dtype="int8")
+    # argmax ids may deviate eventually; first step must agree on a
+    # random-init model with typical logit gaps
+    assert int(g16[0, 0]) == int(g8[0, 0])
+
+
+def test_continuous_batching_matches_single_stream():
+    rc, model, params = _lm()
+    eng = ServeEngine(model, params, slots=3, max_len=24, ctx=CTX)
+    p1 = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, rc.vocab_size)
+    p2 = jax.random.randint(jax.random.PRNGKey(2), (1, 4), 0, rc.vocab_size)
+    s1 = eng.add_request({"tokens": p1}, gen_tokens=5)
+    s2 = eng.add_request({"tokens": p2}, gen_tokens=5)
+    while eng.slots[s1].active or eng.slots[s2].active:
+        eng.tick()
+    ref1, _ = greedy_generate(model, CTX, params, {"tokens": p1}, steps=5,
+                              max_len=24)
+    ref2, _ = greedy_generate(model, CTX, params, {"tokens": p2}, steps=5,
+                              max_len=24)
+    assert eng.result(s1) == list(np.asarray(ref1[0]))
+    assert eng.result(s2) == list(np.asarray(ref2[0]))
+
+
+def test_slot_reuse_after_completion():
+    rc, model, params = _lm()
+    eng = ServeEngine(model, params, slots=1, max_len=16, ctx=CTX)
+    p = jax.random.randint(jax.random.PRNGKey(3), (1, 4), 0, rc.vocab_size)
+    s = eng.add_request({"tokens": p}, gen_tokens=2)
+    while eng.slots[s].active:
+        eng.tick()
+    assert eng.free_slot() == s          # slot released
+    s2 = eng.add_request({"tokens": p}, gen_tokens=2)
+    while eng.slots[s2].active:
+        eng.tick()
+    assert eng.result(s2) == eng.result(s)   # cache fully re-primed

@@ -1,0 +1,117 @@
+"""End-to-end training integration: losses actually decrease.
+
+The paper's system claim is a single many-to-many NMT model driven by
+target-language codes; the NLLB integration test trains the reduced model
+on the synthetic permutation-translation task and checks learning across
+two language directions (translation knowledge transfer, §I).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, reduce_config
+from repro.data import SyntheticLM, SyntheticTranslation
+from repro.models import Ctx, build_model
+from repro.optim import warmup_linear
+from repro.train import make_train_step
+
+CTX = Ctx(compute_dtype=jnp.float32)
+
+
+def _train(model, batches, steps, lr=3e-2, **kw):
+    init_state, step = make_train_step(
+        model, lr_fn=lambda s: warmup_linear(s, peak_lr=lr, warmup=5,
+                                             total=steps), ctx=CTX, **kw)
+    state = init_state(model.init(jax.random.PRNGKey(0)))
+    step = jax.jit(step)
+    losses = []
+    for _ in range(steps):
+        state, m = step(state, next(batches))
+        losses.append(float(m["loss"]))
+    return losses, state
+
+
+def test_nllb_translation_loss_decreases():
+    rc = reduce_config(REGISTRY["nllb600m"])
+    model = build_model(rc)
+    ds = SyntheticTranslation(rc.vocab_size, rc.enc_len, seed=0)
+
+    def batches():
+        while True:
+            yield {k: jnp.asarray(v) for k, v in ds.sample(16).items()
+                   if not isinstance(v, str)}
+
+    # measured on this config: ~0.78 ratio at 60 steps (tiny 2+2-layer model
+    # on the permutation-translation task); assert clear learning w/ margin
+    losses, _ = _train(model, batches(), steps=60, lr=1e-2)
+    assert losses[-1] < 0.88 * losses[0], losses[::10]
+
+
+def test_lm_loss_decreases_with_microbatching_and_remat():
+    rc = reduce_config(REGISTRY["qwen2.5-14b"])
+    model = build_model(rc)
+    ds = SyntheticLM(rc.vocab_size, 24, seed=0)
+
+    def batches():
+        while True:
+            yield {"tokens": jnp.asarray(ds.sample(8)["tokens"])}
+
+    losses, _ = _train(model, batches(), steps=25, microbatches=2, remat=True)
+    assert losses[-1] < 0.85 * losses[0], losses[::5]
+
+
+def test_moe_train_balances_experts():
+    import dataclasses
+    rc = reduce_config(REGISTRY["olmoe-1b-7b"])
+    rc = dataclasses.replace(
+        rc, moe=dataclasses.replace(rc.moe, aux_loss_weight=0.5))
+    model = build_model(rc)
+    ds = SyntheticLM(rc.vocab_size, 16, seed=0)
+
+    def batches():
+        while True:
+            yield {"tokens": jnp.asarray(ds.sample(8)["tokens"])}
+
+    init_state, step = make_train_step(model, lr_fn=lambda s: 1e-2, ctx=CTX)
+    state = init_state(model.init(jax.random.PRNGKey(0)))
+    step = jax.jit(step)
+    auxes = []
+    for _ in range(25):
+        state, m = step(state, next(batches()))
+        auxes.append(float(m["aux_loss"]))
+    assert all(np.isfinite(auxes))
+    # with a strong weight the load-balancing loss is driven down toward
+    # the uniform value (1.0) instead of collapsing toward E=4
+    # (measured: 2.67 -> ~2.08 in 25 steps on this config)
+    assert auxes[-1] < 0.85 * auxes[0], (auxes[0], auxes[-1])
+
+
+def test_8bit_optimizer_trains():
+    rc = reduce_config(REGISTRY["gemma3-1b"])
+    model = build_model(rc)
+    ds = SyntheticLM(rc.vocab_size, 16, seed=0)
+
+    def batches():
+        while True:
+            yield {"tokens": jnp.asarray(ds.sample(8)["tokens"])}
+
+    losses, _ = _train(model, batches(), steps=20, state_bits=8)
+    assert losses[-1] < 0.9 * losses[0], losses[::4]
+
+
+def test_bf16_params_with_master_weights_train():
+    rc = reduce_config(REGISTRY["internlm2-20b"])
+    model = build_model(rc)
+    ds = SyntheticLM(rc.vocab_size, 16, seed=0)
+
+    def batches():
+        while True:
+            yield {"tokens": jnp.asarray(ds.sample(8)["tokens"])}
+
+    losses, state = _train(model, batches(), steps=20,
+                           param_dtype=jnp.bfloat16)
+    assert losses[-1] < 0.9 * losses[0], losses[::4]
+    assert state["params"]["embedding"].dtype == jnp.bfloat16
+    assert state["opt"]["master"]["embedding"].dtype == jnp.float32
