@@ -16,9 +16,9 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.configs import REGISTRY, SHAPES, reduce_config
-from repro.core import PRESETS, quantize_tree
-from repro.models import Ctx, build_model
+from repro.configs import SHAPES
+from repro.models import Ctx
+from repro.serving import SamplingParams, deploy
 
 from .common import csv_row, time_fn
 
@@ -40,19 +40,13 @@ def projected_from_dryrun():
 def measured_reduced():
     ctx = Ctx(compute_dtype=jnp.float32)
     for arch in ("qwen2.5-14b", "moonshot-v1-16b-a3b", "mamba2-780m"):
-        rc = reduce_config(REGISTRY[arch])
-        model = build_model(rc)
-        params = model.init(jax.random.PRNGKey(0))
         for pol in ("bf16", "int4"):
-            p = params if pol == "bf16" else quantize_tree(params,
-                                                           PRESETS[pol])
-            kv = "bf16" if pol == "bf16" else PRESETS[pol].kv_cache
-            cache = model.init_cache(8, 64, kv)
-            cache, _ = model.prefill(ctx, p, cache,
-                                     {"tokens": jnp.ones((8, 32), jnp.int32)})
-            tok = jnp.ones((8, 1), jnp.int32)
-            f = jax.jit(lambda pp, t, c: model.decode_step(ctx, pp, t, c)[1])
-            us = time_fn(f, p, tok, cache, iters=5)
+            pipe = deploy(arch, pol, slots=8, max_len=64, smoke=True, ctx=ctx)
+            eng = pipe.engine
+            for i in range(8):     # fill every slot, then time the fused step
+                eng.submit({"tokens": jnp.ones((1, 32), jnp.int32)},
+                           SamplingParams(max_new_tokens=64 - 32))
+            us = time_fn(eng.step, iters=5)
             csv_row(f"tableIV_cpu_{arch}_{pol}", us,
                     f"host_tok_s={8e6/us:.1f}")
 

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   tableIII_*  — paper Table III (FASST NAF unit per function)
   tableIV_*   — paper Table IV (end-to-end accelerator throughput)
   roofline_*  — per (arch x shape) roofline bound from the dry-run records
+  serve_*     — request-level engine tok/s per weight policy
 """
 
 from __future__ import annotations
@@ -17,9 +18,9 @@ import traceback
 def main() -> None:
     print("name,us_per_call,derived")
     from . import (bench_fasst, bench_qmm, bench_quant_formats,
-                   bench_throughput, roofline)
+                   bench_serving, bench_throughput, roofline)
     for mod in (bench_quant_formats, bench_qmm, bench_fasst,
-                bench_throughput, roofline):
+                bench_throughput, bench_serving, roofline):
         try:
             mod.run()
         except Exception:

@@ -11,11 +11,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import REGISTRY, reduce_config
-from repro.core import PRESETS, quantize_tree, tree_nbytes
-from repro.data import LANG_CODES, SyntheticTranslation
+from repro.data import SyntheticTranslation
 from repro.models import Ctx, build_model
 from repro.optim import warmup_linear
-from repro.serving import translate
+from repro.serving import SamplingParams, deploy
 from repro.train import make_train_step
 
 ctx = Ctx(compute_dtype=jnp.float32)
@@ -39,16 +38,14 @@ for i in range(STEPS):
         print(f"step {i:3d}  loss {float(metrics['loss']):.3f}")
 params = state["params"]
 
-# --- quantize (paper: BitsAndBytes-style blockwise PTQ) ----------------
-fp_bytes = tree_nbytes(params)
-qparams = quantize_tree(params, PRESETS["int4"])
-print(f"\nmodel size: {fp_bytes/2**20:.2f} MB -> "
-      f"{tree_nbytes(qparams)/2**20:.2f} MB "
-      f"({fp_bytes/tree_nbytes(qparams):.1f}x reduction; paper: 4.1x)")
+# --- deploy (paper: BitsAndBytes-style blockwise PTQ to INT4) ----------
+pipe = deploy(cfg, "int4", slots=2, max_len=16, params=params, ctx=ctx)
+print(f"\nmodel size: {pipe.fp_bytes/2**20:.2f} MB -> "
+      f"{pipe.quantized_bytes/2**20:.2f} MB "
+      f"({pipe.compression:.1f}x reduction; paper: 4.1x)")
 
 # --- translate (one model, many directions: paper Fig. 2b) -------------
 src = jnp.asarray(ds.sample(2)["src_tokens"])
 for lang in ("ita", "hin"):
-    out = translate(model, ctx, qparams, src, LANG_CODES[lang], steps=6,
-                    max_len=16, kv_dtype="int8")
-    print(f"-> {lang}: {out.tolist()}")
+    outs = pipe.translate(src, lang, SamplingParams(max_new_tokens=6))
+    print(f"-> {lang}: {[o.token_ids for o in outs]}")

@@ -1,48 +1,42 @@
 """Continuous-batching quantized serving (the paper's deployment mode).
 
-An INT4-weight / INT8-KV ServeEngine handles interleaved requests in
-fixed batch slots — the TPU analogue of the paper's real-time FPGA
-translation node.
+One deploy() call stands up an INT4-weight / INT8-KV pipeline — the TPU
+analogue of the paper's real-time FPGA translation node. The engine owns
+admission and slot scheduling: we submit 8 requests with *mixed*
+per-request SamplingParams (greedy next to seeded nucleus sampling, all
+served by one compiled step function) and drain.
 
     PYTHONPATH=src python examples/serve_multilingual.py
 """
 
 import time
 
-import jax
 import jax.numpy as jnp
 
-from repro.configs import REGISTRY, reduce_config
-from repro.core import PRESETS, quantize_tree
 from repro.data import LANG_CODES, SyntheticTranslation
-from repro.models import Ctx, build_model
-from repro.serving import ServeEngine
+from repro.serving import SamplingParams, deploy
 
-ctx = Ctx(compute_dtype=jnp.float32)
-cfg = reduce_config(REGISTRY["nllb600m"])
-model = build_model(cfg)
-params = quantize_tree(model.init(jax.random.PRNGKey(0)), PRESETS["int4"])
-
-eng = ServeEngine(model, params, slots=4, max_len=32, kv_dtype="int8",
-                  ctx=ctx)
-ds = SyntheticTranslation(cfg.vocab_size, 12, seed=0)
+pipe = deploy("nllb600m", "int4", slots=4, max_len=32, smoke=True)
+print(f"deployed nllb600m @ int4: {pipe.fp_bytes/2**20:.2f} MB -> "
+      f"{pipe.quantized_bytes/2**20:.2f} MB ({pipe.compression:.1f}x)")
+ds = SyntheticTranslation(pipe.cfg.vocab_size, pipe.cfg.enc_len, seed=0)
 
 t0 = time.perf_counter()
-queue = []
 for rid in range(8):
     b = ds.sample(1)
-    queue.append((rid, {"src_tokens": jnp.asarray(b["src_tokens"]),
-                        "tgt_in": jnp.asarray([[LANG_CODES[b["tgt_lang"]]]])}))
+    req = {"src_tokens": jnp.asarray(b["src_tokens"]),
+           "tgt_in": jnp.asarray([[LANG_CODES[b["tgt_lang"]]]])}
+    sp = (SamplingParams(max_new_tokens=6) if rid % 2 == 0 else
+          SamplingParams(temperature=0.8, top_p=0.9, max_new_tokens=6,
+                         seed=rid))
+    pipe.engine.submit(req, sp)
 
-inflight, served = {}, 0
-while queue or inflight:
-    while queue and eng.free_slot() is not None:
-        rid, req = queue.pop(0)
-        inflight[eng.add_request(req, gen_tokens=6)] = rid
-    for slot in eng.tick():
-        rid = inflight.pop(slot)
-        print(f"request {rid} (slot {slot}): {eng.result(slot)}")
-        served += len(eng.result(slot))
+served = 0
+for o in sorted(pipe.engine.run_until_drained(), key=lambda o: o.request_id):
+    mode = "greedy" if o.request_id % 2 == 0 else "top-p "
+    print(f"request {o.request_id} ({mode}, slot {o.slot}, "
+          f"{o.finish_reason}): {o.token_ids}")
+    served += o.num_generated
 dt = time.perf_counter() - t0
 print(f"\n8 requests, {served} tokens in {dt:.2f}s "
       f"({served/dt:.1f} tok/s on this host)")

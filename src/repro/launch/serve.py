@@ -1,7 +1,11 @@
 """Serving launcher (the paper's deployment mode: quantized NMT inference).
 
+One deploy() call builds the quantized pipeline; the scheduler-owned
+engine handles admission and slot scheduling internally — the launcher
+just submits requests and drains.
+
   PYTHONPATH=src python -m repro.launch.serve --arch nllb600m --smoke \
-      --policy int4 --requests 6 --gen 8
+      --policy int4 --requests 6 --gen 8 --temperature 0.7 --top-p 0.9
 """
 
 from __future__ import annotations
@@ -11,13 +15,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..configs import REGISTRY, get_config, reduce_config
-from ..core import PRESETS, quantize_tree, tree_nbytes
+from ..configs import REGISTRY
+from ..core import PRESETS
 from ..data import SyntheticTranslation
-from ..models import Ctx, build_model
-from ..serving import ServeEngine
+from ..serving import SamplingParams, deploy
 
 
 def main():
@@ -29,49 +31,52 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--eos-id", type=int, default=None)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = reduce_config(cfg)
-    model = build_model(cfg)
-    ctx = Ctx(compute_dtype=jnp.float32 if args.smoke else jnp.bfloat16)
-    params = model.init(jax.random.PRNGKey(0))
-    base = tree_nbytes(params)
-    if args.policy not in ("f32",):
-        params = quantize_tree(params, PRESETS[args.policy])
-    print(f"model bytes {base/2**20:.1f} MB -> {tree_nbytes(params)/2**20:.1f}"
-          f" MB ({args.policy}, {base/max(tree_nbytes(params),1):.2f}x)")
+    pipe = deploy(args.arch, args.policy, slots=args.slots,
+                  max_len=args.max_len, smoke=args.smoke)
+    print(f"model bytes {pipe.fp_bytes/2**20:.1f} MB -> "
+          f"{pipe.quantized_bytes/2**20:.1f} MB "
+          f"({args.policy}, {pipe.compression:.2f}x)")
 
-    kv = PRESETS[args.policy].kv_cache
-    eng = ServeEngine(model, params, slots=args.slots, max_len=args.max_len,
-                      kv_dtype=kv, ctx=ctx)
-    ds = SyntheticTranslation(cfg.vocab_size, min(16, args.max_len - args.gen),
+    cfg = pipe.cfg
+    # source length must match the engine's fixed cross-cache (enc_len);
+    # the decoder budget (1-token lang-code prompt + gen) is independent
+    ds = SyntheticTranslation(cfg.vocab_size, cfg.enc_len,
                               seed=0) if cfg.family in ("encdec",) else None
 
-    pending = args.requests
-    done_tokens = 0
     t0 = time.perf_counter()
-    results = {}
-    while pending > 0 or any(s.active for s in eng.slots):
-        while pending > 0 and eng.free_slot() is not None:
-            if ds is not None:
-                b = ds.sample(1)
-                req = {"src_tokens": jnp.asarray(b["src_tokens"]),
-                       "tgt_in": jnp.asarray(b["tgt_in"][:, :1])}
-            else:
-                req = {"tokens": jax.random.randint(
-                    jax.random.PRNGKey(pending), (1, 8), 0, cfg.vocab_size)}
-            slot = eng.add_request(req, gen_tokens=args.gen)
-            print(f"[req {pending}] -> slot {slot}")
-            pending -= 1
-        for slot in eng.tick():
-            results[slot] = eng.result(slot)
-            done_tokens += len(results[slot])
-            print(f"[slot {slot}] done: {results[slot]}")
+    for i in range(args.requests):
+        sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                            top_p=args.top_p, eos_id=args.eos_id,
+                            max_new_tokens=args.gen, seed=i)
+        if ds is not None:
+            b = ds.sample(1)
+            req = {"src_tokens": jnp.asarray(b["src_tokens"]),
+                   "tgt_in": jnp.asarray(b["tgt_in"][:, :1])}
+        else:
+            # vary prompt lengths: bucketing keeps compiles bounded
+            plen = 4 + (i % 4)
+            req = {"tokens": jax.random.randint(
+                jax.random.PRNGKey(i), (1, plen), 0, cfg.vocab_size)}
+        rid = pipe.engine.submit(req, sp)
+        print(f"[req {rid}] queued (pending={pipe.engine.num_pending}, "
+              f"active={pipe.engine.num_active})")
+
+    outs = pipe.engine.run_until_drained()
     dt = time.perf_counter() - t0
+    done_tokens = 0
+    for o in sorted(outs, key=lambda o: o.request_id):
+        done_tokens += o.num_generated
+        print(f"[req {o.request_id}] slot {o.slot} {o.finish_reason:6s} "
+              f"ttft {o.stats.ttft_s*1e3:6.1f} ms: {o.token_ids}")
     print(f"served {args.requests} requests, {done_tokens} tokens in "
-          f"{dt:.2f}s ({done_tokens/dt:.1f} tok/s host)")
+          f"{dt:.2f}s ({done_tokens/dt:.1f} tok/s host, "
+          f"{pipe.engine.prefill_compiles} prefill compiles)")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,16 @@
-from .engine import ServeEngine, greedy_generate, translate
+"""Serving: the request-level inference surface for the whole repo.
 
-__all__ = ["ServeEngine", "greedy_generate", "translate"]
+Canonical path:  deploy() -> TranslationPipeline -> SamplingParams /
+Request / RequestOutput, scheduled by the queue-owning ServeEngine
+(submit / step / run_until_drained). `greedy_generate` / `translate`
+remain as thin single-shot wrappers for legacy callers.
+"""
+
+from .engine import ServeEngine, greedy_generate, translate
+from .params import (GREEDY, Request, RequestOutput, RequestStats,
+                     SamplingParams)
+from .pipeline import TranslationPipeline, deploy
+
+__all__ = ["ServeEngine", "greedy_generate", "translate", "SamplingParams",
+           "GREEDY", "Request", "RequestOutput", "RequestStats",
+           "TranslationPipeline", "deploy"]

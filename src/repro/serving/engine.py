@@ -1,70 +1,77 @@
-"""Serving engine: batched prefill + decode with continuous batching.
+"""Scheduler-owned serving engine: request-level continuous batching.
 
-The paper's deployment is real-time translation on edge FPGAs; the TPU
-counterpart is a batched decode loop over a (possibly int8-quantized) KV
-cache. Slots model continuous batching: each sequence in the fixed batch
-is an independent request slot with its own length; finished slots are
-re-primed with new requests without recompiling (per-seq `len`/`pos`
-masking makes ragged batches correct by construction).
+The paper's deployment is real-time quantized translation; the TPU
+counterpart is a fixed-slot continuous-batching decode loop over a
+(possibly int8-quantized) KV cache. This module owns the whole serving
+loop — admission queue, slot scheduling, prefill, fused sampling, and
+EOS-aware retirement — behind three calls:
+
+    rid  = engine.submit(inputs, SamplingParams(...))   # enqueue
+    outs = engine.step()          # admit + one batched decode step
+    outs = engine.run_until_drained()                   # serve everything
+
+Design notes:
+  * One jitted fused decode+sample step serves every slot each tick;
+    per-slot SamplingParams enter as traced arrays, so greedy and
+    nucleus-sampled requests share a single executable (see sampler.py).
+  * Single-request prefills are padded to a small set of bucket lengths
+    (powers of two up to ``max_len``) with per-sequence ``lengths``
+    masking, so distinct prompt lengths stop triggering fresh XLA
+    compiles; ``engine.prefill_compiles`` counts distinct compiled
+    prefill shapes. (SSM/hybrid state caches have no position masking,
+    so those families prefill at exact lengths.)
+  * Slots retire as soon as their request emits ``eos_id`` or reaches
+    ``max_new_tokens``; idle slots decode into masked positions (their
+    ``len`` stays put) at negligible cost relative to the batched step.
+
+``greedy_generate`` / ``translate`` remain as thin wrappers over a
+single-shot engine so pre-request-API callers stay green.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Callable, List, Optional
+import time
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..models.layers import Ctx
+from .params import (GREEDY, Request, RequestOutput, RequestStats,
+                     SamplingParams)
+from .sampler import sample_tokens
 
 __all__ = ["ServeEngine", "greedy_generate", "translate"]
 
-
-def greedy_generate(model, ctx, params, batch, *, steps: int,
-                    max_len: int, kv_dtype: str = "bf16", eos_id: int = 0):
-    """Prefill + greedy decode. Returns (tokens (B, steps), cache)."""
-    tkey = "tgt_in" if model.cfg.family in ("encdec", "audio") else "tokens"
-    B = batch[tkey].shape[0]
-    cache = model.init_cache(B, max_len, kv_dtype)
-    cache, logits = model.prefill(ctx, params, cache, batch)
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    out = [tok]
-    for _ in range(steps - 1):
-        cache, logits = model.decode_step(ctx, params, tok, cache)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out.append(tok)
-    return jnp.concatenate(out, axis=1), cache
-
-
-def translate(model, ctx, params, src_tokens, lang_code: int, *,
-              steps: int, max_len: int = 0, kv_dtype: str = "bf16"):
-    """NMT entry point (paper Fig. 2b): many-to-many via target lang code."""
-    B = src_tokens.shape[0]
-    max_len = max_len or steps + 4
-    tgt_in = jnp.full((B, 1), lang_code, jnp.int32)
-    batch = {"src_tokens": src_tokens, "tgt_in": tgt_in}
-    toks, _ = greedy_generate(model, ctx, params, batch, steps=steps,
-                              max_len=max_len, kv_dtype=kv_dtype)
-    return toks
+# families safe to prefill right-padded: attention caches with pos/len
+# masking AND token-only prompts (vlm logits interleave image patches, so
+# the last-real-token index is not lengths-derived; ssm/hybrid recurrent
+# states would absorb pad tokens)
+_PAD_SAFE = ("dense", "moe", "encdec", "audio")
 
 
 @dataclasses.dataclass
 class _Slot:
     id: int
-    remaining: int = 0
     tokens: list = dataclasses.field(default_factory=list)
     active: bool = False
+    request: Optional[Request] = None
 
 
 class ServeEngine:
-    """Fixed-slot continuous-batching decode engine.
+    """Fixed-slot continuous-batching engine with an internal queue.
 
-    One jitted decode_step serves all slots every tick; idle slots decode
-    into masked positions (len stays put) at negligible cost relative to
-    the batched step. add_request() primes a slot via a single-slot
-    prefill and splices its cache into the batch cache.
+    submit() enqueues a request (admitting it immediately if a slot is
+    free); step() admits pending requests, runs one batched
+    decode+sample step, retires finished slots, and returns their
+    RequestOutputs; run_until_drained() loops step() until the queue
+    and all slots are empty.
+
+    The legacy slot-level surface (add_request / tick / result /
+    free_slot) is kept as a thin shim over the request API.
     """
 
     def __init__(self, model, params, *, slots: int, max_len: int,
@@ -74,17 +81,250 @@ class ServeEngine:
         self.ctx = ctx or Ctx()
         self.kv_dtype = kv_dtype
         self.max_len = max_len
+        self.n_slots = slots
         self.cache = model.init_cache(slots, max_len, kv_dtype)
         self.slots = [_Slot(i) for i in range(slots)]
         self.cur = jnp.zeros((slots, 1), jnp.int32)
-        self._decode = jax.jit(
-            lambda p, t, c: model.decode_step(self.ctx, p, t, c))
+        # per-slot sampling state — traced args of the fused step, so
+        # mixed SamplingParams across slots share one executable
+        self._temps = jnp.zeros((slots,), jnp.float32)
+        self._top_ks = jnp.zeros((slots,), jnp.int32)
+        self._top_ps = jnp.ones((slots,), jnp.float32)
+        self._keys = jnp.zeros((slots, 2), jnp.uint32)
+        self._offsets = jnp.zeros((slots,), jnp.int32)
+
+        self._queue: collections.deque = collections.deque()
+        self._finished: List[RequestOutput] = []
+        self._next_id = 0
+        self._stats: Dict[int, RequestStats] = {}
+        self._last_admitted_slot = -1
+
+        fam = model.cfg.family
+        self._tkey = "tgt_in" if fam in ("encdec", "audio") else "tokens"
+        self._bucketed = fam in _PAD_SAFE
+        self.prefill_shapes: set = set()
+        bucketed = self._bucketed
+
+        def _prefill(p, batch, length, temp, top_k, top_p, key):
+            one = model.init_cache(1, max_len, kv_dtype)
+            one, logits = model.prefill(self.ctx, p, one, batch)
+            # under bucketing the prompt is right-padded: the last real
+            # token sits at length-1, not at the end of the logits
+            last = logits[0, length - 1] if bucketed else logits[0, -1]
+            last = last.astype(jnp.float32)
+            tok = sample_tokens(last[None], temp[None], top_k[None],
+                                top_p[None], key[None],
+                                jnp.zeros((1,), jnp.int32))[0]
+            return one, tok
+
+        self._prefill_fn = jax.jit(_prefill)
+
+        def _step(p, cur, cache, temps, top_ks, top_ps, keys, offsets):
+            cache, logits = model.decode_step(self.ctx, p, cur, cache)
+            nxt = sample_tokens(logits[:, -1], temps, top_ks, top_ps,
+                                keys, offsets)
+            return cache, nxt
+
+        self._step_fn = jax.jit(_step)
+
+    # ------------------------------------------------------------------
+    # request API
+    # ------------------------------------------------------------------
+
+    def submit(self, request, params: Optional[SamplingParams] = None) -> int:
+        """Enqueue a request; returns its request id.
+
+        ``request`` is a Request or a B=1 model batch dict; ``params``
+        overrides the request's SamplingParams (default: greedy). The
+        request is admitted immediately when a slot is free, otherwise
+        it waits in the engine's queue until step() frees one.
+        """
+        if not isinstance(request, Request):
+            request = Request(inputs=dict(request), params=params or GREEDY)
+        elif params is not None:
+            request = dataclasses.replace(request, params=params)
+        toks = jnp.asarray(request.inputs[self._tkey])
+        if toks.ndim == 1:
+            toks = toks[None]
+        prompt_len = int(toks.shape[1])
+        budget = prompt_len + request.params.max_new_tokens
+        if budget > self.max_len:
+            raise ValueError(
+                f"request needs prompt_len + max_new_tokens = {prompt_len} + "
+                f"{request.params.max_new_tokens} = {budget} cache positions "
+                f"but the engine was built with max_len={self.max_len}; "
+                f"shorten the request or deploy with a larger max_len")
+        if "src_tokens" in request.inputs:
+            # the batch cache's cross-attention leaves are allocated at
+            # cfg.enc_len: a mismatched source length cannot be spliced
+            se = jnp.asarray(request.inputs["src_tokens"]).shape[-1]
+            if se != self.model.cfg.enc_len:
+                raise ValueError(
+                    f"src_tokens length {se} != cfg.enc_len "
+                    f"{self.model.cfg.enc_len}; the engine's cross-attention "
+                    f"cache is fixed-size — resize the source batch")
+        request = dataclasses.replace(
+            request, inputs={**request.inputs, self._tkey: toks},
+            id=self._next_id)
+        self._next_id += 1
+        self._stats[request.id] = RequestStats(
+            arrival_s=time.perf_counter(), prompt_len=prompt_len)
+        self._queue.append(request)
+        self._admit_pending()
+        return request.id
+
+    def step(self) -> List[RequestOutput]:
+        """Admit pending requests, run one batched decode step, and
+        return the RequestOutputs of every request finished this step."""
+        self._admit_pending()
+        if any(s.active for s in self.slots):
+            self.cache, nxt = self._step_fn(
+                self.params, self.cur, self.cache, self._temps,
+                self._top_ks, self._top_ps, self._keys, self._offsets)
+            self.cur = nxt[:, None]
+            self._offsets = self._offsets + 1
+            nxt_host = np.asarray(nxt)
+            for s in self.slots:
+                if not s.active:
+                    continue
+                s.tokens.append(int(nxt_host[s.id]))
+                self._maybe_retire(s)
+        out, self._finished = self._finished, []
+        return out
+
+    def run_until_drained(self, max_steps: int = 1_000_000
+                          ) -> List[RequestOutput]:
+        """Serve every queued/in-flight request; returns all outputs."""
+        outs: List[RequestOutput] = []
+        while self._queue or self._finished or any(s.active for s in self.slots):
+            outs.extend(self.step())
+            max_steps -= 1
+            if max_steps <= 0:
+                raise RuntimeError("run_until_drained did not converge")
+        return outs
+
+    def abort(self, request_id: int) -> Optional[RequestOutput]:
+        """Cancel a queued or in-flight request. Returns its output
+        (finish_reason 'abort') directly, or None if unknown."""
+        for i, r in enumerate(self._queue):
+            if r.id == request_id:
+                del self._queue[i]
+                st = self._stats.pop(request_id)
+                st.finished_s = st.first_token_s = time.perf_counter()
+                return RequestOutput(request_id, r.inputs, [], "abort", st)
+        for s in self.slots:
+            if s.active and s.request.id == request_id:
+                self._retire(s, "abort")
+                return self._finished.pop()
+        return None
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def num_active(self) -> int:
+        return sum(s.active for s in self.slots)
+
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill shapes compiled so far (bucketing keeps this
+        bounded by the bucket count, not the number of prompt lengths)."""
+        return len(self.prefill_shapes)
+
+    # ------------------------------------------------------------------
+    # legacy slot-level surface (kept for pre-request-API callers)
+    # ------------------------------------------------------------------
+
+    def add_request(self, batch_one: dict, gen_tokens: int) -> int:
+        """Legacy: greedy request into a free slot; returns the slot id."""
+        # queued work would claim the free slot first: admission wouldn't
+        # be synchronous, so the legacy contract can't be honoured
+        if self._queue or self.free_slot() is None:
+            raise RuntimeError("no free slots")
+        self.submit(batch_one, SamplingParams(max_new_tokens=gen_tokens))
+        return self._last_admitted_slot
+
+    def tick(self) -> List[int]:
+        """Legacy: one step; returns the slot ids finished this step."""
+        return [o.slot for o in self.step()]
+
+    def result(self, slot: int) -> list:
+        """Legacy: generated token ids of the request last served in
+        ``slot`` (also available on RequestOutput.token_ids)."""
+        return self.slots[slot].tokens
 
     def free_slot(self) -> Optional[int]:
         for s in self.slots:
             if not s.active:
                 return s.id
         return None
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+
+    def _bucket(self, n: int) -> int:
+        """Smallest power-of-two >= n, capped at max_len."""
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _admit_pending(self):
+        while self._queue and self.free_slot() is not None:
+            self._admit(self._queue.popleft())
+
+    def _admit(self, request: Request):
+        slot = self.free_slot()
+        s = self.slots[slot]
+        sp = request.params
+        inputs = dict(request.inputs)
+        toks = inputs[self._tkey]
+        true_len = toks.shape[1]
+        if self._bucketed:
+            pad_to = self._bucket(true_len)
+            if pad_to > true_len:
+                toks = jnp.pad(toks, ((0, 0), (0, pad_to - true_len)))
+            inputs[self._tkey] = toks
+            inputs["lengths"] = jnp.full((1,), true_len, jnp.int32)
+        key = jax.random.PRNGKey(sp.seed)
+        one_cache, tok = self._prefill_fn(
+            self.params, inputs, jnp.int32(true_len),
+            jnp.float32(sp.temperature), jnp.int32(sp.top_k),
+            jnp.float32(sp.top_p), key)
+        self.prefill_shapes.add(
+            tuple(sorted((k, tuple(v.shape)) for k, v in inputs.items())))
+        self.cache = self._splice(self.cache, one_cache, slot)
+        tok = int(tok)
+        self.cur = self.cur.at[slot, 0].set(tok)
+        self._temps = self._temps.at[slot].set(sp.temperature)
+        self._top_ks = self._top_ks.at[slot].set(sp.top_k)
+        self._top_ps = self._top_ps.at[slot].set(sp.top_p)
+        self._keys = self._keys.at[slot].set(key)
+        self._offsets = self._offsets.at[slot].set(1)  # token 0 drew fold 0
+        s.request = request
+        s.tokens = [tok]                # prefill produced the first token
+        s.active = True
+        self._last_admitted_slot = slot
+        self._stats[request.id].first_token_s = time.perf_counter()
+        self._maybe_retire(s)
+
+    def _maybe_retire(self, s: _Slot):
+        sp = s.request.params
+        if sp.eos_id is not None and s.tokens[-1] == sp.eos_id:
+            self._retire(s, "eos")
+        elif len(s.tokens) >= sp.max_new_tokens:
+            self._retire(s, "length")
+
+    def _retire(self, s: _Slot, reason: str):
+        rid = s.request.id
+        st = self._stats.pop(rid)
+        st.finished_s = time.perf_counter()
+        self._finished.append(RequestOutput(
+            rid, s.request.inputs, list(s.tokens), reason, st, slot=s.id))
+        s.active = False
+        s.request = None
 
     _BATCH_LEADING = ("'pos'", "'len'", "'pos_roll'")
 
@@ -98,43 +338,63 @@ class ServeEngine:
             pstr = jax.tree_util.keystr(path)
             if c.ndim == 0:
                 return c
+            o = o.astype(c.dtype)   # e.g. f32 prefill state into bf16 cache
             if any(k in pstr for k in self._BATCH_LEADING) or c.ndim == 1:
                 return c.at[slot].set(o[0])            # batch-leading leaf
             return c.at[:, slot].set(o[:, 0])          # layer-leading leaf
         return jax.tree_util.tree_map_with_path(put, batch_cache, one_cache)
 
-    def add_request(self, batch_one: dict, gen_tokens: int) -> int:
-        slot = self.free_slot()
-        if slot is None:
-            raise RuntimeError("no free slots")
-        one_cache = self.model.init_cache(1, self.max_len, self.kv_dtype)
-        one_cache, logits = self.model.prefill(self.ctx, self.params,
-                                               one_cache, batch_one)
-        self.cache = self._splice(self.cache, one_cache, slot)
-        tok = int(jnp.argmax(logits[0, -1]))
-        self.cur = self.cur.at[slot, 0].set(tok)
-        s = self.slots[slot]
-        # prefill already produced the first generated token
-        s.tokens = [tok]
-        s.remaining = gen_tokens - 1
-        s.active = s.remaining > 0
-        return slot
 
-    def tick(self) -> List[int]:
-        """One batched decode step for every active slot."""
-        self.cache, logits = self._decode(self.params, self.cur, self.cache)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        self.cur = nxt[:, None]
-        done = []
-        for s in self.slots:
-            if not s.active:
-                continue
-            s.tokens.append(int(nxt[s.id]))
-            s.remaining -= 1
-            if s.remaining <= 0:
-                s.active = False
-                done.append(s.id)
-        return done
+# ---------------------------------------------------------------------------
+# legacy one-shot wrappers (thin shims over a single-shot engine)
+# ---------------------------------------------------------------------------
 
-    def result(self, slot: int) -> list:
-        return self.slots[slot].tokens
+def _row(batch: dict, i: int) -> dict:
+    return {k: v[i:i + 1] for k, v in batch.items()
+            if hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1}
+
+
+def greedy_generate(model, ctx, params, batch, *, steps: int, max_len: int,
+                    kv_dtype: str = "bf16", eos_id: Optional[int] = None):
+    """Prefill + greedy decode. Returns (tokens (B, steps), cache).
+
+    Thin wrapper over a single-shot ServeEngine (one slot per batch row).
+    When ``eos_id`` is set, a sequence stops at its first EOS and the
+    remaining positions are masked with ``eos_id`` (the returned shape
+    stays (B, steps)); ``eos_id=None`` (default) never stops early.
+    """
+    tkey = "tgt_in" if model.cfg.family in ("encdec", "audio") else "tokens"
+    B = batch[tkey].shape[0]
+    eng = ServeEngine(model, params, slots=B, max_len=max_len,
+                      kv_dtype=kv_dtype, ctx=ctx)
+    sp = SamplingParams(max_new_tokens=steps, eos_id=eos_id)
+    ids = [eng.submit(_row(batch, i), sp) for i in range(B)]
+    outs = {o.request_id: o for o in eng.run_until_drained()}
+    pad = 0 if eos_id is None else eos_id
+    rows = [outs[r].token_ids + [pad] * (steps - len(outs[r].token_ids))
+            for r in ids]
+    return jnp.asarray(rows, jnp.int32), eng.cache
+
+
+def translate(model, ctx, params, src_tokens, lang_code: int, *,
+              steps: int, max_len: int = 0,
+              kv_dtype: str = "bf16", eos_id: Optional[int] = None):
+    """NMT entry point (paper Fig. 2b): many-to-many via target lang code.
+
+    ``max_len`` defaults to the decoder prompt length (the 1-token lang
+    code) + ``steps``; an explicit ``max_len`` too small for the request
+    raises instead of silently wrapping the KV cache.
+    """
+    B = src_tokens.shape[0]
+    prompt_len = 1                       # decoder prompt = target lang code
+    max_len = max_len or prompt_len + steps
+    if prompt_len + steps > max_len:
+        raise ValueError(
+            f"translate needs prompt_len + steps = {prompt_len} + {steps} "
+            f"= {prompt_len + steps} cache positions but max_len={max_len}")
+    tgt_in = jnp.full((B, 1), lang_code, jnp.int32)
+    batch = {"src_tokens": src_tokens, "tgt_in": tgt_in}
+    toks, _ = greedy_generate(model, ctx, params, batch, steps=steps,
+                              max_len=max_len, kv_dtype=kv_dtype,
+                              eos_id=eos_id)
+    return toks

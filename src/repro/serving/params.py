@@ -1,0 +1,113 @@
+"""Request-level serving types: SamplingParams / Request / RequestOutput.
+
+These are the load-bearing abstraction of the serving stack (the vLLM
+convention adapted to the paper's quantized-NMT deployment): every
+inference call in the repo is a `Request` carrying its own frozen
+`SamplingParams`, and every completion is a `RequestOutput` with an
+explicit finish reason (`eos` | `length` | `abort`) and timing stats.
+
+Sampling semantics:
+  * ``temperature == 0.0``  -> greedy argmax (the default).
+  * ``temperature > 0``     -> softmax sampling at that temperature,
+    optionally restricted by ``top_k`` (0 = off) and/or nucleus
+    ``top_p`` (1.0 = off), drawn from a per-request PRNG stream seeded
+    by ``seed`` — same seed, same tokens, regardless of which slot or
+    batch the request lands in.
+  * ``eos_id``              -> generation stops the step this token is
+    emitted (it is included in the output); ``None`` disables EOS
+    stopping (token 0 is the pad id in the synthetic corpora, so there
+    is deliberately no implicit default).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+__all__ = ["SamplingParams", "GREEDY", "Request", "RequestOutput",
+           "RequestStats", "FINISH_REASONS"]
+
+FINISH_REASONS = ("eos", "length", "abort")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode policy. Frozen: shareable across requests."""
+
+    temperature: float = 0.0      # 0.0 = greedy
+    top_k: int = 0                # 0 = disabled
+    top_p: float = 1.0            # 1.0 = disabled
+    eos_id: Optional[int] = None  # None = never stop on a token id
+    max_new_tokens: int = 16      # includes the prefill-sampled first token
+    seed: int = 0                 # per-request PRNG stream seed
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+GREEDY = SamplingParams()
+
+
+@dataclasses.dataclass
+class Request:
+    """One inference request: a B=1 model batch dict + sampling params.
+
+    ``inputs`` follows the ModelAPI batch convention — ``{"tokens"}`` for
+    LM families, ``{"src_tokens", "tgt_in"}`` for enc-dec. ``id`` is
+    assigned by the engine at submit time.
+    """
+
+    inputs: Dict[str, Any]
+    params: SamplingParams = GREEDY
+    id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Wall-clock stamps (time.perf_counter) + derived serving metrics."""
+
+    arrival_s: float = 0.0
+    first_token_s: float = 0.0
+    finished_s: float = 0.0
+    prompt_len: int = 0
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def total_s(self) -> float:
+        return self.finished_s - self.arrival_s
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """Completion record for one request."""
+
+    request_id: int
+    prompt: Dict[str, Any]
+    token_ids: List[int]
+    finish_reason: str            # one of FINISH_REASONS
+    stats: RequestStats
+    slot: int = -1                # engine slot that served the request
+
+    @property
+    def num_generated(self) -> int:
+        return len(self.token_ids)
+
+    @property
+    def tok_s(self) -> float:
+        dt = self.stats.total_s
+        return self.num_generated / dt if dt > 0 else float("inf")

@@ -1,0 +1,129 @@
+"""One-call deployment: config -> model -> quantize -> engine.
+
+`deploy()` composes the whole config/build/quantize/engine dance that
+every serving caller used to re-spell by hand, and returns a
+`TranslationPipeline` — the canonical inference surface:
+
+    pipe = deploy("nllb600m", "int4", slots=4, max_len=64, smoke=True)
+    outs = pipe.translate(src_tokens, "ita",
+                          SamplingParams(max_new_tokens=8, eos_id=2))
+    outs = pipe.generate(prompts, SamplingParams(temperature=0.7))
+
+Both return `RequestOutput` lists in input order; the scheduler-owned
+`pipe.engine` is exposed for request-level control (submit / step /
+run_until_drained / abort).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, reduce_config
+from ..core import PRESETS, quantize_tree, tree_nbytes
+from ..data import LANG_CODES
+from ..models import Ctx, build_model
+from .engine import ServeEngine
+from .params import Request, RequestOutput, SamplingParams
+
+__all__ = ["deploy", "TranslationPipeline"]
+
+
+@dataclasses.dataclass
+class TranslationPipeline:
+    """A deployed model + scheduler-owned engine behind two calls."""
+
+    cfg: Any
+    model: Any
+    params: Any
+    engine: ServeEngine
+    ctx: Ctx
+    policy: str
+    fp_bytes: int                 # parameter bytes before quantization
+
+    @property
+    def quantized_bytes(self) -> int:
+        return tree_nbytes(self.params)
+
+    @property
+    def compression(self) -> float:
+        return self.fp_bytes / max(self.quantized_bytes, 1)
+
+    def generate(self, prompts: Sequence[Any],
+                 params: Optional[SamplingParams] = None
+                 ) -> List[RequestOutput]:
+        """Serve a list of prompts; outputs come back in input order.
+
+        Each prompt is a B=1 model batch dict, or (LM families only) a
+        1-D sequence of token ids. All requests share ``params``.
+        """
+        ids = []
+        for p in prompts:
+            if not isinstance(p, (dict, Request)):
+                if self.cfg.family in ("encdec", "audio"):
+                    raise TypeError(
+                        "enc-dec prompts must be batch dicts with "
+                        "'src_tokens' and 'tgt_in'")
+                p = {"tokens": jnp.asarray(p, jnp.int32)[None]}
+            ids.append(self.engine.submit(p, params))
+        by_id = {o.request_id: o for o in self.engine.run_until_drained()}
+        return [by_id[i] for i in ids]
+
+    def translate(self, src_tokens, tgt_lang: Union[str, int],
+                  params: Optional[SamplingParams] = None
+                  ) -> List[RequestOutput]:
+        """Many-to-many NMT (paper Fig. 2b): one output per source row.
+
+        ``tgt_lang`` is a language name from ``data.LANG_CODES`` or a raw
+        code-token id; the decoder is prompted with that code token.
+        """
+        if self.cfg.family not in ("encdec", "audio"):
+            raise TypeError(
+                f"translate() needs an enc-dec model, got family "
+                f"{self.cfg.family!r}; use generate() instead")
+        code = LANG_CODES[tgt_lang] if isinstance(tgt_lang, str) else tgt_lang
+        src = jnp.asarray(src_tokens)
+        if src.ndim == 1:
+            src = src[None]
+        prompts = [{"src_tokens": src[i:i + 1],
+                    "tgt_in": jnp.full((1, 1), code, jnp.int32)}
+                   for i in range(src.shape[0])]
+        return self.generate(prompts, params)
+
+
+def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
+           max_len: int = 64, smoke: bool = False, params: Any = None,
+           ctx: Optional[Ctx] = None, kv_dtype: Optional[str] = None,
+           init_seed: int = 0) -> TranslationPipeline:
+    """Build a ready-to-serve TranslationPipeline in one call.
+
+    arch_or_cfg: registry name (see configs.REGISTRY) or a ModelConfig.
+    policy:      weight-precision preset (core.PRESETS); the KV-cache
+                 dtype follows the preset unless ``kv_dtype`` overrides.
+    smoke:       reduce the config to CPU-testable size and compute in
+                 f32 (skipped when ``ctx`` is given).
+    params:      pre-trained parameters to deploy (still quantized per
+                 ``policy``); default: fresh init from ``init_seed``.
+    """
+    if policy not in PRESETS:
+        raise KeyError(f"unknown policy {policy!r}; have {sorted(PRESETS)}")
+    cfg = get_config(arch_or_cfg) if isinstance(arch_or_cfg, str) \
+        else arch_or_cfg
+    if smoke:
+        cfg = reduce_config(cfg)
+    model = build_model(cfg)
+    if ctx is None:
+        ctx = Ctx(compute_dtype=jnp.float32 if smoke else jnp.bfloat16)
+    if params is None:
+        params = model.init(jax.random.PRNGKey(init_seed))
+    fp_bytes = tree_nbytes(params)
+    if policy != "f32":
+        params = quantize_tree(params, PRESETS[policy])
+    engine = ServeEngine(model, params, slots=slots, max_len=max_len,
+                         kv_dtype=kv_dtype or PRESETS[policy].kv_cache,
+                         ctx=ctx)
+    return TranslationPipeline(cfg, model, params, engine, ctx, policy,
+                               fp_bytes)

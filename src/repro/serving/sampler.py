@@ -1,0 +1,56 @@
+"""Fused per-slot token sampler: one executable for every SamplingParams.
+
+The engine decodes all slots in one batched step; slots may carry
+different SamplingParams (greedy next to nucleus-sampled). To keep a
+single compiled function regardless of the mix, the per-slot knobs
+(temperature / top_k / top_p / PRNG key / stream offset) enter as traced
+arrays and the greedy-vs-sampled choice is a data-dependent `where` —
+changing a request's params never recompiles, only re-runs.
+
+Per-slot PRNG streams: each request owns a base key derived from its
+``seed``; token ``t`` of that request draws from ``fold_in(key, t)``, so
+outputs are reproducible independent of slot placement, admission order,
+or what the other slots are doing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample_tokens"]
+
+_NEG = jnp.float32(-1e30)   # mask value: exp() underflows to exactly 0
+
+
+def _sample_row(logits, temp, top_k, top_p, key, offset):
+    """One slot's next token. logits (V,) f32; scalars are traced."""
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits).astype(jnp.int32)
+
+    lg = logits / jnp.maximum(temp, 1e-6)
+    # top-k: keep logits >= the k-th largest (k <= 0 disables)
+    kk = jnp.where(top_k <= 0, v, jnp.minimum(top_k, v))
+    srt = jnp.sort(lg)[::-1]
+    kth = srt[jnp.maximum(kk - 1, 0)]
+    lg = jnp.where(lg < kth, _NEG, lg)
+    # top-p (nucleus): keep the smallest prefix of the sorted probability
+    # mass reaching p; the top-1 token is always kept
+    probs = jax.nn.softmax(lg)
+    sp = jnp.sort(probs)[::-1]
+    keep = (jnp.cumsum(sp) - sp) < top_p
+    pth = jnp.min(jnp.where(keep, sp, jnp.inf))
+    lg = jnp.where(probs < pth, _NEG, lg)
+
+    tok = jax.random.categorical(jax.random.fold_in(key, offset), lg)
+    return jnp.where(temp <= 0.0, greedy, tok).astype(jnp.int32)
+
+
+def sample_tokens(logits, temps, top_ks, top_ps, keys, offsets):
+    """Batched next-token sampling across slots.
+
+    logits (S, V) f32, temps/top_ps (S,) f32, top_ks/offsets (S,) i32,
+    keys (S, 2) u32 -> tokens (S,) i32.
+    """
+    return jax.vmap(_sample_row)(logits.astype(jnp.float32), temps, top_ks,
+                                 top_ps, keys, offsets)

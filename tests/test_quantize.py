@@ -1,5 +1,8 @@
 """Property tests for the blockwise quantization core (hypothesis)."""
 
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
