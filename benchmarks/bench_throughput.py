@@ -13,7 +13,6 @@ import glob
 import json
 import os
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES

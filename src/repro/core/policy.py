@@ -17,7 +17,6 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-from .formats import get_format
 from .qtensor import QTensor, tensor_nbytes
 
 __all__ = ["PrecisionPolicy", "PRESETS", "quantize_tree", "tree_nbytes"]
@@ -104,5 +103,5 @@ def tree_nbytes(params: Any) -> int:
     """Total storage bytes of a (possibly quantized) parameter tree."""
     leaves = jax.tree_util.tree_leaves(
         params, is_leaf=lambda x: isinstance(x, QTensor))
-    return sum(tensor_nbytes(l) for l in leaves
-               if isinstance(l, QTensor) or hasattr(l, "dtype"))
+    return sum(tensor_nbytes(leaf) for leaf in leaves
+               if isinstance(leaf, QTensor) or hasattr(leaf, "dtype"))

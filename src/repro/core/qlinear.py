@@ -20,8 +20,7 @@ stop_gradient (paper §III: QLoRA keeps original quantized weights fixed).
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

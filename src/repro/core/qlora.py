@@ -64,7 +64,7 @@ def inject_adapters(params: Any, adapters: Any) -> Any:
 
 
 def count_adapter_params(adapters: Any) -> int:
-    return sum(l.size for l in jax.tree_util.tree_leaves(adapters))
+    return sum(leaf.size for leaf in jax.tree_util.tree_leaves(adapters))
 
 
 def merge_lora(qt: QTensor, dtype=jnp.bfloat16) -> jnp.ndarray:

@@ -15,7 +15,6 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .formats import Format, get_format
 from .quantize import (dequantize_blockwise, dequantize_scales,

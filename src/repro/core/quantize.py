@@ -17,7 +17,7 @@ scale overhead from 32/block_size to ~8.25/block_size bits per weight.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 import numpy as np

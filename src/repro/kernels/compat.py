@@ -1,0 +1,25 @@
+"""Version compatibility for the Pallas TPU surface.
+
+The repo is tested against a pinned jax and jax-at-HEAD (see the CI
+matrix); on that span ``pltpu.TPUCompilerParams`` became
+``pltpu.CompilerParams``. Every kernel resolves the name through this
+shim. (Interpret-mode forcing for CPU runners lives in ``ops.py``:
+``REPRO_PALLAS_INTERPRET=1``.)
+
+This module is kept ruff-format-clean (CI lint job checks it).
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["compiler_params"]
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+
+def compiler_params(**kwargs):
+    """pltpu.CompilerParams under its current (or pre-rename) name."""
+    return _CompilerParams(**kwargs)

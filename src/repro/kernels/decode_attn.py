@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import compiler_params
+
 __all__ = ["decode_attn_call"]
 
 _NEG_INF = -1e30
@@ -101,7 +103,7 @@ def decode_attn_call(q, k_codes, k_scales, v_codes, v_scales, lengths, *,
         functools.partial(_kernel, bs=bs, sm_scale=sm_scale),
         grid_spec=spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, G, d), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="decode_attn_int8kv",

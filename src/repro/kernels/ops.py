@@ -8,6 +8,7 @@ CPU — correctness validation; on TPU they compile to Mosaic).
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -16,15 +17,23 @@ from ..core.formats import get_format
 from ..core.qtensor import QTensor
 from . import decode_attn as _da
 from . import fasst as _fasst
+from . import paged_attn as _pa
 from . import qmm as _qmm
 
 __all__ = ["qmm", "fasst", "fasst_softmax", "decode_attention",
-           "quantize_kv", "interpret_mode"]
+           "paged_decode_attention", "quantize_kv", "interpret_mode"]
 
 
 @functools.lru_cache(maxsize=1)
 def interpret_mode() -> bool:
-    """Pallas interpret=True everywhere except a real TPU backend."""
+    """Pallas interpret=True everywhere except a real TPU backend.
+
+    ``REPRO_PALLAS_INTERPRET=1`` forces interpret mode regardless of
+    backend (CI's kernels-interpret job sets it so kernel regressions
+    fail PRs without a TPU runner).
+    """
+    if os.environ.get("REPRO_PALLAS_INTERPRET", "") == "1":
+        return True
     return jax.default_backend() != "tpu"
 
 
@@ -141,4 +150,38 @@ def decode_attention(q, k_codes, k_scales, v_codes, v_scales, lengths, *,
         qg, kt, kst, vt, vst, lengths.astype(jnp.int32), bs=bs,
         sm_scale=float(sm_scale), out_dtype=out_dtype,
         interpret=interpret_mode())
+    return out[:, :, :G, :].reshape(B, H, d)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                           k_scales=None, v_scales=None,
+                           sm_scale: float | None = None,
+                           out_dtype=jnp.bfloat16):
+    """GQA decode attention against a block-paged KV cache.
+
+    q (B, H, d); k/v pages (P, ps, Hkv, d) — int8 codes with
+    (P, ps, Hkv) f32 scales, or bf16 with scales=None; block_tables
+    (B, maxp) int32 page ids (out-of-chain entries must point at a
+    page that ``lengths`` masks out, e.g. the reserved trash page);
+    lengths (B,) int32. Returns (B, H, d).
+    """
+    B, H, d = q.shape
+    Hkv = k_pages.shape[2]
+    G = H // Hkv
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+
+    qg = q.reshape(B, Hkv, G, d)
+    Gp = _round_up(G, 8)
+    if Gp != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+
+    kt = jnp.transpose(k_pages, (0, 2, 1, 3))   # (P, Hkv, ps, d)
+    vt = jnp.transpose(v_pages, (0, 2, 1, 3))
+    kst = None if k_scales is None else jnp.transpose(k_scales, (0, 2, 1))
+    vst = None if v_scales is None else jnp.transpose(v_scales, (0, 2, 1))
+
+    out = _pa.paged_attn_call(
+        qg, kt, kst, vt, vst, block_tables.astype(jnp.int32),
+        lengths.astype(jnp.int32), sm_scale=float(sm_scale),
+        out_dtype=out_dtype, interpret=interpret_mode())
     return out[:, :, :G, :].reshape(B, H, d)

@@ -1,0 +1,54 @@
+"""Pure-jnp page-walk primitives — the single source of truth for the
+paged-KV layout contract.
+
+Token ``t`` of a sequence lives at ``(tables[b, t // ps], t % ps)`` in a
+``(P, ps, ...)`` page pool. Everything that touches that contract goes
+through here: the model decode paths (gather + per-token scatter inside
+jitted scans), the serving engine's batched prefill insertion, and the
+oracle for the Pallas kernel in ``paged_attn.py`` (whose index maps walk
+the same tables via scalar prefetch instead of a gathered copy).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gather_pages", "scatter_token", "scatter_prefill", "TRASH_PAGE"]
+
+# page 0 is never allocated: unused block-table entries name it, and
+# idle decode slots harmlessly write their dead token into it
+TRASH_PAGE = 0
+
+
+def gather_pages(pages, block_tables):
+    """(P, ps, ...) pool + (B, maxp) tables -> dense (B, maxp*ps, ...)."""
+    B, maxp = block_tables.shape
+    ps = pages.shape[1]
+    return pages[block_tables].reshape((B, maxp * ps) + pages.shape[2:])
+
+
+def scatter_token(pages, values, page_ids, offsets):
+    """Write one token per sequence: values (B, ...) at (page, offset).
+
+    Sequences parked on the trash page may collide; within one step the
+    engine guarantees *live* (page, offset) pairs are disjoint because
+    chains never share pages.
+    """
+    return pages.at[page_ids, offsets].set(values.astype(pages.dtype))
+
+
+def scatter_prefill(pages, values, block_tables, lengths):
+    """Write prompt K/V into chains: layer-stacked pages (L, P, ps, ...)
+    and values (L, B, S, ...); tokens [0, lengths[b]) of row b land at
+    (tables[b, t//ps], t%ps); pad positions (t >= lengths[b]) are
+    dumped on the trash page."""
+    L, B, S = values.shape[:3]
+    ps = pages.shape[2]
+    t = jnp.arange(S, dtype=jnp.int32)
+    page_slot = jnp.minimum(t // ps, block_tables.shape[1] - 1)  # (S,)
+    pid = jnp.take_along_axis(block_tables, page_slot[None, :], axis=1)
+    valid = t[None, :] < lengths[:, None]  # (B, S)
+    pid = jnp.where(valid, pid, TRASH_PAGE)
+    off = jnp.where(valid, t[None, :] % ps, 0)
+    flat = values.reshape((L, B * S) + values.shape[3:])
+    return pages.at[:, pid.reshape(-1), off.reshape(-1)].set(flat.astype(pages.dtype))

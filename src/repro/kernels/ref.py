@@ -7,9 +7,10 @@ import jax.numpy as jnp
 
 from ..core.quantize import dequantize_blockwise
 from .fasst import _naf
+from .paging import gather_pages
 
 __all__ = ["qmm_ref", "fasst_act_ref", "fasst_softmax_ref", "decode_attn_ref",
-           "quantize_kv_ref"]
+           "quantize_kv_ref", "gather_pages_ref", "paged_attn_ref"]
 
 
 def qmm_ref(x, packed, scales, fmt_name: str, out_dtype=jnp.float32):
@@ -41,6 +42,36 @@ def quantize_kv_ref(kv: jnp.ndarray):
     codes = jnp.clip(jnp.round(kv / scales[..., None]), -127, 127
                      ).astype(jnp.int8)
     return codes, scales.astype(jnp.float32)
+
+
+# the CPU/interpret-mode counterpart of the paged kernel's DMA walk —
+# canonical implementation in kernels/paging.py
+gather_pages_ref = gather_pages
+
+
+def paged_attn_ref(q, k_pages, k_scales, v_pages, v_scales, block_tables,
+                   lengths, sm_scale: float, out_dtype=jnp.float32):
+    """Oracle for paged_attn_call: gather chains dense, run decode_attn_ref.
+
+    Layouts match the kernel: q (B, Hkv, G, d); pages (P, Hkv, ps, d)
+    with optional (P, Hkv, ps) scales (None = bf16 path).
+    """
+    # (P, Hkv, ps, d) -> (P, ps, Hkv, d) so the page walk is axis 0/1
+    k = gather_pages_ref(jnp.swapaxes(k_pages, 1, 2), block_tables)
+    v = gather_pages_ref(jnp.swapaxes(v_pages, 1, 2), block_tables)
+    k = jnp.swapaxes(k, 1, 2)              # (B, Hkv, S', d)
+    v = jnp.swapaxes(v, 1, 2)
+    if k_scales is None:
+        ks = jnp.ones(k.shape[:-1], jnp.float32)
+        vs = jnp.ones(v.shape[:-1], jnp.float32)
+        k8, v8 = k, v
+    else:
+        k8, v8 = k, v
+        ks = jnp.swapaxes(gather_pages_ref(
+            jnp.swapaxes(k_scales, 1, 2), block_tables), 1, 2)
+        vs = jnp.swapaxes(gather_pages_ref(
+            jnp.swapaxes(v_scales, 1, 2), block_tables), 1, 2)
+    return decode_attn_ref(q, k8, ks, v8, vs, lengths, sm_scale, out_dtype)
 
 
 def decode_attn_ref(q, k_codes, k_scales, v_codes, v_scales, lengths,

@@ -31,6 +31,10 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--paged", action="store_true",
+                    help="block-paged KV cache + batched prefill admission")
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--num-pages", type=int, default=None)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -38,14 +42,16 @@ def main():
     args = ap.parse_args()
 
     pipe = deploy(args.arch, args.policy, slots=args.slots,
-                  max_len=args.max_len, smoke=args.smoke)
+                  max_len=args.max_len, smoke=args.smoke, paged=args.paged,
+                  page_size=args.page_size, num_pages=args.num_pages)
     print(f"model bytes {pipe.fp_bytes/2**20:.1f} MB -> "
           f"{pipe.quantized_bytes/2**20:.1f} MB "
           f"({args.policy}, {pipe.compression:.2f}x)")
 
     cfg = pipe.cfg
-    # source length must match the engine's fixed cross-cache (enc_len);
-    # the decoder budget (1-token lang-code prompt + gen) is independent
+    # sources up to the engine's cross capacity (default enc_len) are
+    # admitted; the decoder budget (1-token lang-code prompt + gen) is
+    # independent
     ds = SyntheticTranslation(cfg.vocab_size, cfg.enc_len,
                               seed=0) if cfg.family in ("encdec",) else None
 
@@ -74,9 +80,14 @@ def main():
         done_tokens += o.num_generated
         print(f"[req {o.request_id}] slot {o.slot} {o.finish_reason:6s} "
               f"ttft {o.stats.ttft_s*1e3:6.1f} ms: {o.token_ids}")
-    print(f"served {args.requests} requests, {done_tokens} tokens in "
-          f"{dt:.2f}s ({done_tokens/dt:.1f} tok/s host, "
-          f"{pipe.engine.prefill_compiles} prefill compiles)")
+    line = (f"served {args.requests} requests, {done_tokens} tokens in "
+            f"{dt:.2f}s ({done_tokens/dt:.1f} tok/s host, "
+            f"{pipe.engine.prefill_compiles} prefill compiles, "
+            f"occupancy {pipe.engine.occupancy:.2f}")
+    if args.paged:
+        line += (f", page util {pipe.engine.page_utilization:.2f}, "
+                 f"kv {pipe.engine.kv_cache_bytes/2**20:.2f} MB")
+    print(line + ")")
 
 
 if __name__ == "__main__":

@@ -3,9 +3,16 @@
 build_model(cfg) -> ModelAPI with
   init(key)                         -> params
   forward(ctx, params, batch, ...)  -> (logits, aux_loss)
-  init_cache(batch, max_len, kv)    -> serving cache
+  init_cache(batch, max_len, kv)    -> dense serving cache
+  init_paged_cache(slots, max_pages, num_pages, page_size, kv)
+                                    -> block-paged serving cache
+                                       (attention families only)
   prefill(ctx, params, cache, batch)-> (cache, logits)
   decode_step(ctx, params, tok, c)  -> (cache, logits)
+
+decode_step dispatches on the cache layout: a cache carrying
+``block_tables`` (from init_paged_cache) runs the paged attention path,
+anything else the dense path — one call site serves both.
 
 Batches are dicts:
   LM families:   {"tokens" (B,S)}  [+ "img_embeds" (B,P,d) for vlm]
@@ -16,8 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 from typing import Any, Callable, Optional
-
-import jax.numpy as jnp
 
 from . import encdec as ed
 from . import hybrid as hy
@@ -34,6 +39,15 @@ class ModelAPI:
     init_cache: Callable
     prefill: Callable
     decode_step: Callable
+    init_paged_cache: Optional[Callable] = None
+
+
+def _no_paged_cache(fam: str) -> Callable:
+    def init_paged_cache(*a, **k):
+        raise ValueError(
+            f"family {fam!r} keeps O(1)-per-sequence recurrent state; "
+            "block-paged KV caches apply to attention families only")
+    return init_paged_cache
 
 
 def build_model(cfg) -> ModelAPI:
@@ -57,8 +71,15 @@ def build_model(cfg) -> ModelAPI:
         def decode_step(ctx, params, tokens, cache):
             return tf.lm_decode_step(ctx, params, cfg, tokens, cache)
 
+        def init_paged_cache(slots, max_pages, num_pages, page_size,
+                             kv_dtype="bf16"):
+            return tf.lm_init_paged_cache(cfg, slots, max_pages, num_pages,
+                                          page_size, kv_dtype)
+
         return ModelAPI(cfg, lambda key: tf.lm_init(key, cfg), forward,
-                        init_cache, prefill, decode_step)
+                        init_cache, prefill, decode_step,
+                        _no_paged_cache(fam) if fam == "ssm"
+                        else init_paged_cache)
 
     if fam == "hybrid":
         def forward(ctx, params, batch, remat=False):
@@ -76,7 +97,8 @@ def build_model(cfg) -> ModelAPI:
             return hy.hybrid_decode_step(ctx, params, cfg, tokens, cache)
 
         return ModelAPI(cfg, lambda key: hy.hybrid_init(key, cfg), forward,
-                        init_cache, prefill, decode_step)
+                        init_cache, prefill, decode_step,
+                        _no_paged_cache(fam))
 
     if fam in ("encdec", "audio"):
         def forward(ctx, params, batch, remat=False):
@@ -84,9 +106,9 @@ def build_model(cfg) -> ModelAPI:
                                      src_tokens=batch.get("src_tokens"),
                                      frames=batch.get("frames"), remat=remat)
 
-        def init_cache(batch_size, max_len, kv_dtype="bf16"):
+        def init_cache(batch_size, max_len, kv_dtype="bf16", enc_len=None):
             return ed.encdec_init_cache(cfg, batch_size, max_len,
-                                        cfg.enc_len, kv_dtype)
+                                        enc_len or cfg.enc_len, kv_dtype)
 
         def prefill(ctx, params, cache, batch):
             return ed.encdec_prefill(ctx, params, cfg, cache,
@@ -98,7 +120,13 @@ def build_model(cfg) -> ModelAPI:
         def decode_step(ctx, params, tokens, cache):
             return ed.encdec_decode_step(ctx, params, cfg, tokens, cache)
 
+        def init_paged_cache(slots, max_pages, num_pages, page_size,
+                             kv_dtype="bf16", enc_len=None):
+            return ed.encdec_init_paged_cache(
+                cfg, slots, max_pages, num_pages, page_size, kv_dtype,
+                enc_len=enc_len or cfg.enc_len)
+
         return ModelAPI(cfg, lambda key: ed.encdec_init(key, cfg), forward,
-                        init_cache, prefill, decode_step)
+                        init_cache, prefill, decode_step, init_paged_cache)
 
     raise ValueError(f"unknown family {fam!r}")

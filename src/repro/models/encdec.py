@@ -19,11 +19,12 @@ from ..parallel import hint, hint_pick
 from . import moe as moe_mod
 from .layers import (Ctx, attention_init, attn_apply, decode_attn_apply,
                      mlp, mlp_init, rms_norm)
-from .transformer import (_dense_kv, _fp8_token_kv, _quantize_token_kv,
-                          _scatter_tokens)
+from .transformer import (_dense_kv, _quantize_token_kv, _scatter_tokens,
+                          paged_attn, paged_view)
 
 __all__ = ["encdec_init", "encdec_encode", "encdec_forward",
-           "encdec_init_cache", "encdec_prefill", "encdec_decode_step"]
+           "encdec_init_cache", "encdec_init_paged_cache", "encdec_prefill",
+           "encdec_decode_step"]
 
 
 def _enc_layer_init(key, cfg):
@@ -201,6 +202,10 @@ def encdec_init_cache(cfg, batch: int, max_len: int, enc_len: int,
     cache = {
         "pos": jnp.full((batch, max_len), -1, jnp.int32),
         "len": jnp.zeros((batch,), jnp.int32),
+        # valid cross-attention length per slot: requests whose source is
+        # shorter than the allocated enc_len mask the tail instead of
+        # forcing every admitted request to share one source length
+        "cross_len": jnp.full((batch,), enc_len, jnp.int32),
     }
     if kv_dtype == "int8":
         # the paper's quantization applied to BOTH self and cross caches
@@ -268,17 +273,31 @@ def encdec_prefill(ctx: Ctx, params, cfg, cache, tgt_tokens, src_tokens=None,
     pos = jnp.where(positions < lens[:, None], positions, -1)
     new_cache["pos"] = cache["pos"].at[:, :Sd].set(pos)
     new_cache["len"] = lens
+    new_cache["cross_len"] = jnp.full((B,), Se, jnp.int32)
     return new_cache, logits
 
 
+def _enc_positions(cache, B: int, Se: int):
+    """Cross-attention key positions, -1 beyond each slot's source."""
+    enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+    cross_len = cache.get("cross_len")
+    if cross_len is None:
+        return enc_pos
+    return jnp.where(enc_pos < cross_len[:, None], enc_pos, -1)
+
+
 def encdec_decode_step(ctx: Ctx, params, cfg, tokens, cache):
-    """One decoder token against self + cross caches. tokens (B,1)."""
+    """One decoder token against self + cross caches. tokens (B,1).
+
+    A cache carrying ``block_tables`` routes to the block-paged step."""
+    if "block_tables" in cache:
+        return encdec_paged_decode_step(ctx, params, cfg, tokens, cache)
     B = tokens.shape[0]
     positions = cache["len"][:, None]
     x = embed_lookup(params["embedding"], tokens, ctx.compute_dtype)
     quant = "k_codes" in cache
     Se = (cache["cross_k_codes"] if quant else cache["cross_k"]).shape[2]
-    enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (B, Se))
+    enc_pos = _enc_positions(cache, B, Se)
 
     if quant:
         xs = (params["decoder"]["layers"], cache["k_codes"], cache["k_scales"],
@@ -344,4 +363,109 @@ def encdec_decode_step(ctx: Ctx, params, cfg, tokens, cache):
         new_cache["k"], new_cache["v"] = new_kv
     new_cache["pos"] = _scatter_tokens(cache["pos"], positions, cache["len"])
     new_cache["len"] = cache["len"] + 1
+    return new_cache, logits
+
+
+def encdec_init_paged_cache(cfg, slots: int, max_pages: int, num_pages: int,
+                            page_size: int, kv_dtype: str = "bf16",
+                            enc_len: int = 0):
+    """Paged enc-dec serving cache.
+
+    The decoder's self-attention KV is block-paged (shared pool); the
+    cross-attention cache stays per-slot dense at ``enc_len`` capacity —
+    it is written once per request and never grows, so paging buys
+    nothing there — with per-slot ``cross_len`` masking so mixed source
+    lengths coexist.
+    """
+    from ..serving.paged_cache import TRASH_PAGE, init_paged_kv
+    L, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    enc_len = enc_len or cfg.enc_len
+    cache = init_paged_kv(L, num_pages, page_size, Hkv, hd, kv_dtype)
+    if kv_dtype == "int8":
+        cache.update(
+            cross_k_codes=jnp.zeros((L, slots, enc_len, Hkv, hd), jnp.int8),
+            cross_k_scales=jnp.zeros((L, slots, enc_len, Hkv), jnp.float32),
+            cross_v_codes=jnp.zeros((L, slots, enc_len, Hkv, hd), jnp.int8),
+            cross_v_scales=jnp.zeros((L, slots, enc_len, Hkv), jnp.float32))
+    else:
+        dt = jnp.float32 if kv_dtype == "f32" else jnp.bfloat16
+        cache.update(
+            cross_k=jnp.zeros((L, slots, enc_len, Hkv, hd), dt),
+            cross_v=jnp.zeros((L, slots, enc_len, Hkv, hd), dt))
+    cache["cross_len"] = jnp.zeros((slots,), jnp.int32)
+    cache["block_tables"] = jnp.full((slots, max_pages), TRASH_PAGE,
+                                     jnp.int32)
+    cache["len"] = jnp.zeros((slots,), jnp.int32)
+    cache["active"] = jnp.zeros((slots,), jnp.int32)
+    return cache
+
+
+def encdec_paged_decode_step(ctx: Ctx, params, cfg, tokens, cache):
+    """One decoder token: paged self-attention + per-slot dense cross."""
+    tables, active = cache["block_tables"], cache["active"]
+    B = tokens.shape[0]
+    positions = cache["len"][:, None]
+    view_pos, pid, off = paged_view(cache)
+    x = embed_lookup(params["embedding"], tokens, ctx.compute_dtype)
+    quant = "k_codes" in cache
+    Se = (cache["cross_k_codes"] if quant else cache["cross_k"]).shape[2]
+    enc_pos = _enc_positions(cache, B, Se)
+    use_kernel = ctx.paged_attn_impl == "kernel"
+    lengths_now = jnp.where(active > 0, cache["len"] + 1, 0)
+
+    if quant:
+        xs = (params["decoder"]["layers"], cache["k_codes"],
+              cache["k_scales"], cache["v_codes"], cache["v_scales"],
+              cache["cross_k_codes"], cache["cross_k_scales"],
+              cache["cross_v_codes"], cache["cross_v_scales"])
+    else:
+        xs = (params["decoder"]["layers"], cache["k"], cache["v"],
+              cache["cross_k"], cache["cross_v"])
+
+    def body(x, layer_xs):
+        if quant:
+            lp, *leaves = layer_xs[:5]
+            ckc, cksc, cvc, cvsc = layer_xs[5:]
+            ck, cv = _dense_kv(ckc, cksc), _dense_kv(cvc, cvsc)
+        else:
+            lp, *leaves = layer_xs[:3]
+            ck, cv = layer_xs[3:]
+        h = rms_norm(x, lp["norm1_scale"], cfg.norm_eps)
+        y, new_leaves = paged_attn(
+            ctx, lp["attn"], h, positions, leaves, view_pos, pid, off,
+            lengths_now, tables, use_kernel=use_kernel,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, window=0, rope_theta=cfg.rope_theta,
+            norm_eps=cfg.norm_eps)
+        x = x + y
+        h = rms_norm(x, lp["norm2_scale"], cfg.norm_eps)
+        y, _ = attn_apply(ctx, lp["cross"], h, positions,
+                          num_heads=cfg.num_heads,
+                          num_kv_heads=cfg.num_kv_heads,
+                          head_dim=cfg.head_dim, causal=False, window=0,
+                          kv_override=(ck, cv, enc_pos), use_rope=False,
+                          norm_eps=cfg.norm_eps)
+        x = x + y
+        h = rms_norm(x, lp["norm3_scale"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = moe_mod.moe_apply(ctx, lp["moe"], h, top_k=cfg.moe.top_k,
+                                     capacity_factor=cfg.moe.capacity_factor,
+                                     act=cfg.mlp_act,
+                                     parallel_mode=cfg.moe.parallel_mode,
+                                     dropless=True,
+                                     dispatch_groups=cfg.moe.dispatch_groups)
+        else:
+            y = mlp(ctx, lp["mlp"], h, cfg.mlp_act)
+        return x + y, new_leaves
+
+    x, new_kv = jax.lax.scan(body, x, xs)
+    x = rms_norm(x, params["decoder"]["norm_f_scale"], cfg.norm_eps)
+    logits = _head(ctx, params, cfg, x)
+    new_cache = dict(cache)
+    if quant:
+        (new_cache["k_codes"], new_cache["k_scales"],
+         new_cache["v_codes"], new_cache["v_scales"]) = new_kv
+    else:
+        new_cache["k"], new_cache["v"] = new_kv
+    new_cache["len"] = jnp.where(active > 0, cache["len"] + 1, cache["len"])
     return new_cache, logits

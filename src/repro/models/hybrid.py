@@ -21,8 +21,7 @@ from ..core.qtensor import maybe_dequantize
 from ..parallel import hint, hint_pick
 from .layers import (Ctx, attention_init, attn_apply, decode_attn_apply,
                      mlp, mlp_init, rms_norm)
-from .rglru import (rglru_apply, rglru_decode_step, rglru_init,
-                    rglru_init_state)
+from .rglru import rglru_apply, rglru_decode_step, rglru_init
 
 __all__ = ["hybrid_init", "hybrid_forward", "hybrid_init_cache",
            "hybrid_prefill", "hybrid_decode_step", "hybrid_layout"]

@@ -9,7 +9,7 @@ Pallas kernel and the differentiable model path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +32,11 @@ class Ctx:
     attn_chunk: int = 1024
     use_fasst_kernel: bool = False # route NAFs through the Pallas kernel
     matmul_impl: str = "xla"       # xla | pallas (quantized weights)
+    # paged decode attention: "gather" materializes each chain as a
+    # dense view (CPU path, bit-identical to the dense engine);
+    # "kernel" routes through kernels/paged_attn.py (block-table DMA
+    # walk, write-then-attend — the TPU serving path)
+    paged_attn_impl: str = "gather"
 
     def dot(self, x, w):
         return qmatmul(x, w, act=self.act_fmt, compute_dtype=self.compute_dtype,

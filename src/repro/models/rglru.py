@@ -74,9 +74,9 @@ def rglru_apply(ctx: Ctx, params, x, state=None, return_state: bool = False):
     if h0 is not None:  # fold initial state into the first step
         b = b.at[:, 0].add(a[:, 0] * h0)
 
-    def combine(l, r):
-        al, bl = l
-        ar, br = r
+    def combine(lhs, rhs):
+        al, bl = lhs
+        ar, br = rhs
         return al * ar, bl * ar + br
 
     _, h = jax.lax.associative_scan(combine, (a, b), axis=1)

@@ -14,22 +14,21 @@ Decode caches are pytrees scanned as xs/ys alongside the layer weights:
 
 from __future__ import annotations
 
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.qlinear import embed_lookup
 from ..core.qtensor import maybe_dequantize
+from ..kernels.paging import gather_pages as _gather_pages
+from ..kernels.paging import scatter_token as _scatter_token
 from ..parallel import hint, hint_pick
 from . import moe as moe_mod
 from . import ssm as ssm_mod
 from .layers import (Ctx, attention_init, attn_apply, decode_attn_apply,
-                     mlp, mlp_init, rms_norm)
+                     linear, mlp, mlp_init, rms_norm, rope)
 
-__all__ = ["lm_init", "lm_forward", "lm_init_cache", "lm_prefill",
-           "lm_decode_step", "window_array"]
+__all__ = ["lm_init", "lm_forward", "lm_init_cache", "lm_init_paged_cache",
+           "lm_prefill", "lm_decode_step", "window_array"]
 
 
 # ---------------------------------------------------------------------------
@@ -239,6 +238,140 @@ def lm_init_cache(cfg, batch: int, max_len: int, kv_dtype: str = "bf16"):
     return cache
 
 
+def lm_init_paged_cache(cfg, slots: int, max_pages: int, num_pages: int,
+                        page_size: int, kv_dtype: str = "bf16"):
+    """Block-paged serving cache: shared page pool + per-slot block table.
+
+    ``max_pages`` bounds one sequence's chain (= ceil(max_len / ps));
+    ``num_pages`` sizes the shared pool (page 0 is the reserved trash
+    page). See serving/paged_cache.py for the layout contract.
+    """
+    # deferred: serving -> models is the package's import direction
+    from ..serving.paged_cache import TRASH_PAGE, init_paged_kv
+    if cfg.family == "ssm":
+        raise ValueError("paged KV caches need an attention family; "
+                         "ssm states are O(1) per sequence already")
+    cache = init_paged_kv(cfg.num_layers, num_pages, page_size,
+                          cfg.num_kv_heads, cfg.head_dim, kv_dtype)
+    cache["block_tables"] = jnp.full((slots, max_pages), TRASH_PAGE,
+                                     jnp.int32)
+    cache["len"] = jnp.zeros((slots,), jnp.int32)
+    cache["active"] = jnp.zeros((slots,), jnp.int32)
+    return cache
+
+
+def paged_view(cache):
+    """Decode-time view of a paged cache: per-slot write coordinates and
+    the dense gather positions.
+
+    Returns (positions (B, S_view) with -1 beyond each length, page_ids
+    (B,), offsets (B,)) where S_view = maxp * ps. Idle slots (active=0)
+    write to the trash page and keep their length frozen.
+    """
+    tables, lens = cache["block_tables"], cache["len"]
+    active = cache["active"]
+    B, maxp = tables.shape
+    ps = (cache["k_codes"] if "k_codes" in cache else cache["k"]).shape[2]
+    s_view = maxp * ps
+    pos = jnp.broadcast_to(jnp.arange(s_view, dtype=jnp.int32), (B, s_view))
+    pos = jnp.where(pos < lens[:, None], pos, -1)
+    pid = tables[jnp.arange(B), jnp.clip(lens // ps, 0, maxp - 1)]
+    pid = jnp.where(active > 0, pid, 0)          # 0 = trash page
+    off = jnp.where(active > 0, lens % ps, 0)
+    return pos, pid, off
+
+
+def paged_attn(ctx, ap, x, positions, leaves, view_pos, pid, off,
+               lengths_now, tables, *, use_kernel, num_heads, num_kv_heads,
+               head_dim, window=0, rope_theta=1e4, norm_eps=1e-6):
+    """One layer of paged decode self-attention + KV commit.
+
+    The single source of the paged attend/commit contract, shared by the
+    LM and enc-dec decode steps. Dispatches between the gather path
+    (dense chain view through decode_attn_apply — bit-identical to the
+    dense engine) and the Pallas-kernel path. Returns
+    (attn_out_projection, updated_leaves).
+    """
+    if use_kernel:
+        return _paged_attn_kernel_apply(
+            ctx, ap, x, positions, leaves, pid, off, lengths_now, tables,
+            num_heads=num_heads, num_kv_heads=num_kv_heads,
+            head_dim=head_dim, rope_theta=rope_theta, norm_eps=norm_eps)
+    if len(leaves) == 4:                       # int8 pages
+        kc, ksc, vc, vsc = leaves
+        k_dense = _dense_kv(_gather_pages(kc, tables),
+                            _gather_pages(ksc, tables))
+        v_dense = _dense_kv(_gather_pages(vc, tables),
+                            _gather_pages(vsc, tables))
+    else:
+        kc, vc = leaves
+        k_dense = _gather_pages(kc, tables)
+        v_dense = _gather_pages(vc, tables)
+    y, k_new, v_new = decode_attn_apply(
+        ctx, ap, x, positions, k_dense, v_dense, view_pos,
+        num_heads=num_heads, num_kv_heads=num_kv_heads, head_dim=head_dim,
+        window=window, rope_theta=rope_theta, norm_eps=norm_eps)
+    if len(leaves) == 4:
+        nkc, nks = _quantize_token_kv(k_new)
+        nvc, nvs = _quantize_token_kv(v_new)
+        new_leaves = (_scatter_token(kc, nkc[:, 0], pid, off),
+                      _scatter_token(ksc, nks[:, 0], pid, off),
+                      _scatter_token(vc, nvc[:, 0], pid, off),
+                      _scatter_token(vsc, nvs[:, 0], pid, off))
+    else:
+        new_leaves = (_scatter_token(kc, k_new[:, 0], pid, off),
+                      _scatter_token(vc, v_new[:, 0], pid, off))
+    return y, new_leaves
+
+
+def _paged_attn_kernel_apply(ctx, ap, x, positions, leaves, pid, off,
+                             lengths_now, tables, *, num_heads, num_kv_heads,
+                             head_dim, rope_theta=1e4, norm_eps=1e-6):
+    """Paged decode attention through the Pallas kernel (TPU path).
+
+    Write-then-attend: the new token's K/V is committed to its page
+    first (quantized on int8 caches — vLLM semantics, unlike the gather
+    path which attends the fresh token at full precision), then one
+    kernel call covers the whole chain at ``lengths_now`` = len + 1
+    (idle slots pass 0 and attend nothing). ``leaves`` is this layer's
+    page pool — (k, v) or (k_codes, k_scales, v_codes, v_scales).
+    Returns (attn_out_projection, updated_leaves).
+    """
+    from ..kernels import ops as kops
+    B = x.shape[0]
+    H, Hkv, hd = num_heads, num_kv_heads, head_dim
+    q = linear(ctx, x, ap["wq"], ap.get("bias_q")).reshape(B, 1, H, hd)
+    k_new = linear(ctx, x, ap["wk"], ap.get("bias_k")).reshape(B, 1, Hkv, hd)
+    v_new = linear(ctx, x, ap["wv"], ap.get("bias_v")).reshape(B, 1, Hkv, hd)
+    if "q_norm_scale" in ap:
+        q = rms_norm(q, ap["q_norm_scale"], norm_eps)
+        k_new = rms_norm(k_new, ap["k_norm_scale"], norm_eps)
+    q = rope(q, positions, rope_theta)
+    k_new = rope(k_new, positions, rope_theta)
+
+    if len(leaves) == 4:                       # int8 pages
+        kc, ksc, vc, vsc = leaves
+        nkc, nks = _quantize_token_kv(k_new)
+        nvc, nvs = _quantize_token_kv(v_new)
+        kc = _scatter_token(kc, nkc[:, 0], pid, off)
+        ksc = _scatter_token(ksc, nks[:, 0], pid, off)
+        vc = _scatter_token(vc, nvc[:, 0], pid, off)
+        vsc = _scatter_token(vsc, nvs[:, 0], pid, off)
+        out = kops.paged_decode_attention(
+            q[:, 0], kc, vc, tables, lengths_now, k_scales=ksc, v_scales=vsc,
+            out_dtype=jnp.float32)
+        new_leaves = (kc, ksc, vc, vsc)
+    else:                                      # bf16/f32 pages
+        kp, vp = leaves
+        kp = _scatter_token(kp, k_new[:, 0], pid, off)
+        vp = _scatter_token(vp, v_new[:, 0], pid, off)
+        out = kops.paged_decode_attention(
+            q[:, 0], kp, vp, tables, lengths_now, out_dtype=jnp.float32)
+        new_leaves = (kp, vp)
+    y = ctx.dot(out.astype(x.dtype).reshape(B, 1, H * hd), ap["wo"])
+    return y, new_leaves
+
+
 def _quantize_token_kv(t):
     """(B, S, Hkv, hd) -> int8 codes + per-(token, head) scales."""
     absmax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
@@ -334,8 +467,73 @@ def lm_prefill(ctx: Ctx, params, cfg, tokens, cache, lengths=None,
 # decode
 # ---------------------------------------------------------------------------
 
+def lm_paged_decode_step(ctx: Ctx, params, cfg, tokens, cache):
+    """One decode step against a block-paged cache. tokens (B, 1).
+
+    Per layer: the slot's page chain is gathered into a dense
+    (B, maxp*ps, ...) view (the CPU-path twin of the Pallas kernel's
+    block-table DMA walk in kernels/paged_attn.py), attention runs with
+    chain-order positions, and the new token's K/V scatters into page
+    ``tables[b, len // ps]`` at offset ``len % ps``. Idle slots write
+    to the reserved trash page and their length stays frozen.
+    """
+    tables, active = cache["block_tables"], cache["active"]
+    positions = cache["len"][:, None]                        # (B, 1)
+    view_pos, pid, off = paged_view(cache)
+    x = _embed(ctx, params, cfg, tokens)
+    windows = window_array(cfg)
+    # the kernel path has no local-window masking: gather handles
+    # windowed archs (gemma3 pattern) regardless of the requested impl
+    use_kernel = ctx.paged_attn_impl == "kernel" and not cfg.window_pattern
+    lengths_now = jnp.where(active > 0, cache["len"] + 1, 0)
+
+    quant = "k_codes" in cache
+    if quant:
+        xs = (params["layers"], windows, cache["k_codes"], cache["k_scales"],
+              cache["v_codes"], cache["v_scales"])
+    else:
+        xs = (params["layers"], windows, cache["k"], cache["v"])
+
+    def body(x, layer_xs):
+        lp, window, *leaves = layer_xs
+        h = rms_norm(x, lp["norm1_scale"], cfg.norm_eps)
+        y, new_leaves = paged_attn(
+            ctx, lp["attn"], h, positions, leaves, view_pos, pid, off,
+            lengths_now, tables, use_kernel=use_kernel,
+            num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, window=window,
+            rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+        x = x + y
+        h = rms_norm(x, lp["norm2_scale"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _ = moe_mod.moe_apply(
+                ctx, lp["moe"], h, top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor, act=cfg.mlp_act,
+                parallel_mode=cfg.moe.parallel_mode, dropless=True,
+                dispatch_groups=cfg.moe.dispatch_groups)
+        else:
+            y = mlp(ctx, lp["mlp"], h, cfg.mlp_act)
+        return x + y, new_leaves
+
+    x, new_kv = jax.lax.scan(body, x, xs)
+    logits = _head(ctx, params, cfg, x)
+    new_cache = dict(cache)
+    if quant:
+        (new_cache["k_codes"], new_cache["k_scales"],
+         new_cache["v_codes"], new_cache["v_scales"]) = new_kv
+    else:
+        new_cache["k"], new_cache["v"] = new_kv
+    new_cache["len"] = jnp.where(active > 0, cache["len"] + 1, cache["len"])
+    return new_cache, logits
+
+
 def lm_decode_step(ctx: Ctx, params, cfg, tokens, cache):
-    """One decode step. tokens (B, 1) -> (new_cache, logits (B, 1, V))."""
+    """One decode step. tokens (B, 1) -> (new_cache, logits (B, 1, V)).
+
+    Dispatches on the cache layout: a cache carrying ``block_tables``
+    is block-paged (see lm_init_paged_cache), otherwise dense."""
+    if "block_tables" in cache:
+        return lm_paged_decode_step(ctx, params, cfg, tokens, cache)
     B = tokens.shape[0]
     positions = cache["len"][:, None]                       # (B,1)
     x = _embed(ctx, params, cfg, tokens)

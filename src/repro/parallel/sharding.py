@@ -65,7 +65,7 @@ def _resolve(mesh: Mesh, logical: Optional[str]):
 
 
 def activation_spec(mesh: Mesh, *logical) -> P:
-    return P(*[_resolve(mesh, l) for l in logical])
+    return P(*[_resolve(mesh, ax) for ax in logical])
 
 
 def hint_pick(x, *specs):
@@ -79,7 +79,7 @@ def hint_pick(x, *specs):
     if mesh is None:
         return x
     for spec in specs:
-        resolved = [_resolve(mesh, l) for l in spec]
+        resolved = [_resolve(mesh, ax) for ax in spec]
         ok = True
         for dim, ax in zip(x.shape, resolved):
             if ax is None:

@@ -7,10 +7,11 @@ remain as thin single-shot wrappers for legacy callers.
 """
 
 from .engine import ServeEngine, greedy_generate, translate
+from .paged_cache import PageAllocator, pages_needed
 from .params import (GREEDY, Request, RequestOutput, RequestStats,
                      SamplingParams)
 from .pipeline import TranslationPipeline, deploy
 
 __all__ = ["ServeEngine", "greedy_generate", "translate", "SamplingParams",
            "GREEDY", "Request", "RequestOutput", "RequestStats",
-           "TranslationPipeline", "deploy"]
+           "TranslationPipeline", "deploy", "PageAllocator", "pages_needed"]

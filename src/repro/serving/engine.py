@@ -33,13 +33,14 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..models.layers import Ctx
+from .paged_cache import TRASH_PAGE, PageAllocator, paged_insert, pages_needed
 from .params import (GREEDY, Request, RequestOutput, RequestStats,
                      SamplingParams)
 from .sampler import sample_tokens
@@ -75,14 +76,46 @@ class ServeEngine:
     """
 
     def __init__(self, model, params, *, slots: int, max_len: int,
-                 kv_dtype: str = "bf16", ctx: Optional[Ctx] = None):
+                 kv_dtype: str = "bf16", ctx: Optional[Ctx] = None,
+                 paged: bool = False, page_size: int = 8,
+                 num_pages: Optional[int] = None,
+                 max_src_len: Optional[int] = None):
         self.model = model
         self.params = params
         self.ctx = ctx or Ctx()
         self.kv_dtype = kv_dtype
         self.max_len = max_len
         self.n_slots = slots
-        self.cache = model.init_cache(slots, max_len, kv_dtype)
+        fam = model.cfg.family
+        self.enc_cap = int(max_src_len or getattr(model.cfg, "enc_len", 0)
+                           or 0)
+        self.paged = bool(paged)
+        if self.paged:
+            if fam not in _PAD_SAFE:
+                raise ValueError(
+                    f"paged serving supports families {_PAD_SAFE}, got "
+                    f"{fam!r} (recurrent state is O(1) per sequence; vlm "
+                    "prompt lengths are not lengths-derived)")
+            self.page_size = int(page_size)
+            self.max_pages = pages_needed(max_len, self.page_size)
+            usable = num_pages if num_pages is not None \
+                else slots * self.max_pages
+            self.allocator = PageAllocator(usable + 1, reserved=1)
+            if fam in ("encdec", "audio"):
+                self.cache = model.init_paged_cache(
+                    slots, self.max_pages, usable + 1, self.page_size,
+                    kv_dtype, enc_len=self.enc_cap)
+            else:
+                self.cache = model.init_paged_cache(
+                    slots, self.max_pages, usable + 1, self.page_size,
+                    kv_dtype)
+            self._chains: Dict[int, list] = {}      # request id -> pages
+        else:
+            if fam in ("encdec", "audio"):
+                self.cache = model.init_cache(slots, max_len, kv_dtype,
+                                              enc_len=self.enc_cap)
+            else:
+                self.cache = model.init_cache(slots, max_len, kv_dtype)
         self.slots = [_Slot(i) for i in range(slots)]
         self.cur = jnp.zeros((slots, 1), jnp.int32)
         # per-slot sampling state — traced args of the fused step, so
@@ -98,6 +131,9 @@ class ServeEngine:
         self._next_id = 0
         self._stats: Dict[int, RequestStats] = {}
         self._last_admitted_slot = -1
+        self._decode_steps = 0            # occupancy accounting
+        self._active_slot_steps = 0
+        self._page_slot_steps = 0
 
         fam = model.cfg.family
         self._tkey = "tgt_in" if fam in ("encdec", "audio") else "tokens"
@@ -127,6 +163,22 @@ class ServeEngine:
 
         self._step_fn = jax.jit(_step)
 
+        def _prefill_paged(p, inputs, lengths, slot_ids, page_rows, cache,
+                           temps, top_ks, top_ps, keys):
+            # one jitted call admits a whole group: batched prefill into a
+            # prompt-sized dense mini-cache, fused first-token sampling,
+            # then scatter of the mini-cache into page chains / cross rows
+            n, s_bucket = inputs[self._tkey].shape
+            mini = model.init_cache(n, s_bucket, kv_dtype)
+            mini, logits = model.prefill(self.ctx, p, mini, inputs)
+            last = logits[jnp.arange(n), lengths - 1].astype(jnp.float32)
+            toks = sample_tokens(last, temps, top_ks, top_ps, keys,
+                                 jnp.zeros((n,), jnp.int32))
+            cache = paged_insert(cache, mini, slot_ids, page_rows, lengths)
+            return cache, toks
+
+        self._prefill_paged_fn = jax.jit(_prefill_paged)
+
     # ------------------------------------------------------------------
     # request API
     # ------------------------------------------------------------------
@@ -135,9 +187,10 @@ class ServeEngine:
         """Enqueue a request; returns its request id.
 
         ``request`` is a Request or a B=1 model batch dict; ``params``
-        overrides the request's SamplingParams (default: greedy). The
-        request is admitted immediately when a slot is free, otherwise
-        it waits in the engine's queue until step() frees one.
+        overrides the request's SamplingParams (default: greedy). On a
+        dense engine the request is admitted immediately when a slot is
+        free; on a paged engine admission happens at the next step() so
+        a burst of submits lands as one batched multi-slot prefill.
         """
         if not isinstance(request, Request):
             request = Request(inputs=dict(request), params=params or GREEDY)
@@ -154,15 +207,25 @@ class ServeEngine:
                 f"{request.params.max_new_tokens} = {budget} cache positions "
                 f"but the engine was built with max_len={self.max_len}; "
                 f"shorten the request or deploy with a larger max_len")
-        if "src_tokens" in request.inputs:
-            # the batch cache's cross-attention leaves are allocated at
-            # cfg.enc_len: a mismatched source length cannot be spliced
-            se = jnp.asarray(request.inputs["src_tokens"]).shape[-1]
-            if se != self.model.cfg.enc_len:
+        if self.paged:
+            need = pages_needed(budget, self.page_size)
+            usable = self.allocator.capacity - self.allocator.reserved
+            if need > usable:
+                # fail fast: an unfittable reservation would block the
+                # FIFO admission head forever, not just wait its turn
                 raise ValueError(
-                    f"src_tokens length {se} != cfg.enc_len "
-                    f"{self.model.cfg.enc_len}; the engine's cross-attention "
-                    f"cache is fixed-size — resize the source batch")
+                    f"request needs {need} KV pages but the pool holds "
+                    f"only {usable}; deploy with num_pages>={need} or "
+                    f"shorten the request")
+        se = self._src_len(request.inputs)
+        if se is not None and se > self.enc_cap:
+            # shorter sources are fine (the per-slot cross cache is
+            # allocated at enc_cap and masked by cross_len); longer ones
+            # cannot fit the allocated cross-attention leaves
+            raise ValueError(
+                f"source length {se} exceeds the engine's cross-attention "
+                f"capacity {self.enc_cap}; deploy with max_src_len>="
+                f"{se} or shorten the source")
         request = dataclasses.replace(
             request, inputs={**request.inputs, self._tkey: toks},
             id=self._next_id)
@@ -170,14 +233,24 @@ class ServeEngine:
         self._stats[request.id] = RequestStats(
             arrival_s=time.perf_counter(), prompt_len=prompt_len)
         self._queue.append(request)
-        self._admit_pending()
+        if not self.paged:          # paged admission batches at step()
+            self._admit_pending()
         return request.id
 
     def step(self) -> List[RequestOutput]:
         """Admit pending requests, run one batched decode step, and
-        return the RequestOutputs of every request finished this step."""
+        return the RequestOutputs of every request finished this step.
+
+        Admission is continuous: every step first drains as much of the
+        queue as freed slots (and, when paged, freed pages) allow, so
+        slots refill mid-flight instead of waiting for a full drain."""
         self._admit_pending()
-        if any(s.active for s in self.slots):
+        n_active = sum(s.active for s in self.slots)
+        if n_active:
+            self._decode_steps += 1
+            self._active_slot_steps += n_active
+            if self.paged:
+                self._page_slot_steps += self.allocator.pages_in_use
             self.cache, nxt = self._step_fn(
                 self.params, self.cur, self.cache, self._temps,
                 self._top_ks, self._top_ps, self._keys, self._offsets)
@@ -232,6 +305,36 @@ class ServeEngine:
         bounded by the bucket count, not the number of prompt lengths)."""
         return len(self.prefill_shapes)
 
+    def reset_metrics(self) -> None:
+        """Zero the occupancy/page-utilization accumulators (e.g. after a
+        warmup pass, so reported numbers cover only the measured run)."""
+        self._decode_steps = 0
+        self._active_slot_steps = 0
+        self._page_slot_steps = 0
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of decode slots active per step served so far."""
+        if not self._decode_steps:
+            return 0.0
+        return self._active_slot_steps / (self._decode_steps * self.n_slots)
+
+    @property
+    def page_utilization(self) -> float:
+        """Mean fraction of the page pool in use per decode step."""
+        if not self.paged or not self._decode_steps:
+            return 0.0
+        usable = self.allocator.capacity - self.allocator.reserved
+        return self._page_slot_steps / (self._decode_steps * usable)
+
+    @property
+    def kv_cache_bytes(self) -> int:
+        """Allocated KV-cache storage (the paged/dense memory knob)."""
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(self.cache):
+            total += leaf.size * leaf.dtype.itemsize
+        return total
+
     # ------------------------------------------------------------------
     # legacy slot-level surface (kept for pre-request-API callers)
     # ------------------------------------------------------------------
@@ -242,7 +345,12 @@ class ServeEngine:
         # be synchronous, so the legacy contract can't be honoured
         if self._queue or self.free_slot() is None:
             raise RuntimeError("no free slots")
-        self.submit(batch_one, SamplingParams(max_new_tokens=gen_tokens))
+        rid = self.submit(batch_one, SamplingParams(max_new_tokens=gen_tokens))
+        if self.paged:
+            self._admit_pending()        # legacy contract: admit now
+        if self._queue:                  # paged: page pool exhausted
+            self.abort(rid)
+            raise RuntimeError("no free pages")
         return self._last_admitted_slot
 
     def tick(self) -> List[int]:
@@ -271,9 +379,127 @@ class ServeEngine:
             b *= 2
         return min(b, self.max_len)
 
+    @staticmethod
+    def _src_len(inputs) -> Optional[int]:
+        """Cross-attention source length of a request (None for LMs)."""
+        if "src_tokens" in inputs:
+            return int(jnp.asarray(inputs["src_tokens"]).shape[-1])
+        if "frames" in inputs:
+            return int(jnp.asarray(inputs["frames"]).shape[1])
+        return None
+
     def _admit_pending(self):
-        while self._queue and self.free_slot() is not None:
-            self._admit(self._queue.popleft())
+        if not self.paged:
+            while self._queue and self.free_slot() is not None:
+                self._admit(self._queue.popleft())
+            return
+        while self._queue:
+            group = self._take_group()
+            if not group:
+                break
+            self._admit_group(group)
+
+    # -- paged admission -----------------------------------------------
+
+    def _request_pages(self, request: Request) -> int:
+        """Pages reserved at admission: the full prompt+decode budget, so
+        an admitted request can never die mid-decode from page pressure
+        (no preemption/swap path yet — see ROADMAP)."""
+        budget = (request.inputs[self._tkey].shape[1]
+                  + request.params.max_new_tokens)
+        return pages_needed(min(budget, self.max_len), self.page_size)
+
+    def _shape_key(self, request: Request):
+        """Padded-batch compile key: prompt bucket + any side-input shapes."""
+        key = [self._bucket(request.inputs[self._tkey].shape[1])]
+        for k in ("src_tokens", "frames", "img_embeds"):
+            if k in request.inputs:
+                key.append((k, tuple(request.inputs[k].shape[1:])))
+        return tuple(key)
+
+    def _take_group(self) -> List[Request]:
+        """Pop the next batched-prefill admission group off the queue.
+
+        FIFO scan from the head: take same-shaped requests while slots
+        and pages last, then trim to a power-of-two batch so compiled
+        prefill shapes stay bounded. An empty return means the head
+        request is blocked (no slot, or its page reservation cannot be
+        met until in-flight requests retire) — admission never skips
+        over it, so no request starves.
+        """
+        free = sum(not s.active for s in self.slots)
+        if not free or not self._queue:
+            return []
+        head_key = self._shape_key(self._queue[0])
+        group: List[Request] = []
+        need = 0
+        for r in self._queue:
+            if len(group) >= free or self._shape_key(r) != head_key:
+                break
+            pages = self._request_pages(r)
+            if not self.allocator.can_alloc(need + pages):
+                break
+            group.append(r)
+            need += pages
+        n = 1
+        while n * 2 <= len(group):
+            n *= 2
+        group = group[:n]
+        for _ in group:
+            self._queue.popleft()
+        return group
+
+    def _admit_group(self, group: List[Request]):
+        """Admit a same-shape group under ONE jitted prefill+insert call."""
+        n = len(group)
+        free = [s.id for s in self.slots if not s.active][:n]
+        toks = [r.inputs[self._tkey] for r in group]
+        true_lens = [t.shape[1] for t in toks]
+        pad_to = self._bucket(max(true_lens))
+        inputs = {self._tkey: jnp.concatenate(
+            [jnp.pad(t, ((0, 0), (0, pad_to - t.shape[1]))) for t in toks])}
+        inputs["lengths"] = jnp.asarray(true_lens, jnp.int32)
+        for k in ("src_tokens", "frames", "img_embeds"):
+            if k in group[0].inputs:
+                inputs[k] = jnp.concatenate([r.inputs[k] for r in group])
+        chains = []
+        rows = np.zeros((n, self.max_pages), np.int32)  # 0 = trash page
+        for i, r in enumerate(group):
+            chain = self.allocator.alloc_chain(self._request_pages(r))
+            chains.append(chain)
+            rows[i, :len(chain)] = chain
+        keys = jnp.stack(
+            [jax.random.PRNGKey(r.params.seed) for r in group])
+        self.cache, first = self._prefill_paged_fn(
+            self.params, inputs, jnp.asarray(true_lens, jnp.int32),
+            jnp.asarray(free, jnp.int32), jnp.asarray(rows), self.cache,
+            jnp.asarray([r.params.temperature for r in group], jnp.float32),
+            jnp.asarray([r.params.top_k for r in group], jnp.int32),
+            jnp.asarray([r.params.top_p for r in group], jnp.float32),
+            keys)
+        self.prefill_shapes.add(
+            tuple(sorted((k, tuple(v.shape)) for k, v in inputs.items())))
+        first = np.asarray(first)
+        now = time.perf_counter()
+        for i, (r, sid) in enumerate(zip(group, free)):
+            s = self.slots[sid]
+            sp = r.params
+            tok = int(first[i])
+            self.cur = self.cur.at[sid, 0].set(tok)
+            self._temps = self._temps.at[sid].set(sp.temperature)
+            self._top_ks = self._top_ks.at[sid].set(sp.top_k)
+            self._top_ps = self._top_ps.at[sid].set(sp.top_p)
+            self._keys = self._keys.at[sid].set(keys[i])
+            self._offsets = self._offsets.at[sid].set(1)
+            self._chains[r.id] = chains[i]
+            s.request = r
+            s.tokens = [tok]
+            s.active = True
+            self._last_admitted_slot = sid
+            self._stats[r.id].first_token_s = now
+            self._maybe_retire(s)
+
+    # -- dense admission -----------------------------------------------
 
     def _admit(self, request: Request):
         slot = self.free_slot()
@@ -295,7 +521,8 @@ class ServeEngine:
             jnp.float32(sp.top_p), key)
         self.prefill_shapes.add(
             tuple(sorted((k, tuple(v.shape)) for k, v in inputs.items())))
-        self.cache = self._splice(self.cache, one_cache, slot)
+        self.cache = self._splice(self.cache, self._pad_cross(one_cache),
+                                  slot)
         tok = int(tok)
         self.cur = self.cur.at[slot, 0].set(tok)
         self._temps = self._temps.at[slot].set(sp.temperature)
@@ -325,6 +552,31 @@ class ServeEngine:
             rid, s.request.inputs, list(s.tokens), reason, st, slot=s.id))
         s.active = False
         s.request = None
+        if self.paged:
+            # reclaim the chain and park the slot on the trash page so
+            # its idle decode writes cannot touch live pages
+            self.allocator.free_chain(self._chains.pop(rid))
+            self.cache["block_tables"] = \
+                self.cache["block_tables"].at[s.id].set(TRASH_PAGE)
+            self.cache["active"] = self.cache["active"].at[s.id].set(0)
+            self.cache["len"] = self.cache["len"].at[s.id].set(0)
+
+    def _pad_cross(self, one_cache):
+        """Zero-pad a single-request cache's cross-attention leaves from
+        the request's source length up to the engine's enc capacity so
+        mixed source lengths splice into one batch cache (the valid span
+        is tracked per slot via cross_len)."""
+        if not self.enc_cap:
+            return one_cache
+        one_cache = dict(one_cache)
+        for k, v in one_cache.items():
+            if k.startswith("cross_") and v.ndim >= 3:
+                se = v.shape[2]
+                if se < self.enc_cap:
+                    pad = [(0, 0)] * v.ndim
+                    pad[2] = (0, self.enc_cap - se)
+                    one_cache[k] = jnp.pad(v, pad)
+        return one_cache
 
     _BATCH_LEADING = ("'pos'", "'len'", "'pos_roll'")
 

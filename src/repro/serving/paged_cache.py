@@ -1,0 +1,197 @@
+"""Block-paged KV cache: free-list page allocator + shared block storage.
+
+Dense serving caches allocate ``slots x max_len`` KV positions up front,
+so HBM scales with the *worst-case* request and idles whenever actual
+lengths are shorter. This module replaces that with vLLM-style paging:
+
+  * the KV cache is a shared pool of ``num_pages`` fixed-size pages
+    (``page_size`` tokens each), stored layer-stacked as
+    ``(L, P, ps, Hkv, hd)`` in bf16 or int8 codes + f32 scales (storage
+    dtypes come from ``core.formats.FORMATS``);
+  * each in-flight request owns a *chain* of pages handed out by the
+    host-side ``PageAllocator`` free list; token ``t`` of a request
+    lives at ``(chain[t // ps], t % ps)``;
+  * the device-side view of a chain is a row of the engine's block
+    table ``(slots, max_pages)`` int32; unused entries point at the
+    reserved trash page 0, which valid-length masking excludes from
+    attention and which absorbs writes from idle slots.
+
+The page-walk jnp primitives (`gather_pages` / `scatter_token` /
+`scatter_prefill`) live in `kernels/paging.py` — one source of truth
+shared by the model decode paths, this engine layer, and the kernel
+oracle — and are re-exported here; the TPU-path equivalent is the
+Pallas kernel in `kernels/paged_attn.py`, which walks block tables via
+scalar-prefetched index maps instead of a gathered dense copy.
+
+This module is kept ruff-format-clean (CI lint job checks it).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+
+from ..core.formats import get_format
+from ..kernels.paging import (
+    TRASH_PAGE,
+    gather_pages,
+    scatter_prefill,
+    scatter_token,
+)
+
+__all__ = [
+    "PageAllocator",
+    "pages_needed",
+    "init_paged_kv",
+    "gather_pages",
+    "scatter_token",
+    "scatter_prefill",
+    "paged_insert",
+    "TRASH_PAGE",
+]
+
+
+def pages_needed(num_tokens: int, page_size: int) -> int:
+    """Pages required to hold ``num_tokens`` cache positions."""
+    return max(0, -(-num_tokens // page_size))
+
+
+class PageAllocator:
+    """Host-side free-list allocator over the shared page pool.
+
+    Pages are plain ints in ``[reserved, capacity)``; page ids below
+    ``reserved`` (the trash page) are never handed out. The allocator
+    is strict: freeing a page that is not currently allocated raises,
+    as does allocating beyond capacity — serving bugs surface as
+    exceptions instead of silent cache corruption.
+    """
+
+    def __init__(self, capacity: int, reserved: int = 1):
+        if capacity <= reserved:
+            raise ValueError(f"capacity {capacity} must exceed reserved {reserved}")
+        self.capacity = capacity
+        self.reserved = reserved
+        self._free: List[int] = list(range(reserved, capacity))
+        self._in_use: set = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return len(self._in_use)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.num_free
+
+    def alloc_chain(self, n: int) -> List[int]:
+        """Allocate ``n`` pages; returns the chain in token order."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > self.num_free:
+            raise MemoryError(
+                f"paged KV cache exhausted: need {n} pages, "
+                f"{self.num_free}/{self.capacity - self.reserved} free"
+            )
+        chain = self._free[:n]
+        del self._free[:n]
+        self._in_use.update(chain)
+        return chain
+
+    def free_chain(self, chain: Sequence[int]) -> None:
+        """Return a request's pages to the free list (chain order kept)."""
+        chain = list(chain)
+        if len(set(chain)) != len(chain):
+            raise ValueError(f"chain contains duplicate pages: {chain}")
+        for p in chain:
+            if p not in self._in_use:
+                raise ValueError(
+                    f"double free / foreign page {p} (in use: "
+                    f"{sorted(self._in_use)})"
+                )
+        for p in chain:
+            self._in_use.remove(p)
+        self._free.extend(chain)
+
+    def check(self) -> None:
+        """Invariant: every page is free xor in-use, exactly once."""
+        assert len(self._free) == len(set(self._free))
+        assert not set(self._free) & self._in_use
+        total = len(self._free) + len(self._in_use)
+        assert total == self.capacity - self.reserved
+
+
+def init_paged_kv(
+    num_layers: int,
+    num_pages: int,
+    page_size: int,
+    num_kv_heads: int,
+    head_dim: int,
+    kv_dtype: str = "bf16",
+):
+    """Shared paged K/V storage leaves, layer-stacked for lax.scan.
+
+    Returns the storage dict only (no block table / lengths — those are
+    per-engine); leaves are (L, P, ps, Hkv, hd) [+ (L, P, ps, Hkv)
+    scales for int8], dtypes resolved via core.formats.
+    """
+    L, P, ps = num_layers, num_pages, page_size
+    Hkv, hd = num_kv_heads, head_dim
+    if kv_dtype == "int8":
+        code_dt = get_format("int8").storage_dtype
+        return {
+            "k_codes": jnp.zeros((L, P, ps, Hkv, hd), code_dt),
+            "k_scales": jnp.zeros((L, P, ps, Hkv), jnp.float32),
+            "v_codes": jnp.zeros((L, P, ps, Hkv, hd), code_dt),
+            "v_scales": jnp.zeros((L, P, ps, Hkv), jnp.float32),
+        }
+    if kv_dtype not in ("bf16", "f32"):
+        raise ValueError(
+            f"paged KV storage supports bf16 | f32 | int8, got {kv_dtype!r}"
+        )
+    dt = get_format(kv_dtype).storage_dtype
+    return {
+        "k": jnp.zeros((L, P, ps, Hkv, hd), dt),
+        "v": jnp.zeros((L, P, ps, Hkv, hd), dt),
+    }
+
+
+_CROSS_KEYS = (
+    "cross_k",
+    "cross_v",
+    "cross_k_codes",
+    "cross_k_scales",
+    "cross_v_codes",
+    "cross_v_scales",
+)
+_SELF_KEYS = ("k", "v", "k_codes", "k_scales", "v_codes", "v_scales")
+
+
+def paged_insert(cache, mini, slot_ids, page_rows, lengths):
+    """Commit a dense prefill mini-cache into the paged batch cache.
+
+    ``mini`` is the (n, S_bucket)-shaped dense cache a batched prefill
+    produced; its self-attention KV scatters into the page chains named
+    by ``page_rows`` (n, maxp), its cross-attention leaves (enc-dec)
+    splice into the per-slot dense cross buffers at ``slot_ids`` (n,),
+    and the block table / length / active rows flip to live. Pure jnp —
+    runs inside the engine's jitted admission step.
+    """
+    new = dict(cache)
+    for key in _SELF_KEYS:
+        if key in cache and key in mini:
+            new[key] = scatter_prefill(cache[key], mini[key], page_rows, lengths)
+    for key in _CROSS_KEYS:
+        if key in cache and key in mini:
+            se = mini[key].shape[2]
+            new[key] = cache[key].at[:, slot_ids, :se].set(
+                mini[key].astype(cache[key].dtype)
+            )
+    if "cross_len" in cache:
+        new["cross_len"] = cache["cross_len"].at[slot_ids].set(mini["cross_len"])
+    new["block_tables"] = cache["block_tables"].at[slot_ids].set(page_rows)
+    new["len"] = cache["len"].at[slot_ids].set(lengths)
+    new["active"] = cache["active"].at[slot_ids].set(1)
+    return new

@@ -17,6 +17,7 @@ run_until_drained / abort).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, List, Optional, Sequence, Union
 
 import jax
@@ -97,7 +98,9 @@ class TranslationPipeline:
 def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
            max_len: int = 64, smoke: bool = False, params: Any = None,
            ctx: Optional[Ctx] = None, kv_dtype: Optional[str] = None,
-           init_seed: int = 0) -> TranslationPipeline:
+           init_seed: int = 0, paged: bool = False, page_size: int = 8,
+           num_pages: Optional[int] = None,
+           max_src_len: Optional[int] = None) -> TranslationPipeline:
     """Build a ready-to-serve TranslationPipeline in one call.
 
     arch_or_cfg: registry name (see configs.REGISTRY) or a ModelConfig.
@@ -107,6 +110,14 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
                  f32 (skipped when ``ctx`` is given).
     params:      pre-trained parameters to deploy (still quantized per
                  ``policy``); default: fresh init from ``init_seed``.
+    paged:       block-paged KV cache + batched prefill admission
+                 (attention families): KV memory is a shared pool of
+                 ``num_pages`` pages of ``page_size`` tokens (default
+                 pool = dense capacity; pass a smaller ``num_pages`` to
+                 cap memory at expected — not worst-case — usage).
+    max_src_len: cross-attention capacity for enc-dec families
+                 (default cfg.enc_len); admitted requests may carry any
+                 source length up to it.
     """
     if policy not in PRESETS:
         raise KeyError(f"unknown policy {policy!r}; have {sorted(PRESETS)}")
@@ -122,8 +133,24 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
     fp_bytes = tree_nbytes(params)
     if policy != "f32":
         params = quantize_tree(params, PRESETS[policy])
+    kv = kv_dtype or PRESETS[policy].kv_cache
+    if paged and kv == "fp8":
+        if kv_dtype is not None:     # explicitly requested: don't remap
+            raise ValueError(
+                "paged KV storage supports bf16 | f32 | int8; fp8 pages "
+                "are not implemented (see ROADMAP) — drop kv_dtype='fp8' "
+                "or deploy dense")
+        # preset fallback: nearest 8-bit format. Loud, because the
+        # dense==paged token-identity contract does not hold across a
+        # KV-format change.
+        warnings.warn(
+            f"policy {policy!r} stores KV as fp8, which paged caches do "
+            "not support yet; using int8 pages (token streams may differ "
+            "from a dense fp8 run)", stacklevel=2)
+        kv = "int8"
     engine = ServeEngine(model, params, slots=slots, max_len=max_len,
-                         kv_dtype=kv_dtype or PRESETS[policy].kv_cache,
-                         ctx=ctx)
+                         kv_dtype=kv, ctx=ctx, paged=paged,
+                         page_size=page_size, num_pages=num_pages,
+                         max_src_len=max_src_len)
     return TranslationPipeline(cfg, model, params, engine, ctx, policy,
                                fp_bytes)

@@ -13,11 +13,9 @@ Fleet-scale behaviours (exercised on 1 device here, designed for 512+):
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Iterator, Optional
+from typing import Callable, Iterator
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import CheckpointManager
 

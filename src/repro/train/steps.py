@@ -16,8 +16,7 @@ Steps:
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

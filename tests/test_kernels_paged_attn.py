@@ -1,0 +1,82 @@
+"""Paged decode-attention kernel vs oracle (block tables, ragged chains)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _setup(B, Hkv, d, P, ps, maxp, seed=0):
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.standard_normal((P, ps, Hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((P, ps, Hkv, d)), jnp.float32)
+    # disjoint chains over the pool, page 0 reserved as trash
+    perm = 1 + rng.permutation(P - 1)
+    tables = perm[:B * maxp].reshape(B, maxp).astype(np.int32)
+    return rng, k, v, jnp.asarray(tables)
+
+
+def _run_int8(B, H, Hkv, d, P, ps, maxp, lengths, seed=0):
+    rng, k, v, tables = _setup(B, Hkv, d, P, ps, maxp, seed)
+    q = jnp.asarray(rng.standard_normal((B, H, d)), jnp.float32)
+    kc, ks = ops.quantize_kv(k)
+    vc, vs = ops.quantize_kv(v)
+    lens = jnp.asarray(lengths, jnp.int32)
+    out = ops.paged_decode_attention(q, kc, vc, tables, lens, k_scales=ks,
+                                     v_scales=vs, out_dtype=jnp.float32)
+    G = H // Hkv
+    orf = ref.paged_attn_ref(
+        q.reshape(B, Hkv, G, d),
+        jnp.transpose(kc, (0, 2, 1, 3)), jnp.transpose(ks, (0, 2, 1)),
+        jnp.transpose(vc, (0, 2, 1, 3)), jnp.transpose(vs, (0, 2, 1)),
+        tables, lens, d ** -0.5).reshape(B, H, d)
+    return float(jnp.max(jnp.abs(out - orf)))
+
+
+@pytest.mark.parametrize("H,Hkv,d", [(8, 2, 64), (4, 1, 128), (16, 16, 64),
+                                     (10, 2, 64)])
+def test_gqa_configs(H, Hkv, d):
+    assert _run_int8(2, H, Hkv, d, 17, 16, 4, [64, 33]) < 1e-5
+
+
+def test_ragged_chain_lengths():
+    assert _run_int8(4, 8, 2, 64, 33, 8, 4, [32, 1, 17, 29]) < 1e-5
+
+
+def test_bf16_pages_match_oracle():
+    B, H, Hkv, d, P, ps, maxp = 2, 8, 2, 64, 9, 16, 4
+    rng, k, v, tables = _setup(B, Hkv, d, P, ps, maxp, seed=1)
+    q = jnp.asarray(rng.standard_normal((B, H, d)), jnp.float32)
+    kb, vb = k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+    lens = jnp.asarray([50, 64], jnp.int32)
+    out = ops.paged_decode_attention(q, kb, vb, tables, lens,
+                                     out_dtype=jnp.float32)
+    G = H // Hkv
+    orf = ref.paged_attn_ref(
+        q.reshape(B, Hkv, G, d), jnp.transpose(kb, (0, 2, 1, 3)), None,
+        jnp.transpose(vb, (0, 2, 1, 3)), None, tables, lens,
+        d ** -0.5).reshape(B, H, d)
+    assert float(jnp.max(jnp.abs(out - orf))) < 1e-5
+
+
+def test_trash_page_is_masked_out():
+    """Out-of-chain table entries point at page 0; length masking must
+    make its contents unobservable."""
+    B, H, Hkv, d, P, ps = 1, 4, 2, 64, 5, 8
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((B, H, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((P, ps, Hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((P, ps, Hkv, d)), jnp.float32)
+    lens = jnp.asarray([ps], jnp.int32)          # only the first page valid
+    tbl = jnp.asarray([[1, 0, 0, 0]], jnp.int32)
+
+    def run(kk, vv):
+        kc, ks = ops.quantize_kv(kk)
+        vc, vs = ops.quantize_kv(vv)
+        return ops.paged_decode_attention(q, kc, vc, tbl, lens, k_scales=ks,
+                                          v_scales=vs, out_dtype=jnp.float32)
+
+    base = run(k, v)
+    poisoned = run(k.at[0].set(1e3), v.at[0].set(-1e3))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(poisoned))

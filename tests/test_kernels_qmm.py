@@ -1,6 +1,5 @@
 """qmm Pallas kernel vs pure-jnp oracle: shape/dtype/format sweep."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

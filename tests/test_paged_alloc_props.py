@@ -1,0 +1,90 @@
+"""Property tests for the page allocator (hypothesis).
+
+Random interleavings of alloc / free / abort must never double-allocate
+a page, never leak after every chain is reclaimed, and must preserve
+chain order across splice/reclaim cycles. Skipped when hypothesis is
+not installed (CI's tier-1 matrix installs it).
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving.paged_cache import PageAllocator, pages_needed  # noqa: E402
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=6), min_size=1,
+                max_size=40),
+       st.integers(min_value=4, max_value=32))
+def test_alloc_free_interleavings_keep_invariants(sizes, usable):
+    """Allocate chains of the given sizes, freeing a random-ish victim
+    whenever the pool can't satisfy the next chain; every page is always
+    free xor in-use exactly once, and chains never overlap."""
+    a = PageAllocator(usable + 1)
+    live = {}
+    for i, n in enumerate(sizes):
+        while not a.can_alloc(n) and live:
+            victim = sorted(live)[i % len(live)]    # deterministic victim
+            a.free_chain(live.pop(victim))
+            a.check()
+        if not a.can_alloc(n):
+            with pytest.raises(MemoryError):
+                a.alloc_chain(n)
+            continue
+        chain = a.alloc_chain(n)
+        assert len(chain) == n and len(set(chain)) == n
+        assert 0 not in chain                       # trash page protected
+        for other in live.values():
+            assert not set(chain) & set(other)      # no double-allocation
+        live[i] = chain
+        a.check()
+    for chain in live.values():                     # EOS/abort: reclaim all
+        a.free_chain(chain)
+    a.check()
+    assert a.pages_in_use == 0 and a.num_free == usable
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=5), min_size=1,
+                max_size=8))
+def test_chain_order_preserved_across_reclaim(sizes):
+    """A chain read back page-by-page is exactly the allocation order
+    (token t lives at chain[t // ps]); reclaim + realloc cycles must not
+    scramble held chains."""
+    a = PageAllocator(sum(sizes) + 1)
+    chains = [a.alloc_chain(n) for n in sizes]
+    snapshots = [list(c) for c in chains]
+    # splice/reclaim churn: free and reallocate every other chain
+    for i in range(0, len(chains), 2):
+        a.free_chain(chains[i])
+        chains[i] = a.alloc_chain(len(chains[i]))
+    for i in range(1, len(chains), 2):              # held chains untouched
+        assert chains[i] == snapshots[i]
+    seen = set()
+    for c in chains:                                # still pairwise disjoint
+        assert not set(c) & seen
+        seen |= set(c)
+    a.check()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(min_value=0, max_value=1000),
+       st.integers(min_value=1, max_value=64))
+def test_pages_needed_is_exact_ceiling(tokens, ps):
+    n = pages_needed(tokens, ps)
+    assert n * ps >= tokens
+    assert (n - 1) * ps < tokens or n == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=2, max_value=16))
+def test_double_free_always_raises(n):
+    a = PageAllocator(n + 1)
+    c = a.alloc_chain(n)
+    a.free_chain(c)
+    with pytest.raises(ValueError):
+        a.free_chain(c[:1])
+    a.check()

@@ -12,7 +12,6 @@ reduced config and asserts the paper's two headline properties:
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import REGISTRY, reduce_config
 from repro.core import PRESETS, quantize_tree, tree_nbytes
