@@ -16,24 +16,36 @@ config, along two axes the paged-KV engine moves:
   * tok/s vs request rate — requests arrive ``rate`` per engine step
     instead of as one burst, exercising continuous mid-flight admission.
 
+``--horizon K`` runs every engine with K-step horizon-fused decode (one
+host sync per K decode steps instead of per token); rows then report
+``decode_syncs`` and ``tokens_per_sync`` so the BENCH trajectory tracks
+host-overhead elimination, and a tripwire reds the run if the fused
+path silently fell back to per-token syncing (``decode_syncs`` above
+``ceil(tokens/horizon) + slots``). ``--impl pallas`` routes matmuls
+through the Pallas qmm kernel and paged attention through the Pallas
+block-table kernel (on CPU set REPRO_PALLAS_INTERPRET=1).
+
 Rows (CSV on stdout; ``--json PATH`` additionally writes the artifact
 consumed by CI's bench-smoke job):
   serve_{policy}_{dense|paged}   burst throughput + occupancy + kv MB
   serve_{policy}_paged_rate{r}   continuous-arrival throughput
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json P]
+        [--horizon K] [--impl xla|pallas]
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import jax.numpy as jnp
 
 from repro.data import SyntheticTranslation
-from repro.serving import SamplingParams, deploy, pages_needed
+from repro.serving import (IMPL_CHOICES, SamplingParams, deploy, impl_routes,
+                           pages_needed)
 
 from .common import csv_row
 
@@ -81,17 +93,30 @@ def serve_rate(eng, reqs, gen, rate):
     return sum(o.num_generated for o in outs), dt, eng.occupancy
 
 
-def _deploy(pol, paged, slots, smoke):
+def _deploy(pol, paged, slots, smoke, horizon=1, impl="xla"):
     # paged engine: same page pool as the dense engine's KV capacity,
     # spread over twice the slots — memory buys concurrency, not padding
+    impls = impl_routes(impl)
     if paged:
         return deploy("nllb600m", pol, slots=2 * slots, max_len=MAX_LEN,
                       smoke=smoke, paged=True, page_size=PAGE,
-                      num_pages=slots * pages_needed(MAX_LEN, PAGE))
-    return deploy("nllb600m", pol, slots=slots, max_len=MAX_LEN, smoke=smoke)
+                      num_pages=slots * pages_needed(MAX_LEN, PAGE),
+                      horizon=horizon, **impls)
+    return deploy("nllb600m", pol, slots=slots, max_len=MAX_LEN, smoke=smoke,
+                  horizon=horizon, **impls)
 
 
-def run(smoke: bool = False, json_path: str | None = None):
+def _sync_bound(toks: int, horizon: int, extra: int) -> int:
+    """Most decode syncs a healthy fused engine may need: one per full
+    horizon of tokens plus ``extra`` partially-filled horizons — one
+    per slot under burst admission (requests retire in waves), one per
+    request under trickle admission (each admission lands at its own
+    horizon boundary and can finish inside its own clamped scan)."""
+    return math.ceil(toks / max(horizon, 1)) + extra
+
+
+def run(smoke: bool = False, json_path: str | None = None,
+        horizon: int = 1, impl: str = "xla"):
     policies = POLICIES[:2] if smoke else POLICIES
     n_req = REQUESTS
     rows = []
@@ -103,15 +128,27 @@ def run(smoke: bool = False, json_path: str | None = None):
         rows.append({"name": name, "us_per_call": round(us, 1),
                      "derived": derived})
 
+    def check_syncs(name, eng, toks, extra):
+        # silent-fallback tripwire: a fused engine that still syncs per
+        # token reports ~toks syncs, far above the horizon-level bound
+        bound = _sync_bound(toks, horizon, extra)
+        if eng.decode_syncs > bound:
+            tripped.append(
+                f"{name}: decode_syncs {eng.decode_syncs} > "
+                f"ceil({toks}/{horizon}) + {extra} = {bound}")
+
     for pol in policies:
         occ = {}
         for mode in ("dense", "paged"):
-            pipe = _deploy(pol, mode == "paged", SLOTS, smoke=True)
+            pipe = _deploy(pol, mode == "paged", SLOTS, smoke=True,
+                           horizon=horizon, impl=impl)
             reqs = _requests(pipe.cfg, n_req)
             serve_burst(pipe.engine, reqs, GEN)          # warmup: compiles
             pipe.engine.reset_metrics()                  # measured run only
             toks, dt, _ = serve_burst(pipe.engine, reqs, GEN)
             occ[mode] = pipe.engine.occupancy
+            check_syncs(f"serve_{pol}_{mode}", pipe.engine, toks,
+                        pipe.engine.n_slots)
             emit(f"serve_{pol}_{mode}", dt * 1e6 / max(toks, 1), {
                 "tok_s": round(toks / dt, 1),
                 "requests": n_req,
@@ -120,6 +157,9 @@ def run(smoke: bool = False, json_path: str | None = None):
                 "kv_mb": round(pipe.engine.kv_cache_bytes / 2**20, 3),
                 "compression": f"{pipe.compression:.2f}x",
                 "prefill_compiles": pipe.engine.prefill_compiles,
+                "horizon": horizon,
+                "decode_syncs": pipe.engine.decode_syncs,
+                "tokens_per_sync": round(pipe.engine.mean_tokens_per_sync, 2),
             })
         # acceptance tripwire: continuous paged admission must keep the
         # engine at least as busy as the dense baseline — a violation
@@ -135,21 +175,27 @@ def run(smoke: bool = False, json_path: str | None = None):
                 f"{occ['dense']:.3f}")
 
         for rate in ((2,) if smoke else (1, 2, 4)):
-            pipe = _deploy(pol, True, SLOTS, smoke=True)
+            pipe = _deploy(pol, True, SLOTS, smoke=True, horizon=horizon,
+                           impl=impl)
             reqs = _requests(pipe.cfg, n_req)
             serve_rate(pipe.engine, reqs, GEN, rate)     # warmup
             pipe.engine.reset_metrics()                  # measured run only
             toks, dt, occ_r = serve_rate(pipe.engine, reqs, GEN, rate)
+            check_syncs(f"serve_{pol}_paged_rate{rate}", pipe.engine, toks,
+                        n_req)
             emit(f"serve_{pol}_paged_rate{rate}", dt * 1e6 / max(toks, 1), {
                 "tok_s": round(toks / dt, 1), "rate_per_step": rate,
-                "occupancy": round(occ_r, 3)})
+                "occupancy": round(occ_r, 3),
+                "decode_syncs": pipe.engine.decode_syncs,
+                "tokens_per_sync": round(pipe.engine.mean_tokens_per_sync, 2)})
 
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"benchmark": "bench_serving", "smoke": smoke,
-                       "rows": rows}, f, indent=2)
+                       "horizon": horizon, "impl": impl, "rows": rows},
+                      f, indent=2)
     if tripped:
-        raise RuntimeError("occupancy tripwire: " + "; ".join(tripped))
+        raise RuntimeError("serving tripwire: " + "; ".join(tripped))
     return rows
 
 
@@ -159,8 +205,15 @@ def main():
                     help="reduced sweep for CI perf-trajectory tracking")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a JSON artifact")
+    ap.add_argument("--horizon", type=int, default=1, metavar="K",
+                    help="decode steps fused per host sync (1 = per-token)")
+    ap.add_argument("--impl", choices=IMPL_CHOICES, default="xla",
+                    help="kernel route: pallas = Pallas qmm matmuls + "
+                         "Pallas paged attention (CPU runs need "
+                         "REPRO_PALLAS_INTERPRET=1)")
     args = ap.parse_args()
-    run(smoke=args.smoke, json_path=args.json)
+    run(smoke=args.smoke, json_path=args.json, horizon=args.horizon,
+        impl=args.impl)
 
 
 if __name__ == "__main__":

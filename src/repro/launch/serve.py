@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from ..configs import REGISTRY
 from ..core import PRESETS
 from ..data import SyntheticTranslation
-from ..serving import SamplingParams, deploy
+from ..serving import IMPL_CHOICES, SamplingParams, deploy, impl_routes
 
 
 def main():
@@ -35,6 +35,13 @@ def main():
                     help="block-paged KV cache + batched prefill admission")
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--num-pages", type=int, default=None)
+    ap.add_argument("--horizon", type=int, default=1,
+                    help="decode steps fused on-device per host sync "
+                         "(1 = per-token dispatch; K trades admission "
+                         "latency for 1/K the host syncs)")
+    ap.add_argument("--impl", choices=IMPL_CHOICES, default="xla",
+                    help="kernel route: pallas = Pallas qmm + Pallas "
+                         "paged attention")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -43,7 +50,8 @@ def main():
 
     pipe = deploy(args.arch, args.policy, slots=args.slots,
                   max_len=args.max_len, smoke=args.smoke, paged=args.paged,
-                  page_size=args.page_size, num_pages=args.num_pages)
+                  page_size=args.page_size, num_pages=args.num_pages,
+                  horizon=args.horizon, **impl_routes(args.impl))
     print(f"model bytes {pipe.fp_bytes/2**20:.1f} MB -> "
           f"{pipe.quantized_bytes/2**20:.1f} MB "
           f"({args.policy}, {pipe.compression:.2f}x)")
@@ -83,6 +91,8 @@ def main():
     line = (f"served {args.requests} requests, {done_tokens} tokens in "
             f"{dt:.2f}s ({done_tokens/dt:.1f} tok/s host, "
             f"{pipe.engine.prefill_compiles} prefill compiles, "
+            f"{pipe.engine.decode_syncs} decode syncs @ "
+            f"{pipe.engine.mean_tokens_per_sync:.1f} tok/sync, "
             f"occupancy {pipe.engine.occupancy:.2f}")
     if args.paged:
         line += (f", page util {pipe.engine.page_utilization:.2f}, "

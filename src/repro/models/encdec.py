@@ -19,8 +19,9 @@ from ..parallel import hint, hint_pick
 from . import moe as moe_mod
 from .layers import (Ctx, attention_init, attn_apply, decode_attn_apply,
                      mlp, mlp_init, rms_norm)
-from .transformer import (_dense_kv, _quantize_token_kv, _scatter_tokens,
-                          paged_attn, paged_view)
+from .transformer import (_commit_decode_position, _dense_kv,
+                          _quantize_token_kv, _scatter_tokens, paged_attn,
+                          paged_view)
 
 __all__ = ["encdec_init", "encdec_encode", "encdec_forward",
            "encdec_init_cache", "encdec_init_paged_cache", "encdec_prefill",
@@ -289,7 +290,11 @@ def _enc_positions(cache, B: int, Se: int):
 def encdec_decode_step(ctx: Ctx, params, cfg, tokens, cache):
     """One decoder token against self + cross caches. tokens (B,1).
 
-    A cache carrying ``block_tables`` routes to the block-paged step."""
+    A cache carrying ``block_tables`` routes to the block-paged step.
+    Like ``lm_decode_step``, a dense cache may carry an optional
+    ``active`` (B,) i32 mask (injected by the engine's horizon-fused
+    scan): inactive slots decode into masked positions (``pos`` stays
+    -1) and their ``len`` freezes."""
     if "block_tables" in cache:
         return encdec_paged_decode_step(ctx, params, cfg, tokens, cache)
     B = tokens.shape[0]
@@ -361,9 +366,7 @@ def encdec_decode_step(ctx: Ctx, params, cfg, tokens, cache):
          new_cache["v_codes"], new_cache["v_scales"]) = new_kv
     else:
         new_cache["k"], new_cache["v"] = new_kv
-    new_cache["pos"] = _scatter_tokens(cache["pos"], positions, cache["len"])
-    new_cache["len"] = cache["len"] + 1
-    return new_cache, logits
+    return _commit_decode_position(new_cache, cache, positions), logits
 
 
 def encdec_init_paged_cache(cfg, slots: int, max_pages: int, num_pages: int,

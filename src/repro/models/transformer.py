@@ -402,6 +402,26 @@ def _scatter_tokens(cache, new, lens):
     return jax.vmap(upd)(cache, new, lens)
 
 
+def _commit_decode_position(new_cache, cache, positions):
+    """Dense-cache epilogue of one decode step (shared by the LM and
+    enc-dec paths): record the written position and advance per-slot
+    lengths, honoring the optional ``active`` mask — an inactive slot
+    (retired mid-horizon in the engine's fused scan) writes ``pos=-1``
+    so its K/V lands on a masked position, and its ``len`` freezes; a
+    dead slot never grows a valid cache tail."""
+    active = cache.get("active")
+    if active is None:
+        new_cache["pos"] = _scatter_tokens(cache["pos"], positions,
+                                           cache["len"])
+        new_cache["len"] = cache["len"] + 1
+    else:
+        pos_val = jnp.where(active[:, None] > 0, positions, -1)
+        new_cache["pos"] = _scatter_tokens(cache["pos"], pos_val,
+                                           cache["len"])
+        new_cache["len"] = cache["len"] + (active > 0)
+    return new_cache
+
+
 # ---------------------------------------------------------------------------
 # prefill
 # ---------------------------------------------------------------------------
@@ -531,7 +551,12 @@ def lm_decode_step(ctx: Ctx, params, cfg, tokens, cache):
     """One decode step. tokens (B, 1) -> (new_cache, logits (B, 1, V)).
 
     Dispatches on the cache layout: a cache carrying ``block_tables``
-    is block-paged (see lm_init_paged_cache), otherwise dense."""
+    is block-paged (see lm_init_paged_cache), otherwise dense. A dense
+    cache may carry an optional ``active`` (B,) i32 mask (the engine's
+    horizon-fused scan injects it): inactive slots keep decoding but
+    their ``len`` freezes and their writes land on masked positions
+    (``pos`` stays -1), so a slot retired mid-horizon never grows a
+    phantom valid cache tail."""
     if "block_tables" in cache:
         return lm_paged_decode_step(ctx, params, cfg, tokens, cache)
     B = tokens.shape[0]
@@ -620,6 +645,4 @@ def lm_decode_step(ctx: Ctx, params, cfg, tokens, cache):
          new_cache["v"], new_cache["v_scales"]) = new_kv
     else:
         new_cache["k"], new_cache["v"] = new_kv
-    new_cache["pos"] = _scatter_tokens(cache["pos"], positions, cache["len"])
-    new_cache["len"] = cache["len"] + 1
-    return new_cache, logits
+    return _commit_decode_position(new_cache, cache, positions), logits

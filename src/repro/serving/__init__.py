@@ -10,8 +10,9 @@ from .engine import ServeEngine, greedy_generate, translate
 from .paged_cache import PageAllocator, pages_needed
 from .params import (GREEDY, Request, RequestOutput, RequestStats,
                      SamplingParams)
-from .pipeline import TranslationPipeline, deploy
+from .pipeline import IMPL_CHOICES, TranslationPipeline, deploy, impl_routes
 
 __all__ = ["ServeEngine", "greedy_generate", "translate", "SamplingParams",
            "GREEDY", "Request", "RequestOutput", "RequestStats",
-           "TranslationPipeline", "deploy", "PageAllocator", "pages_needed"]
+           "TranslationPipeline", "deploy", "PageAllocator", "pages_needed",
+           "impl_routes", "IMPL_CHOICES"]

@@ -1,4 +1,5 @@
-"""Scheduler-owned serving engine: request-level continuous batching.
+"""Scheduler-owned serving engine: request-level continuous batching
+with horizon-fused decode.
 
 The paper's deployment is real-time quantized translation; the TPU
 counterpart is a fixed-slot continuous-batching decode loop over a
@@ -7,22 +8,48 @@ loop — admission queue, slot scheduling, prefill, fused sampling, and
 EOS-aware retirement — behind three calls:
 
     rid  = engine.submit(inputs, SamplingParams(...))   # enqueue
-    outs = engine.step()          # admit + one batched decode step
+    outs = engine.step()       # admit + one fused decode horizon
     outs = engine.run_until_drained()                   # serve everything
 
+The horizon knob
+----------------
+``step(horizon=K)`` (default: the engine's ``horizon``, default 1) runs
+``K`` decode+sample steps inside ONE jitted ``lax.scan`` and reads the
+resulting ``(K, slots)`` token block back to the host ONCE, instead of
+dispatching one jitted step and syncing one token at a time. The scan
+threads the KV cache, per-slot current tokens, PRNG offsets, remaining
+token budgets, and an alive-mask; a slot that emits ``eos_id`` or
+exhausts ``max_new_tokens`` mid-horizon keeps decoding into masked
+positions (its ``len`` freezes, it emits pad) until the horizon ends.
+Paged caches are scan-safe because every request's full page budget is
+reserved at admission — block tables are static across the horizon.
+
+What the knob trades: per-token host overhead (Python dispatch + one
+device->host transfer per generated token) against admission latency —
+retirement, page reclaim, and queue admission happen only at horizon
+boundaries, so a freed slot can idle for up to ``K - 1`` micro-steps.
+``horizon=1`` routes through the original per-token step and is
+guaranteed token-for-token identical to previous releases (dense and
+paged); ``horizon=K`` produces identical per-request token streams,
+finish reasons, and stats — only the sync granularity changes.
+``engine.decode_syncs`` / ``engine.mean_tokens_per_sync`` report how
+much host traffic the fusion eliminated.
+
 Design notes:
-  * One jitted fused decode+sample step serves every slot each tick;
-    per-slot SamplingParams enter as traced arrays, so greedy and
-    nucleus-sampled requests share a single executable (see sampler.py).
+  * One jitted fused decode+sample step (or K-step scan) serves every
+    slot each tick; per-slot SamplingParams enter as traced arrays, so
+    greedy and nucleus-sampled requests share a single executable per
+    horizon length (see sampler.py).
   * Single-request prefills are padded to a small set of bucket lengths
     (powers of two up to ``max_len``) with per-sequence ``lengths``
     masking, so distinct prompt lengths stop triggering fresh XLA
     compiles; ``engine.prefill_compiles`` counts distinct compiled
     prefill shapes. (SSM/hybrid state caches have no position masking,
     so those families prefill at exact lengths.)
-  * Slots retire as soon as their request emits ``eos_id`` or reaches
-    ``max_new_tokens``; idle slots decode into masked positions (their
-    ``len`` stays put) at negligible cost relative to the batched step.
+  * Slots retire as soon as the host sees ``eos_id`` or the
+    ``max_new_tokens``-th token in the synced block; idle slots decode
+    into masked positions (their ``len`` stays put) at negligible cost
+    relative to the batched step.
 
 ``greedy_generate`` / ``translate`` remain as thin wrappers over a
 single-shot engine so pre-request-API callers stay green.
@@ -33,7 +60,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +70,7 @@ from ..models.layers import Ctx
 from .paged_cache import TRASH_PAGE, PageAllocator, paged_insert, pages_needed
 from .params import (GREEDY, Request, RequestOutput, RequestStats,
                      SamplingParams)
-from .sampler import sample_tokens
+from .sampler import sample_tokens, sample_tokens_scan
 
 __all__ = ["ServeEngine", "greedy_generate", "translate"]
 
@@ -79,13 +106,16 @@ class ServeEngine:
                  kv_dtype: str = "bf16", ctx: Optional[Ctx] = None,
                  paged: bool = False, page_size: int = 8,
                  num_pages: Optional[int] = None,
-                 max_src_len: Optional[int] = None):
+                 max_src_len: Optional[int] = None, horizon: int = 1):
+        if horizon < 1:
+            raise ValueError(f"horizon must be >= 1, got {horizon}")
         self.model = model
         self.params = params
         self.ctx = ctx or Ctx()
         self.kv_dtype = kv_dtype
         self.max_len = max_len
         self.n_slots = slots
+        self.horizon = int(horizon)
         fam = model.cfg.family
         self.enc_cap = int(max_src_len or getattr(model.cfg, "enc_len", 0)
                            or 0)
@@ -134,10 +164,18 @@ class ServeEngine:
         self._decode_steps = 0            # occupancy accounting
         self._active_slot_steps = 0
         self._page_slot_steps = 0
+        self._decode_syncs = 0            # host-overhead accounting
+        self._synced_tokens = 0
 
         fam = model.cfg.family
         self._tkey = "tgt_in" if fam in ("encdec", "audio") else "tokens"
         self._bucketed = fam in _PAD_SAFE
+        # dense attention caches accept an injected per-slot "active"
+        # mask inside the horizon scan (paged caches carry one natively;
+        # recurrent-state families neither need nor understand it — a
+        # retired slot's state is resplice-overwritten at admission)
+        self._mask_active = (not self.paged) and fam in _PAD_SAFE
+        self._horizon_fns: Dict[int, Callable] = {}
         self.prefill_shapes: set = set()
         bucketed = self._bucketed
 
@@ -237,16 +275,37 @@ class ServeEngine:
             self._admit_pending()
         return request.id
 
-    def step(self) -> List[RequestOutput]:
-        """Admit pending requests, run one batched decode step, and
+    def step(self, horizon: Optional[int] = None) -> List[RequestOutput]:
+        """Admit pending requests, run one fused decode horizon, and
         return the RequestOutputs of every request finished this step.
 
-        Admission is continuous: every step first drains as much of the
-        queue as freed slots (and, when paged, freed pages) allow, so
-        slots refill mid-flight instead of waiting for a full drain."""
+        ``horizon=K`` fuses K decode+sample micro-steps into one jitted
+        ``lax.scan`` and syncs the (K, slots) token block to the host
+        once; ``horizon=1`` (and the engine default unless constructed
+        otherwise) is the original per-token step, token-for-token
+        identical to previous releases. The scan length is clamped to
+        the power-of-two bucket of the largest remaining token budget
+        among active slots, so an over-long horizon costs masked
+        micro-steps only up to that bucket, never the full K. Admission
+        is continuous but horizon-granular: every step first drains as
+        much of the queue as freed slots (and, when paged, freed pages)
+        allow, so slots refill at horizon boundaries instead of waiting
+        for a full drain."""
+        K = self.horizon if horizon is None else int(horizon)
+        if K < 1:
+            raise ValueError(f"horizon must be >= 1, got {K}")
         self._admit_pending()
         n_active = sum(s.active for s in self.slots)
-        if n_active:
+        if n_active and K > 1:
+            # clamp the scan to the (power-of-two-bucketed) largest
+            # remaining budget among active slots: an over-long horizon
+            # must not burn batched micro-steps every slot has already
+            # retired out of, and bucketing keeps compiled scan lengths
+            # bounded by log2(max_len), not one per distinct budget
+            max_rem = max(s.request.params.max_new_tokens - len(s.tokens)
+                          for s in self.slots if s.active)
+            K = min(K, self._bucket(max_rem))
+        if n_active and K == 1:
             self._decode_steps += 1
             self._active_slot_steps += n_active
             if self.paged:
@@ -256,21 +315,50 @@ class ServeEngine:
                 self._top_ks, self._top_ps, self._keys, self._offsets)
             self.cur = nxt[:, None]
             self._offsets = self._offsets + 1
-            nxt_host = np.asarray(nxt)
+            self._decode_syncs += 1
+            nxt_host = np.asarray(nxt)          # one sync per token
             for s in self.slots:
                 if not s.active:
                     continue
                 s.tokens.append(int(nxt_host[s.id]))
+                self._synced_tokens += 1
                 self._maybe_retire(s)
+        elif n_active:
+            self._decode_steps += K
+            if self.paged:
+                self._page_slot_steps += K * self.allocator.pages_in_use
+            fn = self._horizon_fns.get(K)
+            if fn is None:
+                fn = self._horizon_fns[K] = self._make_horizon_fn(K)
+            alive, rem, eos = self._scan_masks()
+            self.cache, self.cur, self._offsets, block = fn(
+                self.params, self.cur, self.cache, self._temps,
+                self._top_ks, self._top_ps, self._keys, self._offsets,
+                alive, rem, eos)
+            self._decode_syncs += 1
+            blk = np.asarray(block)             # one sync per horizon
+            for s in self.slots:
+                if not s.active:
+                    continue
+                for t in range(K):              # walk until retirement
+                    s.tokens.append(int(blk[t, s.id]))
+                    self._synced_tokens += 1
+                    self._active_slot_steps += 1
+                    self._maybe_retire(s)
+                    if not s.active:
+                        break
         out, self._finished = self._finished, []
         return out
 
-    def run_until_drained(self, max_steps: int = 1_000_000
+    def run_until_drained(self, max_steps: int = 1_000_000,
+                          horizon: Optional[int] = None
                           ) -> List[RequestOutput]:
-        """Serve every queued/in-flight request; returns all outputs."""
+        """Serve every queued/in-flight request; returns all outputs.
+
+        ``horizon`` overrides the engine default for every step."""
         outs: List[RequestOutput] = []
         while self._queue or self._finished or any(s.active for s in self.slots):
-            outs.extend(self.step())
+            outs.extend(self.step(horizon))
             max_steps -= 1
             if max_steps <= 0:
                 raise RuntimeError("run_until_drained did not converge")
@@ -278,7 +366,15 @@ class ServeEngine:
 
     def abort(self, request_id: int) -> Optional[RequestOutput]:
         """Cancel a queued or in-flight request. Returns its output
-        (finish_reason 'abort') directly, or None if unknown."""
+        (finish_reason 'abort') directly, or None if unknown.
+
+        Under horizon-fused decode the request's tokens are truncated
+        at the last *synced* position (slot token lists only ever hold
+        synced tokens — any micro-steps the device ran past that point
+        were never observed and are discarded); the page chain is freed
+        exactly once, by the same _retire path every finish reason
+        uses — a second abort of the same id returns None instead of
+        double-freeing."""
         for i, r in enumerate(self._queue):
             if r.id == request_id:
                 del self._queue[i]
@@ -306,11 +402,31 @@ class ServeEngine:
         return len(self.prefill_shapes)
 
     def reset_metrics(self) -> None:
-        """Zero the occupancy/page-utilization accumulators (e.g. after a
-        warmup pass, so reported numbers cover only the measured run)."""
+        """Zero the occupancy/page-utilization/host-sync accumulators
+        (e.g. after a warmup pass, so reported numbers cover only the
+        measured run)."""
         self._decode_steps = 0
         self._active_slot_steps = 0
         self._page_slot_steps = 0
+        self._decode_syncs = 0
+        self._synced_tokens = 0
+
+    @property
+    def decode_syncs(self) -> int:
+        """Device->host syncs the decode loop has performed: one per
+        step() at horizon=1, one per *horizon* when fused — the
+        dispatch-overhead metric the horizon knob exists to shrink."""
+        return self._decode_syncs
+
+    @property
+    def mean_tokens_per_sync(self) -> float:
+        """Generated tokens delivered per host sync. At horizon=1 this
+        is the mean number of busy slots (each sync carries one token
+        per active slot); fusing multiplies it by up to the horizon —
+        compare runs at equal occupancy to isolate the fusion win."""
+        if not self._decode_syncs:
+            return 0.0
+        return self._synced_tokens / self._decode_syncs
 
     @property
     def occupancy(self) -> float:
@@ -371,6 +487,61 @@ class ServeEngine:
     # ------------------------------------------------------------------
     # internals
     # ------------------------------------------------------------------
+
+    def _scan_masks(self):
+        """Per-slot (alive, remaining-budget, eos-id) arrays for one
+        horizon, rebuilt from host slot state at every boundary (all
+        traced args — values never trigger a recompile)."""
+        alive = np.zeros((self.n_slots,), np.int32)
+        rem = np.zeros((self.n_slots,), np.int32)
+        eos = np.full((self.n_slots,), -1, np.int32)
+        for s in self.slots:
+            if not s.active:
+                continue
+            sp = s.request.params
+            alive[s.id] = 1
+            rem[s.id] = sp.max_new_tokens - len(s.tokens)
+            if sp.eos_id is not None:
+                eos[s.id] = sp.eos_id
+        return jnp.asarray(alive), jnp.asarray(rem), jnp.asarray(eos)
+
+    def _make_horizon_fn(self, K: int):
+        """Compile the K-step fused decode scan.
+
+        Carry: (cache, cur, offsets, alive, rem); emits the (K, slots)
+        token block the host syncs once per horizon. Retirement is an
+        in-scan mask: a slot that emits its eos_id or exhausts its
+        budget keeps decoding into masked positions (``active`` -> 0
+        freezes its ``len`` and, when paged, routes its writes to the
+        trash page) and pads the rest of its block row. Block tables
+        are static across the scan — every admitted request holds its
+        full page budget (see _request_pages).
+        """
+        model, ctx = self.model, self.ctx
+        set_active = self._mask_active or self.paged
+        strip_active = self._mask_active   # dense caches: key is transient
+
+        def _horizon(p, cur, cache, temps, top_ks, top_ps, keys, offsets,
+                     alive, rem, eos_ids):
+            def body(carry, _):
+                cache, cur, offsets, alive, rem = carry
+                if set_active:
+                    cache = dict(cache, active=alive)
+                cache, logits = model.decode_step(ctx, p, cur, cache)
+                if strip_active:
+                    cache = {k: v for k, v in cache.items() if k != "active"}
+                tok = sample_tokens_scan(logits[:, -1], temps, top_ks,
+                                         top_ps, keys, offsets, alive)
+                rem = rem - alive
+                hit_eos = (alive > 0) & (eos_ids >= 0) & (tok == eos_ids)
+                alive = jnp.where(hit_eos | (rem <= 0), 0, alive)
+                return (cache, tok[:, None], offsets + 1, alive, rem), tok
+
+            (cache, cur, offsets, _, _), block = jax.lax.scan(
+                body, (cache, cur, offsets, alive, rem), None, length=K)
+            return cache, cur, offsets, block
+
+        return jax.jit(_horizon)
 
     def _bucket(self, n: int) -> int:
         """Smallest power-of-two >= n, capped at max_len."""
@@ -548,6 +719,7 @@ class ServeEngine:
         rid = s.request.id
         st = self._stats.pop(rid)
         st.finished_s = time.perf_counter()
+        st.new_tokens = len(s.tokens)
         self._finished.append(RequestOutput(
             rid, s.request.inputs, list(s.tokens), reason, st, slot=s.id))
         s.active = False

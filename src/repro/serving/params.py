@@ -76,12 +76,20 @@ class Request:
 
 @dataclasses.dataclass
 class RequestStats:
-    """Wall-clock stamps (time.perf_counter) + derived serving metrics."""
+    """Wall-clock stamps (time.perf_counter) + derived serving metrics.
+
+    ``new_tokens`` is the count of tokens actually delivered to the
+    caller — under horizon-fused decode an aborted request is truncated
+    at its last *synced* position, so this is the authoritative count
+    (always equal to ``len(RequestOutput.token_ids)``), not the number
+    of device-side decode steps the slot participated in.
+    """
 
     arrival_s: float = 0.0
     first_token_s: float = 0.0
     finished_s: float = 0.0
     prompt_len: int = 0
+    new_tokens: int = 0
 
     @property
     def ttft_s(self) -> float:

@@ -30,7 +30,28 @@ from ..models import Ctx, build_model
 from .engine import ServeEngine
 from .params import Request, RequestOutput, SamplingParams
 
-__all__ = ["deploy", "TranslationPipeline"]
+__all__ = ["deploy", "TranslationPipeline", "impl_routes", "IMPL_CHOICES"]
+
+# the CLI "--impl" convention (launch.serve, bench_serving), defined once:
+# "xla" routes everything through XLA, "pallas" routes matmuls through the
+# Pallas qmm kernel and paged attention through the Pallas block-table
+# kernel. CLIs derive their argparse choices from IMPL_CHOICES, so adding
+# a bundle here is the only edit needed.
+_IMPL_ROUTES = {
+    "xla": {},
+    "pallas": {"matmul_impl": "pallas", "paged_attn_impl": "kernel"},
+}
+IMPL_CHOICES = tuple(sorted(_IMPL_ROUTES))
+_MATMUL_IMPLS = ("xla", "pallas")
+_PAGED_ATTN_IMPLS = ("gather", "kernel")
+
+
+def impl_routes(impl: str) -> dict:
+    """deploy() kwargs for the named kernel-route bundle (IMPL_CHOICES)."""
+    if impl not in _IMPL_ROUTES:
+        raise KeyError(
+            f"unknown impl bundle {impl!r}; have {list(IMPL_CHOICES)}")
+    return dict(_IMPL_ROUTES[impl])
 
 
 @dataclasses.dataclass
@@ -100,7 +121,9 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
            ctx: Optional[Ctx] = None, kv_dtype: Optional[str] = None,
            init_seed: int = 0, paged: bool = False, page_size: int = 8,
            num_pages: Optional[int] = None,
-           max_src_len: Optional[int] = None) -> TranslationPipeline:
+           max_src_len: Optional[int] = None, horizon: int = 1,
+           matmul_impl: Optional[str] = None,
+           paged_attn_impl: Optional[str] = None) -> TranslationPipeline:
     """Build a ready-to-serve TranslationPipeline in one call.
 
     arch_or_cfg: registry name (see configs.REGISTRY) or a ModelConfig.
@@ -118,6 +141,16 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
     max_src_len: cross-attention capacity for enc-dec families
                  (default cfg.enc_len); admitted requests may carry any
                  source length up to it.
+    horizon:     decode micro-steps fused per host sync (see
+                 ServeEngine): 1 = per-token dispatch (exact legacy
+                 behavior), K = one on-device lax.scan of K steps with
+                 admission/retirement at horizon boundaries — same
+                 token streams, 1/K the host syncs.
+    matmul_impl / paged_attn_impl: kernel routes threaded into the
+                 pipeline Ctx (override even an explicit ``ctx``):
+                 matmul "xla" | "pallas" (Pallas qmm over quantized
+                 weights), paged attention "gather" | "kernel" (Pallas
+                 block-table walk; paged engines only).
     """
     if policy not in PRESETS:
         raise KeyError(f"unknown policy {policy!r}; have {sorted(PRESETS)}")
@@ -128,6 +161,19 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
     model = build_model(cfg)
     if ctx is None:
         ctx = Ctx(compute_dtype=jnp.float32 if smoke else jnp.bfloat16)
+    impls = {}
+    if matmul_impl is not None:
+        if matmul_impl not in _MATMUL_IMPLS:
+            raise ValueError(f"matmul_impl must be one of {_MATMUL_IMPLS}, "
+                             f"got {matmul_impl!r}")
+        impls["matmul_impl"] = matmul_impl
+    if paged_attn_impl is not None:
+        if paged_attn_impl not in _PAGED_ATTN_IMPLS:
+            raise ValueError(f"paged_attn_impl must be one of "
+                             f"{_PAGED_ATTN_IMPLS}, got {paged_attn_impl!r}")
+        impls["paged_attn_impl"] = paged_attn_impl
+    if impls:
+        ctx = dataclasses.replace(ctx, **impls)
     if params is None:
         params = model.init(jax.random.PRNGKey(init_seed))
     fp_bytes = tree_nbytes(params)
@@ -151,6 +197,6 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
     engine = ServeEngine(model, params, slots=slots, max_len=max_len,
                          kv_dtype=kv, ctx=ctx, paged=paged,
                          page_size=page_size, num_pages=num_pages,
-                         max_src_len=max_src_len)
+                         max_src_len=max_src_len, horizon=horizon)
     return TranslationPipeline(cfg, model, params, engine, ctx, policy,
                                fp_bytes)

@@ -11,6 +11,14 @@ Per-slot PRNG streams: each request owns a base key derived from its
 ``seed``; token ``t`` of that request draws from ``fold_in(key, t)``, so
 outputs are reproducible independent of slot placement, admission order,
 or what the other slots are doing.
+
+Both entry points are pure jnp, so they compose with ``jax.lax.scan``:
+``sample_tokens`` is the per-token form the engine's legacy step uses,
+``sample_tokens_scan`` is the horizon-fused scan-body form — identical
+sampling, plus an ``alive`` mask so slots retired mid-horizon (EOS /
+budget) emit ``pad_id`` instead of a live draw. The PRNG stream is
+offset-indexed either way, so fused and per-token decode produce the
+same tokens for the same request.
 """
 
 from __future__ import annotations
@@ -18,7 +26,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["sample_tokens"]
+__all__ = ["sample_tokens", "sample_tokens_scan"]
 
 _NEG = jnp.float32(-1e30)   # mask value: exp() underflows to exactly 0
 
@@ -54,3 +62,17 @@ def sample_tokens(logits, temps, top_ks, top_ps, keys, offsets):
     """
     return jax.vmap(_sample_row)(logits.astype(jnp.float32), temps, top_ks,
                                  top_ps, keys, offsets)
+
+
+def sample_tokens_scan(logits, temps, top_ks, top_ps, keys, offsets, alive,
+                       pad_id: int = 0):
+    """Scan-body form of ``sample_tokens`` for horizon-fused decode.
+
+    Same sampling semantics, plus an ``alive`` (S,) i32 mask: slots that
+    retired earlier in the horizon (EOS or exhausted ``max_new_tokens``
+    budget) emit ``pad_id`` — the host-side walk of the emitted token
+    block stops at each slot's retirement point, so pads are never read
+    as generated tokens.
+    """
+    toks = sample_tokens(logits, temps, top_ks, top_ps, keys, offsets)
+    return jnp.where(alive > 0, toks, jnp.int32(pad_id))

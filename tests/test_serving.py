@@ -3,7 +3,10 @@
 Covers the legacy single-shot wrappers (greedy_generate / translate,
 back-compat), the scheduler-owned ServeEngine (submit / step /
 run_until_drained, EOS-aware retirement, mixed per-slot SamplingParams,
-prefill-length bucketing), and the deploy() pipeline.
+prefill-length bucketing), the deploy() pipeline, and the horizon-fused
+decode path (horizon=K must be token-for-token identical to horizon=1
+for dense and paged caches, greedy and seeded sampling, mixed per-slot
+params, mid-stream admission, and abort).
 """
 
 import jax
@@ -313,6 +316,196 @@ def test_deploy_translate_pipeline():
     toks = translate(pipe.model, pipe.ctx, pipe.params, src,
                      LANG_CODES["ita"], steps=6, max_len=16, kv_dtype="int8")
     assert [list(np.asarray(r)) for r in toks] == [o.token_ids for o in outs]
+
+
+# ---------------------------------------------------------------------------
+# horizon-fused decode
+# ---------------------------------------------------------------------------
+
+def _outputs_by_id(eng, ids):
+    outs = {o.request_id: o for o in eng.run_until_drained()}
+    return [outs[i] for i in ids]
+
+
+def _assert_equiv(base, got, K):
+    for b, g in zip(base, got):
+        assert g.token_ids == b.token_ids, \
+            f"horizon={K}: {g.token_ids} != {b.token_ids}"
+        assert g.finish_reason == b.finish_reason
+        assert g.num_generated == b.num_generated == g.stats.new_tokens
+
+
+def test_horizon_equivalence_dense_mixed_params():
+    """horizon=K token streams, finish reasons, and stats must match
+    horizon=1 exactly — greedy and seeded top-p slots side by side."""
+    rc, model, params = _lm()
+    p1 = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, rc.vocab_size)
+    p2 = jax.random.randint(jax.random.PRNGKey(2), (1, 4), 0, rc.vocab_size)
+    sp_g = SamplingParams(max_new_tokens=7)
+    sp_s = SamplingParams(temperature=0.8, top_p=0.9, max_new_tokens=5,
+                          seed=3)
+
+    def run(K):
+        eng = ServeEngine(model, params, slots=2, max_len=24, ctx=CTX,
+                          horizon=K)
+        ids = [eng.submit({"tokens": p1}, sp_g),
+               eng.submit({"tokens": p2}, sp_s)]
+        return _outputs_by_id(eng, ids)
+
+    base = run(1)
+    for K in (4, 16):
+        _assert_equiv(base, run(K), K)
+
+
+def test_horizon_equivalence_dense_eos():
+    """EOS emitted mid-horizon retires the slot at the same position and
+    with the same finish reason as per-token decode."""
+    rc, model, params = _lm()
+    p = jax.random.randint(jax.random.PRNGKey(7), (1, 5), 0, rc.vocab_size)
+
+    def run(K, eos=None):
+        eng = ServeEngine(model, params, slots=1, max_len=24, ctx=CTX,
+                          horizon=K)
+        ids = [eng.submit({"tokens": p},
+                          SamplingParams(max_new_tokens=8, eos_id=eos))]
+        return _outputs_by_id(eng, ids)
+
+    ref = run(1)[0]
+    eos = ref.token_ids[2]              # a token the stream actually emits
+    base = run(1, eos)
+    assert base[0].finish_reason == "eos"
+    for K in (4, 16):
+        _assert_equiv(base, run(K, eos), K)
+
+
+def test_horizon_equivalence_paged():
+    """Paged engine (block tables static across the horizon): fused and
+    per-token decode agree for greedy + sampled slots, and every page
+    returns to the pool."""
+    pipes = {}
+    for K in (1, 4, 16):
+        pipes[K] = deploy("gemma3-1b", "int8", slots=3, max_len=32,
+                          smoke=True, paged=True, page_size=4, horizon=K)
+    cfg = pipes[1].cfg
+    p1 = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, cfg.vocab_size)
+    p2 = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0, cfg.vocab_size)
+    sp_g = SamplingParams(max_new_tokens=6)
+    sp_s = SamplingParams(temperature=0.7, top_k=8, max_new_tokens=5, seed=11)
+
+    def run(K):
+        eng = pipes[K].engine
+        ids = [eng.submit({"tokens": p1}, sp_g),
+               eng.submit({"tokens": p2}, sp_s)]
+        outs = _outputs_by_id(eng, ids)
+        assert eng.allocator.pages_in_use == 0      # full reclaim
+        return outs
+
+    base = run(1)
+    for K in (4, 16):
+        _assert_equiv(base, run(K), K)
+
+
+def test_horizon_equivalence_encdec_midstream_admission():
+    """A request submitted between horizons (continuous batching refill)
+    must decode the same stream as under per-token admission."""
+    def run(K):
+        pipe = deploy("nllb600m", "int8", slots=2, max_len=16, smoke=True,
+                      paged=True, page_size=4, horizon=K)
+        cfg = pipe.cfg
+        srcs = [jax.random.randint(jax.random.PRNGKey(i), (1, cfg.enc_len),
+                                   0, cfg.vocab_size) for i in range(3)]
+        tgt = jnp.full((1, 1), 8, jnp.int32)
+        eng = pipe.engine
+        sp = SamplingParams(temperature=0.6, top_p=0.9, max_new_tokens=6,
+                            seed=5)
+        ids = [eng.submit({"src_tokens": srcs[0], "tgt_in": tgt}, sp),
+               eng.submit({"src_tokens": srcs[1], "tgt_in": tgt}, sp)]
+        early = eng.step()   # at large K a request can finish right here
+        ids.append(eng.submit({"src_tokens": srcs[2], "tgt_in": tgt}, sp))
+        outs = {o.request_id: o for o in early + eng.run_until_drained()}
+        return [outs[i] for i in ids]
+
+    base = run(1)
+    for K in (4, 8):
+        _assert_equiv(base, run(K), K)
+
+
+def test_horizon_one_is_legacy_path():
+    """horizon=1 (explicit or default) never builds a fused scan — the
+    back-compat guarantee is the original executable, not a K=1 scan."""
+    rc, model, params = _lm()
+    eng = ServeEngine(model, params, slots=1, max_len=16, ctx=CTX)
+    p = jax.random.randint(jax.random.PRNGKey(0), (1, 4), 0, rc.vocab_size)
+    eng.submit({"tokens": p}, SamplingParams(max_new_tokens=3))
+    eng.run_until_drained()
+    assert eng.horizon == 1 and eng._horizon_fns == {}
+    with pytest.raises(ValueError, match="horizon"):
+        eng.step(horizon=0)
+    with pytest.raises(ValueError, match="horizon"):
+        ServeEngine(model, params, slots=1, max_len=16, ctx=CTX, horizon=0)
+
+
+def test_horizon_decode_syncs_metric():
+    """One request needing 8 decode tokens: 8 syncs per-token, 1 sync at
+    horizon=8; mean_tokens_per_sync reports the fusion win."""
+    rc, model, params = _lm()
+    p = jax.random.randint(jax.random.PRNGKey(1), (1, 4), 0, rc.vocab_size)
+    sp = SamplingParams(max_new_tokens=9)    # 1 prefill + 8 decode tokens
+
+    def syncs(K):
+        eng = ServeEngine(model, params, slots=1, max_len=16, ctx=CTX,
+                          horizon=K)
+        eng.submit({"tokens": p}, sp)
+        eng.run_until_drained()
+        return eng.decode_syncs, eng.mean_tokens_per_sync
+
+    assert syncs(1) == (8, 1.0)
+    assert syncs(8) == (1, 8.0)
+    # reset_metrics zeroes the sync counters alongside occupancy
+    eng = ServeEngine(model, params, slots=1, max_len=16, ctx=CTX, horizon=8)
+    eng.submit({"tokens": p}, sp)
+    eng.run_until_drained()
+    eng.reset_metrics()
+    assert eng.decode_syncs == 0 and eng.mean_tokens_per_sync == 0.0
+
+
+def test_horizon_abort_truncates_and_frees_pages_once():
+    """Abort after a partial horizon: tokens truncate at the last synced
+    position, the page chain is freed exactly once (the strict allocator
+    raises on double-free), and the engine keeps serving."""
+    pipe = deploy("gemma3-1b", "int8", slots=2, max_len=32, smoke=True,
+                  paged=True, page_size=4, horizon=4)
+    eng = pipe.engine
+    p = jax.random.randint(jax.random.PRNGKey(0), (1, 5), 0,
+                           pipe.cfg.vocab_size)
+    rid = eng.submit({"tokens": p}, SamplingParams(max_new_tokens=20))
+    eng.step()                            # admit + one fused horizon of 4
+    assert eng.allocator.pages_in_use > 0
+    out = eng.abort(rid)
+    assert out.finish_reason == "abort"
+    assert out.num_generated == 5         # 1 prefill + 4 synced tokens
+    assert out.stats.new_tokens == 5
+    assert eng.allocator.pages_in_use == 0      # chain freed, exactly once
+    assert eng.abort(rid) is None               # idempotent, no double free
+    rid2 = eng.submit({"tokens": p}, SamplingParams(max_new_tokens=6))
+    outs = eng.run_until_drained()
+    assert [o.request_id for o in outs] == [rid2]
+    assert outs[0].num_generated == 6
+    assert eng.allocator.pages_in_use == 0
+
+
+def test_deploy_horizon_and_impl_knobs():
+    """deploy() threads horizon into the engine and kernel routes into
+    the pipeline Ctx; invalid routes fail fast."""
+    pipe = deploy("gemma3-1b", "int8", slots=1, max_len=16, smoke=True,
+                  horizon=4, matmul_impl="xla", paged_attn_impl="gather")
+    assert pipe.engine.horizon == 4
+    assert pipe.ctx.matmul_impl == "xla"
+    assert pipe.ctx.paged_attn_impl == "gather"
+    with pytest.raises(ValueError, match="matmul_impl"):
+        deploy("gemma3-1b", "int8", smoke=True, matmul_impl="cuda")
+    with pytest.raises(ValueError, match="paged_attn_impl"):
+        deploy("gemma3-1b", "int8", smoke=True, paged_attn_impl="flash")
 
 
 def test_deploy_generate_lm():
