@@ -29,6 +29,9 @@ Rows (CSV on stdout; ``--json PATH`` additionally writes the artifact
 consumed by CI's bench-smoke job):
   serve_{policy}_{dense|paged}   burst throughput + occupancy + kv MB
   serve_{policy}_paged_rate{r}   continuous-arrival throughput
+Every serving row also records per-request latency percentiles
+(p50/p95 TTFT and per-output-token time, from RequestStats via the
+latency_percentiles helper the eval suite shares).
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json P]
         [--horizon K] [--impl xla|pallas]
@@ -45,7 +48,7 @@ import jax.numpy as jnp
 
 from repro.data import SyntheticTranslation
 from repro.serving import (IMPL_CHOICES, SamplingParams, deploy, impl_routes,
-                           pages_needed)
+                           latency_percentiles, pages_needed)
 
 from .common import csv_row
 
@@ -68,14 +71,14 @@ def _requests(cfg, n):
 
 
 def serve_burst(eng, reqs, gen):
-    """All requests at t=0; returns (tokens, seconds, occupancy)."""
+    """All requests at t=0; returns (tokens, seconds, occupancy, outputs)."""
     sp = SamplingParams(max_new_tokens=gen)
     t0 = time.perf_counter()
     for r in reqs:
         eng.submit(r, sp)
     outs = eng.run_until_drained()
     dt = time.perf_counter() - t0
-    return sum(o.num_generated for o in outs), dt, eng.occupancy
+    return sum(o.num_generated for o in outs), dt, eng.occupancy, outs
 
 
 def serve_rate(eng, reqs, gen, rate):
@@ -90,7 +93,7 @@ def serve_rate(eng, reqs, gen, rate):
         pending = pending[rate:]
         outs.extend(eng.step())
     dt = time.perf_counter() - t0
-    return sum(o.num_generated for o in outs), dt, eng.occupancy
+    return sum(o.num_generated for o in outs), dt, eng.occupancy, outs
 
 
 def _deploy(pol, paged, slots, smoke, horizon=1, impl="xla"):
@@ -145,7 +148,7 @@ def run(smoke: bool = False, json_path: str | None = None,
             reqs = _requests(pipe.cfg, n_req)
             serve_burst(pipe.engine, reqs, GEN)          # warmup: compiles
             pipe.engine.reset_metrics()                  # measured run only
-            toks, dt, _ = serve_burst(pipe.engine, reqs, GEN)
+            toks, dt, _, outs = serve_burst(pipe.engine, reqs, GEN)
             occ[mode] = pipe.engine.occupancy
             check_syncs(f"serve_{pol}_{mode}", pipe.engine, toks,
                         pipe.engine.n_slots)
@@ -160,6 +163,7 @@ def run(smoke: bool = False, json_path: str | None = None,
                 "horizon": horizon,
                 "decode_syncs": pipe.engine.decode_syncs,
                 "tokens_per_sync": round(pipe.engine.mean_tokens_per_sync, 2),
+                **latency_percentiles(outs),
             })
         # acceptance tripwire: continuous paged admission must keep the
         # engine at least as busy as the dense baseline — a violation
@@ -180,14 +184,15 @@ def run(smoke: bool = False, json_path: str | None = None,
             reqs = _requests(pipe.cfg, n_req)
             serve_rate(pipe.engine, reqs, GEN, rate)     # warmup
             pipe.engine.reset_metrics()                  # measured run only
-            toks, dt, occ_r = serve_rate(pipe.engine, reqs, GEN, rate)
+            toks, dt, occ_r, outs = serve_rate(pipe.engine, reqs, GEN, rate)
             check_syncs(f"serve_{pol}_paged_rate{rate}", pipe.engine, toks,
                         n_req)
             emit(f"serve_{pol}_paged_rate{rate}", dt * 1e6 / max(toks, 1), {
                 "tok_s": round(toks / dt, 1), "rate_per_step": rate,
                 "occupancy": round(occ_r, 3),
                 "decode_syncs": pipe.engine.decode_syncs,
-                "tokens_per_sync": round(pipe.engine.mean_tokens_per_sync, 2)})
+                "tokens_per_sync": round(pipe.engine.mean_tokens_per_sync, 2),
+                **latency_percentiles(outs)})
 
     if json_path:
         with open(json_path, "w") as f:

@@ -1,4 +1,10 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Serving-latency percentiles (p50/p95 TTFT, per-output-token) live in
+``repro.serving.latency_percentiles`` — one definition shared by
+bench_serving rows and the quality suite (repro.eval.suite), imported
+directly by each so kernel benches don't pay the serving import.
+"""
 
 from __future__ import annotations
 

@@ -1,6 +1,7 @@
 """Core library: the paper's contribution (sub-octet quantization +
 co-designed kernels' software interface) as composable JAX modules."""
 
+from .calibration import ActStats, calibrate, calibrate_act_scale
 from .formats import FORMATS, Format, get_format
 from .policy import PRESETS, PrecisionPolicy, quantize_tree, tree_nbytes
 from .qlinear import embed_lookup, qmatmul, quantize_activations_int8
@@ -15,6 +16,7 @@ __all__ = [
     "QTensor", "maybe_dequantize", "tensor_nbytes",
     "quantize_blockwise", "dequantize_blockwise",
     "qmatmul", "embed_lookup", "quantize_activations_int8",
+    "ActStats", "calibrate", "calibrate_act_scale",
     "attach_lora", "extract_adapters", "inject_adapters", "merge_lora",
     "count_adapter_params",
 ]

@@ -7,11 +7,13 @@ batches and produces per-tensor scales usable by qlinear's int8 path.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Iterable
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["ActStats", "calibrate"]
+__all__ = ["ActStats", "calibrate", "calibrate_act_scale"]
 
 
 class ActStats:
@@ -42,3 +44,53 @@ def calibrate(apply_fn: Callable, batches: Iterable, percentile=99.9) -> ActStat
     for b in batches:
         stats.update(apply_fn(b))
     return stats
+
+
+def calibrate_act_scale(model, params, ctx, batches: Iterable,
+                        percentile: float = 99.9,
+                        max_code: float = 127.0) -> float:
+    """ONE global static activation scale for the w8a8 int8 matmul path.
+
+    Runs eager forward passes over ``batches`` with a collector-carrying
+    Ctx: every activation entering an integer-MAC-eligible matmul
+    (qlinear.int8_mac_eligible) contributes its |x| distribution
+    (Ctx.dot appends to ``act_collector``), and one forward's worth is
+    folded per calibrate() step — absmax plus a percentile estimate,
+    scale = percentile / max_code. ``params`` should be the
+    already-quantized tree being deployed, so the observed activations
+    are exactly what the int8 path will see.
+
+    Deliberately coarser than the paper's per-matmul calibration: the
+    scale is a single scalar shared by every int8 matmul (layers whose
+    activation range sits far below the global percentile lose part of
+    their int8 grid). Per-matmul scale trees are a listed follow-up in
+    ROADMAP; this threads the plumbing end to end.
+    """
+    def apply_fn(batch):
+        sink: list = []
+        # bf16 act route: observe the float activations the int8 path
+        # would quantize, through the same quantized weights
+        cctx = dataclasses.replace(ctx, act_fmt="bf16", act_collector=sink)
+        logits, _ = model.forward(cctx, params, batch)
+        jax.block_until_ready(logits)
+        jax.effects_barrier()           # flush the collector callbacks:
+        # block_until_ready covers the value, not the host-callback
+        # queue — without the barrier an async backend can reach the
+        # sink read before the appends land
+        if not sink:
+            raise ValueError(
+                "calibration saw no per-channel int8-weight matmuls — the "
+                "deployed policy has no active w8a8 path to calibrate "
+                "(int8 weights must carry one K-block of scales; see "
+                "PRESETS['w8a8'])")
+        return jnp.concatenate([jnp.ravel(jnp.asarray(a)) for a in sink])
+
+    stats = calibrate(apply_fn, batches, percentile)
+    if not stats.samples:
+        # an exhausted generator would otherwise yield ActStats' empty
+        # fallback scale of 1.0 — catastrophic for O(1) activations, and
+        # indistinguishable from a calibrated deployment downstream
+        raise ValueError(
+            "calibration consumed no batches — pass a non-empty (fresh, "
+            "not already-iterated) batch iterable")
+    return stats.scale(max_code)

@@ -59,8 +59,13 @@ PRESETS = {
                            compute_dtype=jnp.float32),
     "bf16": PrecisionPolicy("bf16"),
     "int8": PrecisionPolicy("int8", weights="int8", embed="int8"),
+    # w8a8 stores weights with per-CHANNEL scales (one K-block: the huge
+    # block_size spans any K) — the integer-MAC path in qlinear needs a
+    # single scale per output channel to rescale the int32 accumulator;
+    # blockwise int8 would silently fall back to dequantized matmuls and
+    # defeat both the int8 MXU mode and activation calibration
     "w8a8": PrecisionPolicy("w8a8", weights="int8", embed="int8", act="int8",
-                            kv_cache="int8"),
+                            kv_cache="int8", block_size=2**20),
     "fp8": PrecisionPolicy("fp8", weights="fp8", embed="fp8", kv_cache="fp8"),
     "int4": PrecisionPolicy("int4", weights="int4", embed="int8",
                             kv_cache="int8"),

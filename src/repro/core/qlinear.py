@@ -27,13 +27,35 @@ import jax.numpy as jnp
 
 from .qtensor import QTensor
 
-__all__ = ["qmatmul", "embed_lookup", "quantize_activations_int8"]
+__all__ = ["qmatmul", "embed_lookup", "quantize_activations_int8",
+           "int8_mac_eligible"]
 
 
-def quantize_activations_int8(x: jnp.ndarray):
-    """Dynamic per-token symmetric int8 quantization of activations."""
-    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.where(absmax == 0, 1.0, absmax / 127.0)
+def int8_mac_eligible(w: Any) -> bool:
+    """True when ``w`` routes through the integer-MAC w8a8 path: int8
+    storage with per-channel scales (one K-block). The single source of
+    this predicate — activation calibration (Ctx.act_collector) keys on
+    it so the calibrated scale observes exactly the matmuls it will be
+    applied to."""
+    return (isinstance(w, QTensor) and w.fmt == "int8"
+            and w.block_scales().shape[-2] == 1)
+
+
+def quantize_activations_int8(x: jnp.ndarray, scale=None):
+    """Symmetric int8 quantization of activations.
+
+    ``scale=None`` (default) is the dynamic per-token path: each token
+    row gets its own absmax-derived scale. A static ``scale`` (a scalar
+    from ``core.calibration``, the paper's w8a8 calibrated deployment)
+    skips the runtime absmax reduction — outliers beyond the calibrated
+    range saturate at +-127 instead of stretching the grid.
+    """
+    if scale is None:
+        absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                         keepdims=True)
+        scale = jnp.where(absmax == 0, 1.0, absmax / 127.0)
+    else:
+        scale = jnp.asarray(scale, jnp.float32)
     q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
 
@@ -47,12 +69,12 @@ def _lora_term(x, w: QTensor, compute_dtype):
     return jnp.matmul(xa, w.lora_b.astype(compute_dtype)) * scaling
 
 
-def _int8_path(x, w: QTensor, compute_dtype):
+def _int8_path(x, w: QTensor, compute_dtype, act_scale=None):
     """w8a8 integer matmul. Requires per-channel weight scales (1 K-block)."""
-    scales = w.block_scales()          # (..., nb, N)
-    if scales.shape[-2] != 1:
+    if not int8_mac_eligible(w):
         return None                    # blockwise int8: fall back to dequant
-    xq, sx = quantize_activations_int8(x)
+    scales = w.block_scales()          # (..., 1, N)
+    xq, sx = quantize_activations_int8(x, act_scale)
     out = jax.lax.dot_general(
         xq, w.data,
         dimension_numbers=(((x.ndim - 1,), (w.data.ndim - 2,)), ((), ())),
@@ -68,15 +90,20 @@ def qmatmul(
     act: str = "bf16",
     compute_dtype=jnp.bfloat16,
     impl: str = "xla",
+    act_scale=None,
 ) -> jnp.ndarray:
-    """y = x @ w for plain or quantized ``w`` (last-2-axis contraction)."""
+    """y = x @ w for plain or quantized ``w`` (last-2-axis contraction).
+
+    ``act_scale``: optional calibrated static scale for the int8
+    activation path (see quantize_activations_int8); ignored elsewhere.
+    """
     if not isinstance(w, QTensor):
         return jnp.matmul(x.astype(compute_dtype), w.astype(compute_dtype))
 
     lora = _lora_term(x, w, compute_dtype)
 
     if act == "int8" and w.fmt == "int8":
-        y = _int8_path(x, w, compute_dtype)
+        y = _int8_path(x, w, compute_dtype, act_scale)
         if y is None:
             y = jnp.matmul(x.astype(compute_dtype),
                            jax.lax.stop_gradient(w.dequantize(compute_dtype)))

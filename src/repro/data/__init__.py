@@ -1,5 +1,6 @@
-from .synthetic import (LANG_CODES, SyntheticLM, SyntheticTranslation,
-                        make_batch, batch_iterator)
+from .synthetic import (INDIC_LANGS, LANG_CODES, OVERSEAS_LANGS, SyntheticLM,
+                        SyntheticTranslation, batch_iterator, make_batch,
+                        pairs)
 
-__all__ = ["SyntheticTranslation", "SyntheticLM", "LANG_CODES", "make_batch",
-           "batch_iterator"]
+__all__ = ["SyntheticTranslation", "SyntheticLM", "LANG_CODES", "INDIC_LANGS",
+           "OVERSEAS_LANGS", "pairs", "make_batch", "batch_iterator"]

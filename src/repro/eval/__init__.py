@@ -1,0 +1,31 @@
+"""Quality evaluation: the paper's experimental grid as a subsystem.
+
+The paper's central claim is quality parity under sub-octet precision —
+bidirectional Indic<->international translation holds up at FP8/INT8/
+INT4/FP4 while model size and latency drop ~4x (paper §IV, Fig. 9,
+Tables IV-V). This package measures that claim end to end:
+
+  metrics  — dependency-free corpus BLEU / chrF / chrF++ over token-id
+             sequences, streaming accumulators for unbounded corpora;
+  suite    — bidirectional language-pair matrix runner driven through
+             the `repro.serving` request-level engine (no hand-rolled
+             decode loops);
+  sweep    — one trained checkpoint evaluated across precision presets,
+             quality-vs-size-vs-throughput with bf16-anchor deltas;
+  report   — JSON + markdown artifact writer with a stable round-trip
+             schema, so CI runs form a quality trajectory next to the
+             perf BENCH JSONs.
+
+CLI: ``python -m repro.launch.eval --smoke --json out.json``.
+"""
+
+from .metrics import (BleuScore, BleuStat, ChrFStat, CorpusStat,
+                      corpus_bleu, corpus_chrf, exact_match, token_accuracy)
+from .report import load, make_report, render_markdown, save
+from .suite import PairScore, evaluate_pairs, summarize
+from .sweep import FormatRow, quant_sweep
+
+__all__ = ["BleuScore", "BleuStat", "ChrFStat", "CorpusStat", "corpus_bleu",
+           "corpus_chrf", "exact_match", "token_accuracy", "PairScore",
+           "evaluate_pairs", "summarize", "FormatRow", "quant_sweep",
+           "make_report", "render_markdown", "save", "load"]

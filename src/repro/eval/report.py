@@ -1,0 +1,154 @@
+"""Quality-report artifact: stable JSON schema + markdown rendering.
+
+CI's eval-smoke job uploads these next to the perf BENCH JSONs, so a
+run-over-run quality trajectory exists for the same commits the perf
+trajectory covers. The schema is deliberately boring and guaranteed to
+round-trip: ``load(dump(report)) == report`` (enforced by ``save`` on
+every write and by a CI guard) — dicts/lists/str/int/float/bool/None
+only, non-finite floats mapped to None, numpy scalars unwrapped.
+
+    report = make_report(arch="nllb600m", rows=[r.as_row() for r in rows],
+                         config={"formats": [...], "pairs": [...]})
+    save(report, "eval_report.json")
+    print(render_markdown(report))
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import subprocess
+from typing import Any, Dict, List, Optional, Sequence
+
+__all__ = ["SCHEMA_VERSION", "make_report", "dump", "load", "save",
+           "render_markdown"]
+
+SCHEMA_VERSION = 1
+
+
+def _git_rev() -> Optional[str]:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def _jsonify(x: Any) -> Any:
+    """Coerce to round-trippable JSON types (see module docstring)."""
+    if hasattr(x, "item") and not isinstance(x, (str, bytes)):
+        x = x.item()                   # numpy scalars
+    if isinstance(x, float):
+        return x if math.isfinite(x) else None
+    if isinstance(x, (str, int, bool)) or x is None:
+        return x
+    if isinstance(x, dict):
+        return {str(k): _jsonify(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple, set)):
+        return [_jsonify(v) for v in x]
+    raise TypeError(f"cannot serialize {type(x).__name__} into a report")
+
+
+def make_report(*, arch: str, rows: Sequence[Dict[str, Any]],
+                config: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Assemble a schema-v1 report dict (already JSON-clean).
+
+    ``rows`` is one dict per precision format (FormatRow.as_row()), each
+    carrying its nested per-pair grid. ``config`` records how the run
+    was produced (formats, pairs, train steps, serving knobs, seed) so
+    trajectories compare like with like.
+    """
+    return _jsonify({
+        "schema": SCHEMA_VERSION,
+        "kind": "repro.eval",
+        "arch": arch,
+        "git_rev": _git_rev(),
+        "config": config or {},
+        "rows": list(rows),
+    })
+
+
+def dump(report: Dict[str, Any]) -> str:
+    return json.dumps(report, indent=2, sort_keys=True, allow_nan=False)
+
+
+def load(text: str) -> Dict[str, Any]:
+    return json.loads(text)
+
+
+def save(report: Dict[str, Any], path: str) -> None:
+    """Write the artifact; refuses to emit anything that won't round-trip."""
+    text = dump(report)
+    if load(text) != report:
+        raise ValueError(
+            "report does not round-trip through JSON — non-native types "
+            "slipped past make_report")
+    with open(path, "w") as f:
+        f.write(text + "\n")
+
+
+# ---------------------------------------------------------------------------
+# markdown rendering
+# ---------------------------------------------------------------------------
+
+def _fmt(v: Any, nd: int = 3, signed: bool = False) -> str:
+    if v is None:
+        return "—"
+    if isinstance(v, float):
+        return f"{v:+.{nd}f}" if signed else f"{v:.{nd}f}"
+    return str(v)
+
+
+def _sweep_table(rows: List[Dict[str, Any]]) -> List[str]:
+    head = ("| format | BLEU | ΔBLEU | chrF | ΔchrF | model MB | compr "
+            "| kv MB | tok/s | calib |")
+    sep = "|---" * 10 + "|"
+    lines = [head, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['fmt']} | {_fmt(r['mean_bleu'])}"
+            f" | {_fmt(r['bleu_delta'], signed=True)}"
+            f" | {_fmt(r['mean_chrf'])}"
+            f" | {_fmt(r['chrf_delta'], signed=True)}"
+            f" | {r['model_bytes'] / 2**20:.2f} | {_fmt(r['compression'], 2)}x"
+            f" | {r['kv_cache_bytes'] / 2**20:.2f}"
+            f" | {_fmt(r['mean_tok_s'], 1)}"
+            f" | {'static' if r.get('calibrated') else 'dyn'} |")
+    return lines
+
+
+def _pair_grid(pair_scores: List[Dict[str, Any]], metric: str) -> List[str]:
+    """src-rows x tgt-cols grid of one metric ('—' for absent cells)."""
+    srcs = sorted({p["src"] for p in pair_scores})
+    tgts = sorted({p["tgt"] for p in pair_scores})
+    cell = {(p["src"], p["tgt"]): p[metric] for p in pair_scores}
+    lines = ["| src\\tgt | " + " | ".join(tgts) + " |",
+             "|---" * (len(tgts) + 1) + "|"]
+    for s in srcs:
+        vals = [_fmt(cell.get((s, t))) for t in tgts]
+        lines.append(f"| {s} | " + " | ".join(vals) + " |")
+    return lines
+
+
+def render_markdown(report: Dict[str, Any], metric: str = "chrf") -> str:
+    """Human-readable summary: sweep table + per-format pair grids."""
+    rows = report.get("rows", [])
+    lines = [f"# {report.get('kind', 'repro.eval')} — "
+             f"{report.get('arch', '?')} @ {report.get('git_rev') or 'dirty'}",
+             ""]
+    cfg = report.get("config") or {}
+    if cfg:
+        lines += ["```", json.dumps(cfg, sort_keys=True), "```", ""]
+    if rows:
+        lines += ["## Quality vs precision (pair-grid means)", ""]
+        lines += _sweep_table(rows)
+        lines.append("")
+        for r in rows:
+            ps = r.get("pair_scores") or []
+            if not ps:
+                continue
+            lines += [f"## {r['fmt']}: per-pair {metric}", ""]
+            lines += _pair_grid(ps, metric)
+            lines.append("")
+    return "\n".join(lines)

@@ -1,0 +1,122 @@
+"""Quant sweep: one trained checkpoint across precision presets.
+
+The paper's Tables IV-V reduced to a function: deploy the same trained
+parameters at each requested preset (bf16, fp8, int8 — including the
+calibrated w8a8 arm via core.calibration — int4, fp4, nf4), run the full
+pair matrix through each deployed engine, and emit one row per format
+with quality (mean BLEU/chrF over the grid), model bytes
+(core.tree_nbytes via the pipeline), compression, throughput, and the
+per-format quality delta against the bf16 anchor — the number the
+paper's "quality parity under sub-octet precision" claim lives or dies
+on, per pair and per direction.
+
+One engine is deployed per format and reused for every pair (the pair
+matrix streams through it request-by-request); nothing here decodes
+outside `repro.serving`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from ..core import PRESETS
+from ..serving import deploy
+from .suite import PairScore, evaluate_pairs, summarize
+
+__all__ = ["FormatRow", "quant_sweep", "ANCHOR"]
+
+ANCHOR = "bf16"        # deltas are measured against this preset
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatRow:
+    """One precision preset's quality-vs-size-vs-throughput summary."""
+
+    fmt: str
+    model_bytes: int                   # quantized parameter storage
+    fp_bytes: int                      # pre-quantization parameter bytes
+    compression: float
+    kv_cache_bytes: int
+    mean_bleu: float
+    mean_chrf: float
+    mean_token_acc: float
+    mean_tok_s: float
+    gen_tokens: int
+    bleu_delta: Optional[float]        # vs the anchor row (None = anchor
+    chrf_delta: Optional[float]        # itself, or anchor not in sweep)
+    calibrated: bool                   # global static w8a8 act scale set?
+    pair_scores: Tuple[PairScore, ...]
+
+    def as_row(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["pair_scores"] = [s.as_row() for s in self.pair_scores]
+        return d
+
+
+def quant_sweep(arch_or_cfg, formats: Sequence[str], *, params: Any,
+                pair_list: Optional[Sequence[Tuple[str, str]]] = None,
+                languages: Optional[Sequence[str]] = None,
+                n_sent: int = 8, seed: int = 0,
+                max_new_tokens: Optional[int] = None,
+                calib_batches_fn=None,
+                deploy_kwargs: Optional[Dict[str, Any]] = None,
+                log=print) -> List[FormatRow]:
+    """Evaluate one checkpoint across precision presets.
+
+    params:     trained parameter tree (pre-quantization); each format
+                deploys its own quantized copy of it.
+    formats:    preset names from core.PRESETS, evaluated in order.
+                Put ``"bf16"`` among them to populate the delta columns.
+    calib_batches_fn: zero-arg callable returning a fresh iterable of
+                calibration batches; invoked once per act-quantizing
+                preset (the w8a8 arm) and passed to
+                ``deploy(calib_batches=...)``. None = dynamic per-token
+                activation quantization.
+    deploy_kwargs: serving knobs forwarded to every deploy() call —
+                slots, max_len, paged, page_size, num_pages, horizon,
+                matmul_impl/paged_attn_impl, smoke, ctx... (deploy()
+                itself derives each format's activation route from the
+                preset, so one ctx serves the whole sweep).
+    """
+    unknown = [f for f in formats if f not in PRESETS]
+    if unknown:
+        raise KeyError(f"unknown formats {unknown}; have {sorted(PRESETS)}")
+    dk = dict(deploy_kwargs or {})
+    rows: List[FormatRow] = []
+    anchor: Optional[FormatRow] = None
+    for fmt in formats:
+        calib = None
+        if calib_batches_fn is not None and PRESETS[fmt].act == "int8":
+            calib = calib_batches_fn()
+        pipe = deploy(arch_or_cfg, fmt, params=params,
+                      calib_batches=calib, **dk)
+        scores = evaluate_pairs(pipe, pair_list, n_sent=n_sent, seed=seed,
+                                max_new_tokens=max_new_tokens,
+                                languages=languages)
+        agg = summarize(scores)
+        row = FormatRow(
+            fmt=fmt, model_bytes=pipe.quantized_bytes,
+            fp_bytes=pipe.fp_bytes,
+            compression=round(pipe.compression, 3),
+            kv_cache_bytes=pipe.engine.kv_cache_bytes,
+            mean_bleu=agg["mean_bleu"], mean_chrf=agg["mean_chrf"],
+            mean_token_acc=agg["mean_token_acc"],
+            mean_tok_s=round(agg["mean_tok_s"], 1),
+            gen_tokens=agg["gen_tokens"],
+            bleu_delta=None, chrf_delta=None,
+            calibrated=pipe.ctx.act_scale is not None,
+            pair_scores=tuple(scores))
+        if fmt == ANCHOR:
+            anchor = row
+        rows.append(row)
+        log(f"[sweep] {fmt:5s} bleu {row.mean_bleu:.3f} chrf "
+            f"{row.mean_chrf:.3f} bytes {row.model_bytes} "
+            f"({row.compression:.2f}x) tok/s {row.mean_tok_s}")
+    if anchor is not None:
+        rows = [dataclasses.replace(
+            r, bleu_delta=None if r.fmt == ANCHOR
+            else round(r.mean_bleu - anchor.mean_bleu, 6),
+            chrf_delta=None if r.fmt == ANCHOR
+            else round(r.mean_chrf - anchor.mean_chrf, 6)) for r in rows]
+    return rows

@@ -14,7 +14,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from ..core.qlinear import qmatmul
+from ..core.qlinear import int8_mac_eligible, qmatmul
 from ..kernels.fasst import _naf
 from ..parallel import hint, hint_pick
 
@@ -37,10 +37,26 @@ class Ctx:
     # "kernel" routes through kernels/paged_attn.py (block-table DMA
     # walk, write-then-attend — the TPU serving path)
     paged_attn_impl: str = "gather"
+    # calibrated static activation scale for the int8 act path (w8a8):
+    # None = dynamic per-token quantization; set by deploy(calib_batches=)
+    act_scale: Any = None
+    # calibration sink: when set, dot() ships |x| of every activation
+    # entering an int8-weight matmul to the host via jax.debug.callback
+    # (scan-safe — model forwards scan over layers), where it lands as
+    # a concrete array appended to this list. core.calibration reads
+    # it; excluded from eq/hash so Ctx stays usable as a static arg.
+    act_collector: Any = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     def dot(self, x, w):
+        if self.act_collector is not None and int8_mac_eligible(w):
+            # integer-MAC matmuls only: blockwise int8 falls back to a
+            # dequantized matmul in qlinear and never quantizes x, so
+            # its activations must not steer the calibrated scale
+            jax.debug.callback(self.act_collector.append,
+                               jnp.abs(x.astype(jnp.float32)))
         return qmatmul(x, w, act=self.act_fmt, compute_dtype=self.compute_dtype,
-                       impl=self.matmul_impl)
+                       impl=self.matmul_impl, act_scale=self.act_scale)
 
     def naf(self, x, mode):
         if self.use_fasst_kernel:

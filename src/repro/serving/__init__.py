@@ -9,10 +9,10 @@ remain as thin single-shot wrappers for legacy callers.
 from .engine import ServeEngine, greedy_generate, translate
 from .paged_cache import PageAllocator, pages_needed
 from .params import (GREEDY, Request, RequestOutput, RequestStats,
-                     SamplingParams)
+                     SamplingParams, latency_percentiles)
 from .pipeline import IMPL_CHOICES, TranslationPipeline, deploy, impl_routes
 
 __all__ = ["ServeEngine", "greedy_generate", "translate", "SamplingParams",
            "GREEDY", "Request", "RequestOutput", "RequestStats",
-           "TranslationPipeline", "deploy", "PageAllocator", "pages_needed",
-           "impl_routes", "IMPL_CHOICES"]
+           "latency_percentiles", "TranslationPipeline", "deploy",
+           "PageAllocator", "pages_needed", "impl_routes", "IMPL_CHOICES"]

@@ -22,10 +22,10 @@ Sampling semantics:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 __all__ = ["SamplingParams", "GREEDY", "Request", "RequestOutput",
-           "RequestStats", "FINISH_REASONS"]
+           "RequestStats", "FINISH_REASONS", "latency_percentiles"]
 
 FINISH_REASONS = ("eos", "length", "abort")
 
@@ -119,3 +119,28 @@ class RequestOutput:
     def tok_s(self) -> float:
         dt = self.stats.total_s
         return self.num_generated / dt if dt > 0 else float("inf")
+
+
+def latency_percentiles(outputs: Sequence["RequestOutput"]) -> Dict[str, float]:
+    """p50/p95 TTFT and per-output-token latency (ms) over completions.
+
+    The shared serving-latency summary: benchmarks/bench_serving.py
+    records it per BENCH row and repro.eval.suite per language pair, so
+    quality and perf artifacts carry identically-defined columns.
+    Per-output-token time divides the post-first-token span by the
+    number of decode steps the request took (``new_tokens - 1``; a
+    one-token request contributes its whole span).
+    """
+    import numpy as np
+
+    ttft = [o.stats.ttft_s for o in outputs]
+    tpot = [(o.stats.total_s - o.stats.ttft_s) / max(o.num_generated - 1, 1)
+            for o in outputs]
+
+    def pct(vals, q):
+        return float(np.percentile(vals, q)) * 1e3 if vals else 0.0
+
+    return {"ttft_p50_ms": round(pct(ttft, 50), 3),
+            "ttft_p95_ms": round(pct(ttft, 95), 3),
+            "tpot_p50_ms": round(pct(tpot, 50), 3),
+            "tpot_p95_ms": round(pct(tpot, 95), 3)}

@@ -18,13 +18,13 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, List, Optional, Sequence, Union
+from typing import Any, Iterable, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
 from ..configs import get_config, reduce_config
-from ..core import PRESETS, quantize_tree, tree_nbytes
+from ..core import PRESETS, calibrate_act_scale, quantize_tree, tree_nbytes
 from ..data import LANG_CODES
 from ..models import Ctx, build_model
 from .engine import ServeEngine
@@ -123,7 +123,9 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
            num_pages: Optional[int] = None,
            max_src_len: Optional[int] = None, horizon: int = 1,
            matmul_impl: Optional[str] = None,
-           paged_attn_impl: Optional[str] = None) -> TranslationPipeline:
+           paged_attn_impl: Optional[str] = None,
+           calib_batches: Optional[Iterable[dict]] = None
+           ) -> TranslationPipeline:
     """Build a ready-to-serve TranslationPipeline in one call.
 
     arch_or_cfg: registry name (see configs.REGISTRY) or a ModelConfig.
@@ -151,6 +153,16 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
                  matmul "xla" | "pallas" (Pallas qmm over quantized
                  weights), paged attention "gather" | "kernel" (Pallas
                  block-table walk; paged engines only).
+    calib_batches: sample model batches for static activation
+                 calibration (paper §III w8a8 arm, ~1000 queries per
+                 language at paper scale). When the policy quantizes
+                 activations (act="int8", i.e. the w8a8 preset), the
+                 batches run through core.calibration.calibrate_act_scale
+                 against the already-quantized weights and the resulting
+                 single global static scale replaces dynamic per-token
+                 quantization in the int8 qlinear path (per-matmul scale
+                 trees are a ROADMAP follow-up). Ignored for policies
+                 that keep activations in bf16.
     """
     if policy not in PRESETS:
         raise KeyError(f"unknown policy {policy!r}; have {sorted(PRESETS)}")
@@ -161,6 +173,11 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
     model = build_model(cfg)
     if ctx is None:
         ctx = Ctx(compute_dtype=jnp.float32 if smoke else jnp.bfloat16)
+    # the policy owns deployment precision: its activation format wins
+    # even over an explicit ctx, else a caller-supplied ctx would
+    # silently downgrade w8a8 to bf16 activations (compute dtype and
+    # kernel routes remain the caller's)
+    ctx = dataclasses.replace(ctx, act_fmt=PRESETS[policy].act)
     impls = {}
     if matmul_impl is not None:
         if matmul_impl not in _MATMUL_IMPLS:
@@ -179,6 +196,12 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
     fp_bytes = tree_nbytes(params)
     if policy != "f32":
         params = quantize_tree(params, PRESETS[policy])
+    if calib_batches is not None and PRESETS[policy].act == "int8":
+        # static w8a8 deployment: observe the quantized model's matmul
+        # activations eagerly, thread one calibrated scale into the Ctx
+        ctx = dataclasses.replace(
+            ctx, act_scale=calibrate_act_scale(model, params, ctx,
+                                               calib_batches))
     kv = kv_dtype or PRESETS[policy].kv_cache
     if paged and kv == "fp8":
         if kv_dtype is not None:     # explicitly requested: don't remap

@@ -1,9 +1,11 @@
 """Synthetic data pipeline: determinism, shapes, learnable structure."""
 
 import numpy as np
+import pytest
 
 from repro.configs import REGISTRY, reduce_config
-from repro.data import LANG_CODES, SyntheticLM, SyntheticTranslation, make_batch
+from repro.data import (INDIC_LANGS, LANG_CODES, OVERSEAS_LANGS, SyntheticLM,
+                        SyntheticTranslation, make_batch, pairs)
 
 
 def test_translation_determinism():
@@ -29,6 +31,58 @@ def test_language_codes_prefix():
     b = ds.sample(4)
     assert b["tgt_in"][0, 0] == LANG_CODES[b["tgt_lang"]]
     assert b["src_tokens"][0, 0] == LANG_CODES[b["tgt_lang"]]
+
+
+def test_eval_split_is_heldout_but_same_mapping():
+    """eval content is disjoint from train; the translation bijection
+    (the thing the model learns) is identical across splits."""
+    tr = SyntheticTranslation(512, 16, seed=0, languages=("hin", "eng"))
+    ev = SyntheticTranslation(512, 16, seed=0, languages=("hin", "eng"),
+                              split="eval")
+    bt = tr.sample(16, pair=("hin", "eng"))
+    be = ev.sample(16, pair=("hin", "eng"))
+    assert not np.array_equal(bt["src_tokens"], be["src_tokens"])
+    mapping = {}
+    for b in (bt, be):
+        src = b["src_tokens"][:, 1:-1].ravel()
+        tgt = b["tgt_out"][:, :-2].ravel()
+        for s, t in zip(src, tgt):
+            assert mapping.setdefault(int(s), int(t)) == int(t)
+
+
+def test_eval_split_deterministic_and_train_unchanged():
+    e1 = SyntheticTranslation(256, 12, seed=3, split="eval").sample(4)
+    e2 = SyntheticTranslation(256, 12, seed=3, split="eval").sample(4)
+    np.testing.assert_array_equal(e1["src_tokens"], e2["src_tokens"])
+    # default split stays the historical train stream
+    t1 = SyntheticTranslation(256, 12, seed=3).sample(4)
+    t2 = SyntheticTranslation(256, 12, seed=3, split="train").sample(4)
+    np.testing.assert_array_equal(t1["src_tokens"], t2["src_tokens"])
+    with pytest.raises(ValueError, match="split"):
+        SyntheticTranslation(256, 12, split="test")
+
+
+def test_pair_forced_sampling():
+    ds = SyntheticTranslation(512, 16, seed=0)
+    b = ds.sample(4, pair=("ita", "hin"))
+    assert (b["src_lang"], b["tgt_lang"]) == ("ita", "hin")
+    assert b["tgt_in"][0, 0] == LANG_CODES["hin"]
+    with pytest.raises(KeyError):
+        ds.sample(4, pair=("hin", "deu"))    # deu not in default languages
+    with pytest.raises(KeyError):
+        ds.sample(4, pair=("hin_inv", "eng"))  # internal key, not a language
+    with pytest.raises(ValueError):
+        ds.sample(4, pair=("hin", "hin"))
+
+
+def test_pairs_enumerates_bidirectional_fig9_grid():
+    grid = pairs()
+    assert len(grid) == 2 * len(INDIC_LANGS) * len(OVERSEAS_LANGS)
+    assert ("hin", "eng") in grid and ("eng", "hin") in grid
+    assert len(set(grid)) == len(grid)
+    for s, t in grid:
+        assert s != t and s in LANG_CODES and t in LANG_CODES
+    assert pairs(("hin",), ("eng",)) == [("hin", "eng"), ("eng", "hin")]
 
 
 def test_lm_stream_has_copy_structure():

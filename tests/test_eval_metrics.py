@@ -1,0 +1,188 @@
+"""Golden tests for the native BLEU / chrF implementations.
+
+Every expected value below is hand-computed from the metric definitions
+(clipped n-gram precisions, brevity penalty, smoothing; chrF averaged
+precision/recall then F_beta) so the implementation is validated against
+the math, not against itself.
+"""
+
+import math
+
+import pytest
+
+from repro.eval.metrics import (BleuStat, ChrFStat, CorpusStat, corpus_bleu,
+                                corpus_chrf, exact_match, token_accuracy)
+
+# ---------------------------------------------------------------------------
+# BLEU
+# ---------------------------------------------------------------------------
+
+
+def test_bleu_identical_corpus_is_one():
+    hyps = [[1, 2, 3, 4, 5], [6, 7, 8, 9]]
+    s = corpus_bleu(hyps, hyps)
+    assert s.score == pytest.approx(1.0)
+    assert s.brevity_penalty == 1.0
+    assert all(p == 1.0 for p in s.precisions)
+
+
+def test_bleu_hand_computed_add_k():
+    # hyp [1,2,3,4] vs ref [1,2,3,5]:
+    #   p1 = 3/4; raw p2 = 2/3, p3 = 1/2, p4 = 0/1
+    #   add-k (k=1, orders>1): p2 = 3/4, p3 = 2/3, p4 = 1/2; BP = 1
+    #   bleu = (0.75 * 0.75 * (2/3) * 0.5) ** 0.25
+    s = corpus_bleu([[1, 2, 3, 4]], [[1, 2, 3, 5]])
+    expected = (0.75 * 0.75 * (2 / 3) * 0.5) ** 0.25
+    assert s.score == pytest.approx(expected)
+    assert s.precisions == pytest.approx((0.75, 0.75, 2 / 3, 0.5))
+
+
+def test_bleu_no_smoothing_zero_on_missing_order():
+    # same pair without smoothing: p4 = 0 -> geometric mean collapses
+    s = corpus_bleu([[1, 2, 3, 4]], [[1, 2, 3, 5]], smoothing="none")
+    assert s.score == 0.0
+    assert s.precisions[3] == 0.0
+
+
+def test_bleu_floor_smoothing():
+    # floor replaces the zero order with eps/total = 0.1/1
+    s = corpus_bleu([[1, 2, 3, 4]], [[1, 2, 3, 5]], smoothing="floor")
+    expected = (0.75 * (2 / 3) * 0.5 * 0.1) ** 0.25
+    assert s.score == pytest.approx(expected)
+
+
+def test_bleu_brevity_penalty():
+    # hyp [1,2] vs ref [1,2,3] at max_n=2: p1 = 1, p2 = 1 (the single
+    # hyp bigram appears in ref); BP = exp(1 - 3/2)
+    s = corpus_bleu([[1, 2]], [[1, 2, 3]], max_n=2, smoothing="none")
+    assert s.brevity_penalty == pytest.approx(math.exp(-0.5))
+    assert s.score == pytest.approx(math.exp(-0.5))
+    # no penalty when the hypothesis is longer
+    s2 = corpus_bleu([[1, 2, 3]], [[1, 2]], max_n=1, smoothing="none")
+    assert s2.brevity_penalty == 1.0
+
+
+def test_bleu_clipping():
+    # hyp repeats a token 4x, ref holds it 2x: clipped p1 = 2/4
+    s = corpus_bleu([[7, 7, 7, 7]], [[7, 7]], max_n=1, smoothing="none")
+    assert s.precisions[0] == pytest.approx(0.5)
+
+
+def test_bleu_empty_inputs_score_zero():
+    assert corpus_bleu([], []).score == 0.0
+    assert corpus_bleu([[]], [[1, 2]]).score == 0.0
+    assert corpus_bleu([[1, 2]], [[]]).score == 0.0   # ref empty: BP = 1, but
+    # every order has zero reference matches beyond... p1 = 0 -> score 0
+    with pytest.raises(ValueError):
+        corpus_bleu([[1]], [])                        # length mismatch
+
+
+def test_bleu_streaming_matches_batch_and_merge():
+    hyps = [[1, 2, 3, 4], [5, 6, 7], [1, 2]]
+    refs = [[1, 2, 3, 5], [5, 6, 8], [1, 2, 3]]
+    batch = corpus_bleu(hyps, refs)
+    one = BleuStat()
+    for h, r in zip(hyps, refs):
+        one.update(h, r)
+    assert one.score().score == pytest.approx(batch.score)
+    a, b = BleuStat(), BleuStat()
+    a.update(hyps[0], refs[0])
+    b.update(hyps[1], refs[1])
+    b.update(hyps[2], refs[2])
+    assert a.merge(b).score().score == pytest.approx(batch.score)
+
+
+def test_bleu_detok_words():
+    detok = lambda ids: " ".join("w%d" % i for i in ids)   # noqa: E731
+    s = corpus_bleu([[1, 2, 3]], [[1, 2, 3]], detok=detok)
+    assert s.score == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# chrF
+# ---------------------------------------------------------------------------
+
+
+def test_chrf_hand_computed():
+    # hyp [1,2,3] vs ref [1,2,4] at max_n=2:
+    #   order1: matches 2 of 3/3 -> P1 = R1 = 2/3
+    #   order2: matches 1 of 2/2 -> P2 = R2 = 1/2
+    #   avgP = avgR = 7/12; F_2 = P when P == R
+    val = corpus_chrf([[1, 2, 3]], [[1, 2, 4]], max_n=2)
+    assert val == pytest.approx(7 / 12)
+
+
+def test_chrf_identical_is_one_and_empty_is_zero():
+    assert corpus_chrf([[1, 2, 3, 4, 5, 6, 7]],
+                       [[1, 2, 3, 4, 5, 6, 7]]) == pytest.approx(1.0)
+    assert corpus_chrf([], []) == 0.0
+    assert corpus_chrf([[]], [[1, 2]]) == 0.0
+
+
+def test_chrf_short_sequences_skip_absent_orders():
+    # 2-token sequences have no n-grams for n > 2: those orders must be
+    # skipped, not counted as zero-precision
+    assert corpus_chrf([[1, 2]], [[1, 2]], max_n=6) == pytest.approx(1.0)
+
+
+def test_chrf_beta_weights_recall():
+    # hyp misses a ref token (recall hurt, precision perfect):
+    # max_n=1: P = 1, R = 1/2; F_2 = 5PR/(4P+R) = 2.5/4.5
+    v = corpus_chrf([[1]], [[1, 2]], max_n=1)
+    assert v == pytest.approx(5 * 1 * 0.5 / (4 * 1 + 0.5))
+    # beta=1 (harmonic mean) scores higher than beta=2 here
+    v1 = corpus_chrf([[1]], [[1, 2]], max_n=1, beta=1.0)
+    assert v1 == pytest.approx(2 * 1 * 0.5 / (1 + 0.5))
+    assert v1 > v
+
+
+def test_chrf_plus_plus_word_order():
+    # word_order=2 adds word n-gram slots; identical streams stay 1.0
+    assert corpus_chrf([[1, 2, 3]], [[1, 2, 3]], max_n=2,
+                       word_order=2) == pytest.approx(1.0)
+    # detok: chars come from the string, words from the split
+    detok = lambda ids: " ".join(str(i) for i in ids)      # noqa: E731
+    v = corpus_chrf([[1, 2, 3]], [[1, 2, 3]], word_order=2, detok=detok)
+    assert v == pytest.approx(1.0)
+
+
+def test_chrf_streaming_matches_batch_and_merge():
+    hyps = [[1, 2, 3, 4], [5, 6, 7]]
+    refs = [[1, 2, 3, 5], [5, 6, 8]]
+    batch = corpus_chrf(hyps, refs)
+    a, b = ChrFStat(), ChrFStat()
+    a.update(hyps[0], refs[0])
+    b.update(hyps[1], refs[1])
+    assert a.merge(b).score() == pytest.approx(batch)
+
+
+# ---------------------------------------------------------------------------
+# token accuracy / exact match / combined accumulator
+# ---------------------------------------------------------------------------
+
+
+def test_token_accuracy_and_exact_match():
+    assert token_accuracy([1, 2, 3], [1, 2, 3]) == 1.0
+    assert token_accuracy([1, 2, 3], [1, 9, 3]) == pytest.approx(2 / 3)
+    # length mismatch counts against the longer side
+    assert token_accuracy([1, 2], [1, 2, 3, 4]) == pytest.approx(0.5)
+    assert token_accuracy([], []) == 1.0
+    assert exact_match([1, 2], [1, 2])
+    assert not exact_match([1, 2], [1, 2, 3])
+
+
+def test_corpus_stat_bundles_all_metrics():
+    hyps = [[1, 2, 3, 4], [5, 6, 7]]
+    refs = [[1, 2, 3, 4], [5, 6, 8]]
+    st = CorpusStat()
+    for h, r in zip(hyps, refs):
+        st.update(h, r)
+    res = st.results()
+    assert res["bleu"] == pytest.approx(corpus_bleu(hyps, refs).score)
+    assert res["chrf"] == pytest.approx(corpus_chrf(hyps, refs))
+    assert res["exact_match"] == 0.5
+    assert res["token_acc"] == pytest.approx((1.0 + 2 / 3) / 2)
+    other = CorpusStat()
+    other.update([9], [9])
+    st.merge(other)
+    assert st.n_sent == 3

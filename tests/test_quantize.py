@@ -123,3 +123,19 @@ def test_policy_presets_quantize_tree():
         assert not isinstance(qp["layers"]["norm1_scale"], QT)
     q4 = quantize_tree(params, PRESETS["int4"])
     assert tree_nbytes(q4) < base / 3.5  # int4 weights + int8 embeddings
+
+
+def test_w8a8_weights_are_per_channel_at_any_k():
+    """The w8a8 integer-MAC path (qlinear._int8_path) needs ONE K-block
+    of weight scales; at K > the default 64-block this only holds
+    because the w8a8 preset forces per-channel quantization — blockwise
+    int8 would silently fall back to dequantized matmuls and defeat
+    activation calibration (deploy(calib_batches=...))."""
+    from repro.core import PRESETS, quantize_tree
+    params = {"layers": {"attn": {"wq": jnp.asarray(
+        np.random.default_rng(0).standard_normal((1024, 64)), jnp.float32)}}}
+    qt = quantize_tree(params, PRESETS["w8a8"])["layers"]["attn"]["wq"]
+    assert qt.fmt == "int8"
+    assert qt.block_scales().shape[-2] == 1      # int8 MAC eligibility
+    q8 = quantize_tree(params, PRESETS["int8"])["layers"]["attn"]["wq"]
+    assert q8.block_scales().shape[-2] == 1024 // 64  # plain int8: blockwise
