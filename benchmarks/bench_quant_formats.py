@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import REGISTRY, reduce_config
-from repro.core import PRESETS, quantize_tree
+from repro.core import quantize_tree, resolve_spec
 from repro.launch.hlo_analysis import HW
 from repro.models import Ctx, build_model
 from repro.serving import SamplingParams, ServeEngine
@@ -31,9 +31,10 @@ def full_model_bytes(policy_name: str) -> int:
     cfg = REGISTRY["nllb600m"]
     model = build_model(cfg)
     params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    if policy_name != "f32":
+    spec = resolve_spec(policy_name)
+    if spec.weights != "f32":
         params = jax.eval_shape(
-            lambda p: quantize_tree(p, PRESETS[policy_name]), params)
+            lambda p: quantize_tree(p, spec.policy()), params)
     return tree_bytes_abstract(params)
 
 
@@ -48,11 +49,12 @@ def run():
              "tgt_in": jnp.ones((4, 1), jnp.int32)}
 
     for pol in POLICIES:
+        spec = resolve_spec(pol)
         fb = full_model_bytes(pol)
-        params = (params_f32 if pol == "f32"
-                  else quantize_tree(params_f32, PRESETS[pol]))
+        params = (params_f32 if spec.weights == "f32"
+                  else quantize_tree(params_f32, spec.policy()))
         ctx = Ctx(compute_dtype=jnp.float32)
-        kv = PRESETS[pol].kv_cache if pol != "f32" else "bf16"
+        kv = spec.kv if spec.weights != "f32" else "bf16"
 
         # one engine per policy, reused across timed iterations: its
         # jitted prefill/step compile during warmup, so the rows measure
@@ -70,9 +72,14 @@ def run():
         us = time_fn(gen, iters=5)
         # bandwidth-bound decode projection for the FULL model on 1 v5e chip
         proj_tps = HW["hbm_bw"] / fb
+        # bytes-per-param columns come from the resolved spec — the one
+        # source every size column derives from (no local bit math)
+        bpp = spec.bytes_per_param
         csv_row(f"fig10_{pol}", us / 8,
-                f"full_GB={fb/2**30:.3f};reduction_vs_f32={base/fb:.2f}x;"
-                f"proj_v5e_tok_s={proj_tps:.0f}")
+                f"spec={spec};full_GB={fb/2**30:.3f};"
+                f"reduction_vs_f32={base/fb:.2f}x;"
+                f"bpp_w={bpp['weights']:.2f};bpp_embed={bpp['embed']:.2f};"
+                f"bpp_kv={bpp['kv']:.2f};proj_v5e_tok_s={proj_tps:.0f}")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,7 @@ import time
 
 import jax.numpy as jnp
 
+from repro.core import resolve_spec
 from repro.data import SyntheticTranslation
 from repro.serving import (IMPL_CHOICES, SamplingParams, deploy, impl_routes,
                            latency_percentiles, pages_needed)
@@ -119,8 +120,12 @@ def _sync_bound(toks: int, horizon: int, extra: int) -> int:
 
 
 def run(smoke: bool = False, json_path: str | None = None,
-        horizon: int = 1, impl: str = "xla"):
-    policies = POLICIES[:2] if smoke else POLICIES
+        horizon: int = 1, impl: str = "xla",
+        policies: list[str] | None = None):
+    if policies is None:
+        policies = list(POLICIES[:2] if smoke else POLICIES)
+    for pol in policies:                 # fail on typos before any build
+        resolve_spec(pol)
     n_req = REQUESTS
     rows = []
     tripped = []
@@ -216,9 +221,15 @@ def main():
                     help="kernel route: pallas = Pallas qmm matmuls + "
                          "Pallas paged attention (CPU runs need "
                          "REPRO_PALLAS_INTERPRET=1)")
+    ap.add_argument("--policies", default=None, metavar="SPECS",
+                    help="comma list of quantization specs (aliases or "
+                         "grammar strings, e.g. bf16,w4a8kv8); default: "
+                         "the standard preset sweep")
     args = ap.parse_args()
+    pols = ([p.strip() for p in args.policies.split(",") if p.strip()]
+            if args.policies else None)
     run(smoke=args.smoke, json_path=args.json, horizon=args.horizon,
-        impl=args.impl)
+        impl=args.impl, policies=pols)
 
 
 if __name__ == "__main__":

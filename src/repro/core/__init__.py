@@ -1,22 +1,29 @@
 """Core library: the paper's contribution (sub-octet quantization +
 co-designed kernels' software interface) as composable JAX modules."""
 
-from .calibration import ActStats, calibrate, calibrate_act_scale
+from .calibration import (ActSiteStats, ActStats, SiteCollector, calibrate,
+                          calibrate_act_scale, calibrate_act_scales)
 from .formats import FORMATS, Format, get_format
 from .policy import PRESETS, PrecisionPolicy, quantize_tree, tree_nbytes
-from .qlinear import embed_lookup, qmatmul, quantize_activations_int8
+from .qlinear import (act_quant_eligible, embed_lookup, int8_mac_eligible,
+                      qmatmul, quantize_activations,
+                      quantize_activations_int8)
 from .qlora import (attach_lora, count_adapter_params, extract_adapters,
                     inject_adapters, merge_lora)
 from .qtensor import QTensor, maybe_dequantize, tensor_nbytes
 from .quantize import dequantize_blockwise, quantize_blockwise
+from .spec import ALIASES, SPEC_GRAMMAR, QuantSpec, resolve_spec
 
 __all__ = [
     "FORMATS", "Format", "get_format",
+    "QuantSpec", "resolve_spec", "ALIASES", "SPEC_GRAMMAR",
     "PRESETS", "PrecisionPolicy", "quantize_tree", "tree_nbytes",
     "QTensor", "maybe_dequantize", "tensor_nbytes",
     "quantize_blockwise", "dequantize_blockwise",
-    "qmatmul", "embed_lookup", "quantize_activations_int8",
-    "ActStats", "calibrate", "calibrate_act_scale",
+    "qmatmul", "embed_lookup", "quantize_activations",
+    "quantize_activations_int8", "int8_mac_eligible", "act_quant_eligible",
+    "ActStats", "ActSiteStats", "SiteCollector", "calibrate",
+    "calibrate_act_scale", "calibrate_act_scales",
     "attach_lora", "extract_adapters", "inject_adapters", "merge_lora",
     "count_adapter_params",
 ]

@@ -1,20 +1,130 @@
-"""Activation calibration for static quantization (paper §III PTQ setup).
+"""Per-site activation calibration for static quantization (paper §III).
 
-For the w8a8 arm the paper calibrates on ~1000 queries/language; here the
-calibrator folds absmax / percentile statistics over sample activation
-batches and produces per-tensor scales usable by qlinear's int8 path.
+For the act-quantizing arms (w8a8, the fp8 end-to-end arm) the paper
+calibrates on ~1000 queries/language. Quantization impact in MT is
+uneven across matmul sites (Bhandare et al., 2019: int8 NMT needs
+per-matmul scale placement), so the calibrator keeps one absmax
+statistic *per matmul site path* (``enc.attn.qkv``, ``dec.ffn.in``,
+``dec.cross.kv``, ``head``, ... — the labels model code passes to
+``Ctx.dot``) instead of one global scalar:
+
+    scales = calibrate_act_scales(model, params, ctx, batches)
+    ctx = dataclasses.replace(ctx, act_scales=tuple(sorted(scales.items())))
+
+Each site's static scale is ``absmax / max_code`` for the deployed
+activation format; sites never observed during calibration fall back to
+dynamic per-token quantization at serve time (qlinear).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Iterable
+import functools
+from typing import Callable, Dict, Iterable
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["ActStats", "calibrate", "calibrate_act_scale"]
+__all__ = ["ActSiteStats", "SiteCollector", "calibrate_act_scales",
+           "calibrate_act_scale", "ActStats", "calibrate"]
 
+_UNSITED = "unsited"      # matmuls whose call site passed no label
+
+
+class ActSiteStats:
+    """Streaming per-site absmax registry.
+
+    ``update`` folds one observation; ``merge`` combines registries from
+    independent batch streams. Both reduce with ``max``, so merging is
+    associative and commutative — multi-host / multi-batch calibration
+    gives the same scales in any order.
+    """
+
+    def __init__(self, absmax: Dict[str, float] | None = None):
+        self.absmax: Dict[str, float] = dict(absmax or {})
+
+    def update(self, site: str, value: float) -> None:
+        v = float(value)
+        self.absmax[site] = max(self.absmax.get(site, 0.0), v)
+
+    def merge(self, other: "ActSiteStats") -> "ActSiteStats":
+        out = ActSiteStats(self.absmax)
+        for site, v in other.absmax.items():
+            out.update(site, v)
+        return out
+
+    def scales(self, max_code: float = 127.0) -> Dict[str, float]:
+        """site -> static activation scale (absmax / max_code)."""
+        return {site: max(v, 1e-8) / max_code
+                for site, v in self.absmax.items()}
+
+    def __len__(self) -> int:
+        return len(self.absmax)
+
+
+class SiteCollector:
+    """The host-side sink ``Ctx.dot`` ships per-site |x| maxima to (via
+    jax.debug.callback, scan-safe). Bind a site with ``bind(site)``."""
+
+    def __init__(self):
+        self.stats = ActSiteStats()
+
+    def bind(self, site: str | None) -> Callable:
+        return functools.partial(self.stats.update, site or _UNSITED)
+
+
+def calibrate_act_scales(model, params, ctx, batches: Iterable,
+                         max_code: float = 127.0) -> Dict[str, float]:
+    """Per-site static activation scales for an act-quantizing deploy.
+
+    Runs eager forward passes over ``batches`` with a collector-carrying
+    Ctx: every activation entering a quantized-weight matmul
+    (qlinear.act_quant_eligible) reports its absmax under the site label
+    the layer passed to ``Ctx.dot``; statistics fold with ``max`` across
+    batches (and across the layers a lax.scan stacks onto one site).
+    ``params`` should be the already-quantized tree being deployed, so
+    the observed activations are exactly what the quantized path sees.
+
+    ``max_code`` is the deployed activation format's absmax code (127
+    for int8, 448 for fp8 e4m3). Returns ``{}`` when ``batches`` is
+    empty — callers fall back to dynamic quantization (deploy() warns).
+    """
+    collector = SiteCollector()
+    # bf16 act route: observe the float activations the quantized path
+    # would quantize, through the same quantized weights
+    cctx = dataclasses.replace(ctx, act_fmt="bf16", act_collector=collector)
+    saw_batch = False
+    for batch in batches:
+        saw_batch = True
+        logits, _ = model.forward(cctx, params, batch)
+        jax.block_until_ready(logits)
+        jax.effects_barrier()           # flush the collector callbacks:
+        # block_until_ready covers the value, not the host-callback
+        # queue — without the barrier an async backend can reach the
+        # registry read before the updates land
+    if saw_batch and not len(collector.stats):
+        raise ValueError(
+            "calibration saw no quantized-weight matmuls — the deployed "
+            "tree has no QTensor sites to calibrate (was the policy a "
+            "bf16/f32 passthrough?)")
+    return collector.stats.scales(max_code)
+
+
+def calibrate_act_scale(model, params, ctx, batches: Iterable,
+                        max_code: float = 127.0) -> float:
+    """Legacy single-scalar calibration: the max per-site scale (the
+    envelope every site saturates within). Prefer calibrate_act_scales —
+    a global scalar wastes grid resolution at quiet sites."""
+    scales = calibrate_act_scales(model, params, ctx, batches,
+                                  max_code=max_code)
+    if not scales:
+        raise ValueError(
+            "calibration consumed no batches — pass a non-empty (fresh, "
+            "not already-iterated) batch iterable")
+    return max(scales.values())
+
+
+# -- generic streaming statistics (kept for direct library use) ------------
 
 class ActStats:
     """Streaming absmax + histogram-free percentile estimate (P^2-lite)."""
@@ -44,53 +154,3 @@ def calibrate(apply_fn: Callable, batches: Iterable, percentile=99.9) -> ActStat
     for b in batches:
         stats.update(apply_fn(b))
     return stats
-
-
-def calibrate_act_scale(model, params, ctx, batches: Iterable,
-                        percentile: float = 99.9,
-                        max_code: float = 127.0) -> float:
-    """ONE global static activation scale for the w8a8 int8 matmul path.
-
-    Runs eager forward passes over ``batches`` with a collector-carrying
-    Ctx: every activation entering an integer-MAC-eligible matmul
-    (qlinear.int8_mac_eligible) contributes its |x| distribution
-    (Ctx.dot appends to ``act_collector``), and one forward's worth is
-    folded per calibrate() step — absmax plus a percentile estimate,
-    scale = percentile / max_code. ``params`` should be the
-    already-quantized tree being deployed, so the observed activations
-    are exactly what the int8 path will see.
-
-    Deliberately coarser than the paper's per-matmul calibration: the
-    scale is a single scalar shared by every int8 matmul (layers whose
-    activation range sits far below the global percentile lose part of
-    their int8 grid). Per-matmul scale trees are a listed follow-up in
-    ROADMAP; this threads the plumbing end to end.
-    """
-    def apply_fn(batch):
-        sink: list = []
-        # bf16 act route: observe the float activations the int8 path
-        # would quantize, through the same quantized weights
-        cctx = dataclasses.replace(ctx, act_fmt="bf16", act_collector=sink)
-        logits, _ = model.forward(cctx, params, batch)
-        jax.block_until_ready(logits)
-        jax.effects_barrier()           # flush the collector callbacks:
-        # block_until_ready covers the value, not the host-callback
-        # queue — without the barrier an async backend can reach the
-        # sink read before the appends land
-        if not sink:
-            raise ValueError(
-                "calibration saw no per-channel int8-weight matmuls — the "
-                "deployed policy has no active w8a8 path to calibrate "
-                "(int8 weights must carry one K-block of scales; see "
-                "PRESETS['w8a8'])")
-        return jnp.concatenate([jnp.ravel(jnp.asarray(a)) for a in sink])
-
-    stats = calibrate(apply_fn, batches, percentile)
-    if not stats.samples:
-        # an exhausted generator would otherwise yield ActStats' empty
-        # fallback scale of 1.0 — catastrophic for O(1) activations, and
-        # indistinguishable from a calibrated deployment downstream
-        raise ValueError(
-            "calibration consumed no batches — pass a non-empty (fresh, "
-            "not already-iterated) batch iterable")
-    return stats.scale(max_code)

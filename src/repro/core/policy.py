@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from .qtensor import QTensor, tensor_nbytes
+from .spec import ALIASES
 
 __all__ = ["PrecisionPolicy", "PRESETS", "quantize_tree", "tree_nbytes"]
 
@@ -52,28 +53,13 @@ class PrecisionPolicy:
 
 # Presets mirror the paper's evaluated precisions (Fig. 10): the Baseline
 # (bf16 here; the paper's FP32 baseline maps to f32), INT8/FP8, INT4/FP4,
-# and the QLoRA NF4 deployment. Embeddings ride at int8 for the 4-bit
-# presets (matches the paper's reported 0.56 GB FP4 footprint for 600M).
-PRESETS = {
-    "f32": PrecisionPolicy("f32", weights="f32", embed="f32",
-                           compute_dtype=jnp.float32),
-    "bf16": PrecisionPolicy("bf16"),
-    "int8": PrecisionPolicy("int8", weights="int8", embed="int8"),
-    # w8a8 stores weights with per-CHANNEL scales (one K-block: the huge
-    # block_size spans any K) — the integer-MAC path in qlinear needs a
-    # single scale per output channel to rescale the int32 accumulator;
-    # blockwise int8 would silently fall back to dequantized matmuls and
-    # defeat both the int8 MXU mode and activation calibration
-    "w8a8": PrecisionPolicy("w8a8", weights="int8", embed="int8", act="int8",
-                            kv_cache="int8", block_size=2**20),
-    "fp8": PrecisionPolicy("fp8", weights="fp8", embed="fp8", kv_cache="fp8"),
-    "int4": PrecisionPolicy("int4", weights="int4", embed="int8",
-                            kv_cache="int8"),
-    "fp4": PrecisionPolicy("fp4", weights="fp4", embed="int8",
-                           kv_cache="int8"),
-    "nf4": PrecisionPolicy("nf4", weights="nf4", embed="int8",
-                           kv_cache="int8", double_quant=True),
-}
+# and the QLoRA NF4 deployment. Each name is a registered QuantSpec alias
+# (core.spec.ALIASES) — this table is derived from it, so an alias and
+# its grammar spelling deploy byte-for-byte identical trees. Notably,
+# w8a8 stores weights with per-CHANNEL scales (spec group 0: one K-block
+# spanning any K) — the integer-MAC path in qlinear needs a single scale
+# per output channel to rescale the int32 accumulator.
+PRESETS = {name: s.policy(name=name) for name, s in ALIASES.items()}
 
 
 def _is_quantizable(path: str, leaf: Any, fmt: str) -> bool:

@@ -23,7 +23,10 @@ from typing import Any, Dict, List, Optional, Sequence
 __all__ = ["SCHEMA_VERSION", "make_report", "dump", "load", "save",
            "render_markdown"]
 
-SCHEMA_VERSION = 1
+# v2: every sweep row records the fully-resolved quantization spec
+# string ("spec") next to the requested alias ("fmt"); v1 reports are
+# upgraded on load (the alias is re-resolved when possible).
+SCHEMA_VERSION = 2
 
 
 def _git_rev() -> Optional[str]:
@@ -73,8 +76,31 @@ def dump(report: Dict[str, Any]) -> str:
     return json.dumps(report, indent=2, sort_keys=True, allow_nan=False)
 
 
+def _upgrade_v1(report: Dict[str, Any]) -> Dict[str, Any]:
+    """Schema 1 -> 2: derive each row's resolved spec string from its
+    format alias (falling back to the alias itself for names the current
+    registry no longer resolves)."""
+    from ..core import resolve_spec
+    rows = []
+    for row in report.get("rows", []):
+        row = dict(row)
+        if "spec" not in row:
+            try:
+                row["spec"] = str(resolve_spec(row.get("fmt")))
+            except (ValueError, TypeError):
+                row["spec"] = row.get("fmt")
+        rows.append(row)
+    return {**report, "schema": SCHEMA_VERSION, "rows": rows}
+
+
 def load(text: str) -> Dict[str, Any]:
-    return json.loads(text)
+    """Parse a report; v1 artifacts are upgraded to the current schema
+    (v2 reports round-trip unchanged: load(dump(x)) == x)."""
+    report = json.loads(text)
+    if isinstance(report, dict) and report.get("kind") == "repro.eval" \
+            and report.get("schema") == 1:
+        report = _upgrade_v1(report)
+    return report
 
 
 def save(report: Dict[str, Any], path: str) -> None:
@@ -101,13 +127,14 @@ def _fmt(v: Any, nd: int = 3, signed: bool = False) -> str:
 
 
 def _sweep_table(rows: List[Dict[str, Any]]) -> List[str]:
-    head = ("| format | BLEU | ΔBLEU | chrF | ΔchrF | model MB | compr "
-            "| kv MB | tok/s | calib |")
-    sep = "|---" * 10 + "|"
+    head = ("| format | spec | BLEU | ΔBLEU | chrF | ΔchrF | model MB "
+            "| compr | kv MB | tok/s | calib |")
+    sep = "|---" * 11 + "|"
     lines = [head, sep]
     for r in rows:
         lines.append(
-            f"| {r['fmt']} | {_fmt(r['mean_bleu'])}"
+            f"| {r['fmt']} | {r.get('spec', r['fmt'])}"
+            f" | {_fmt(r['mean_bleu'])}"
             f" | {_fmt(r['bleu_delta'], signed=True)}"
             f" | {_fmt(r['mean_chrf'])}"
             f" | {_fmt(r['chrf_delta'], signed=True)}"

@@ -20,20 +20,21 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from ..core import PRESETS
+from ..core import resolve_spec
 from ..serving import deploy
 from .suite import PairScore, evaluate_pairs, summarize
 
 __all__ = ["FormatRow", "quant_sweep", "ANCHOR"]
 
-ANCHOR = "bf16"        # deltas are measured against this preset
+ANCHOR = "bf16"        # deltas are measured against this spec name
 
 
 @dataclasses.dataclass(frozen=True)
 class FormatRow:
-    """One precision preset's quality-vs-size-vs-throughput summary."""
+    """One precision spec's quality-vs-size-vs-throughput summary."""
 
-    fmt: str
+    fmt: str                           # the spec as requested (alias ok)
+    spec: str                          # fully-resolved grammar string
     model_bytes: int                   # quantized parameter storage
     fp_bytes: int                      # pre-quantization parameter bytes
     compression: float
@@ -45,7 +46,7 @@ class FormatRow:
     gen_tokens: int
     bleu_delta: Optional[float]        # vs the anchor row (None = anchor
     chrf_delta: Optional[float]        # itself, or anchor not in sweep)
-    calibrated: bool                   # global static w8a8 act scale set?
+    calibrated: bool                   # per-site static act scales set?
     pair_scores: Tuple[PairScore, ...]
 
     def as_row(self) -> Dict[str, Any]:
@@ -66,28 +67,27 @@ def quant_sweep(arch_or_cfg, formats: Sequence[str], *, params: Any,
 
     params:     trained parameter tree (pre-quantization); each format
                 deploys its own quantized copy of it.
-    formats:    preset names from core.PRESETS, evaluated in order.
-                Put ``"bf16"`` among them to populate the delta columns.
+    formats:    quantization specs — registered aliases and/or grammar
+                strings (core.resolve_spec), evaluated in order. Put
+                ``"bf16"`` among them to populate the delta columns.
     calib_batches_fn: zero-arg callable returning a fresh iterable of
                 calibration batches; invoked once per act-quantizing
-                preset (the w8a8 arm) and passed to
+                spec (a8 / afp8 arms) and passed to
                 ``deploy(calib_batches=...)``. None = dynamic per-token
                 activation quantization.
     deploy_kwargs: serving knobs forwarded to every deploy() call —
                 slots, max_len, paged, page_size, num_pages, horizon,
                 matmul_impl/paged_attn_impl, smoke, ctx... (deploy()
                 itself derives each format's activation route from the
-                preset, so one ctx serves the whole sweep).
+                spec, so one ctx serves the whole sweep).
     """
-    unknown = [f for f in formats if f not in PRESETS]
-    if unknown:
-        raise KeyError(f"unknown formats {unknown}; have {sorted(PRESETS)}")
+    resolved = [resolve_spec(f) for f in formats]   # fail fast on typos
     dk = dict(deploy_kwargs or {})
     rows: List[FormatRow] = []
     anchor: Optional[FormatRow] = None
-    for fmt in formats:
+    for fmt, spec in zip(formats, resolved):
         calib = None
-        if calib_batches_fn is not None and PRESETS[fmt].act == "int8":
+        if calib_batches_fn is not None and spec.quantizes_act:
             calib = calib_batches_fn()
         pipe = deploy(arch_or_cfg, fmt, params=params,
                       calib_batches=calib, **dk)
@@ -96,7 +96,7 @@ def quant_sweep(arch_or_cfg, formats: Sequence[str], *, params: Any,
                                 languages=languages)
         agg = summarize(scores)
         row = FormatRow(
-            fmt=fmt, model_bytes=pipe.quantized_bytes,
+            fmt=fmt, spec=pipe.spec_str, model_bytes=pipe.quantized_bytes,
             fp_bytes=pipe.fp_bytes,
             compression=round(pipe.compression, 3),
             kv_cache_bytes=pipe.engine.kv_cache_bytes,
@@ -105,12 +105,12 @@ def quant_sweep(arch_or_cfg, formats: Sequence[str], *, params: Any,
             mean_tok_s=round(agg["mean_tok_s"], 1),
             gen_tokens=agg["gen_tokens"],
             bleu_delta=None, chrf_delta=None,
-            calibrated=pipe.ctx.act_scale is not None,
+            calibrated=pipe.ctx.act_scales is not None,
             pair_scores=tuple(scores))
         if fmt == ANCHOR:
             anchor = row
         rows.append(row)
-        log(f"[sweep] {fmt:5s} bleu {row.mean_bleu:.3f} chrf "
+        log(f"[sweep] {fmt:5s} ({row.spec}) bleu {row.mean_bleu:.3f} chrf "
             f"{row.mean_chrf:.3f} bytes {row.model_bytes} "
             f"({row.compression:.2f}x) tok/s {row.mean_tok_s}")
     if anchor is not None:

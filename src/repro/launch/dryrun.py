@@ -23,7 +23,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from ..configs import (ASSIGNED, SHAPES, active_param_count, get_config,  # noqa: E402
                        input_specs, param_count, supported_shapes)
-from ..core.policy import PRESETS, quantize_tree  # noqa: E402
+from ..core.policy import quantize_tree  # noqa: E402
+from ..core.spec import resolve_spec  # noqa: E402
 from ..models import Ctx, build_model  # noqa: E402
 from ..parallel import (batch_axes, batch_shardings, cache_shardings,  # noqa: E402
                         param_shardings, set_mesh)
@@ -72,7 +73,7 @@ def build_cell(cfg, shape_name: str, mesh, policy_name: str):
         out_sh = (ss, _replicated(mesh, metrics_shape))
         return (step, (state_shape, batch_shape), (ss, bs), out_sh, (0,))
 
-    policy = PRESETS[policy_name]
+    policy = resolve_spec(policy_name).policy()
     params_shape = jax.eval_shape(
         lambda k: quantize_tree(model.init(k), policy), key)
     ps = param_shardings(mesh, params_shape,
@@ -218,7 +219,9 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--policy", default="int4",
-                    help="serve-cell weight policy (train cells use bf16)")
+                    help="serve-cell quantization spec — alias or grammar "
+                         "string, e.g. int4 / w4a8kv8 (train cells use "
+                         "bf16)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--save-hlo", action="store_true")
     ap.add_argument("--moe-groups", type=int, default=0,

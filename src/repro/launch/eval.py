@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import REGISTRY, get_config, reduce_config
-from ..core import PRESETS
+from ..core import ALIASES, resolve_spec
 from ..data import LANG_CODES, SyntheticTranslation, pairs as fig9_pairs
 from ..eval import make_report, quant_sweep, render_markdown, save
 from ..eval.suite import _ordered_langs
@@ -92,7 +92,9 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config, f32 compute (CPU-runnable)")
     ap.add_argument("--formats", default="bf16,int8,int4",
-                    help=f"comma list of presets from {sorted(PRESETS)}")
+                    help="comma list of quantization specs: aliases "
+                         f"({', '.join(sorted(ALIASES))}) and/or grammar "
+                         "strings like w4a8kv8 / wfp8e4m3afp8kvfp8")
     ap.add_argument("--pairs", type=parse_pairs, default=None,
                     help="comma list of src-tgt directions (hin-eng,eng-hin);"
                          " default: --smoke 2 directions, else the full "
@@ -131,9 +133,11 @@ def main(argv=None):
 
     formats = [f.strip() for f in args.formats.split(",") if f.strip()]
     # fail on argument typos BEFORE the multi-minute training fit
-    bad = [f for f in formats if f not in PRESETS]
-    if bad:
-        raise SystemExit(f"unknown --formats {bad}; have {sorted(PRESETS)}")
+    for f in formats:
+        try:
+            resolve_spec(f)
+        except ValueError as e:
+            raise SystemExit(f"bad --formats entry: {e}")
     pair_list = args.pairs if args.pairs is not None else (
         [("hin", "eng"), ("eng", "hin")] if args.smoke else fig9_pairs())
     bad = sorted({lang for p in pair_list for lang in p

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import REGISTRY
-from ..core import PRESETS
+from ..core import ALIASES, resolve_spec
 from ..data import SyntheticTranslation
 from ..serving import IMPL_CHOICES, SamplingParams, deploy, impl_routes
 
@@ -26,7 +26,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="nllb600m", choices=sorted(REGISTRY))
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--policy", default="int4", choices=sorted(PRESETS))
+    ap.add_argument("--policy", default="int4", metavar="SPEC",
+                    help="quantization spec: an alias "
+                         f"({', '.join(sorted(ALIASES))}) or a grammar "
+                         "string like w4a8kv8 / wfp8e4m3afp8kvfp8")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--gen", type=int, default=8)
@@ -48,13 +51,14 @@ def main():
     ap.add_argument("--eos-id", type=int, default=None)
     args = ap.parse_args()
 
+    resolve_spec(args.policy)        # fail on typos before any build work
     pipe = deploy(args.arch, args.policy, slots=args.slots,
                   max_len=args.max_len, smoke=args.smoke, paged=args.paged,
                   page_size=args.page_size, num_pages=args.num_pages,
                   horizon=args.horizon, **impl_routes(args.impl))
     print(f"model bytes {pipe.fp_bytes/2**20:.1f} MB -> "
           f"{pipe.quantized_bytes/2**20:.1f} MB "
-          f"({args.policy}, {pipe.compression:.2f}x)")
+          f"({args.policy} = {pipe.spec_str}, {pipe.compression:.2f}x)")
 
     cfg = pipe.cfg
     # sources up to the engine's cross capacity (default enc_len) are

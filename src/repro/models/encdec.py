@@ -19,7 +19,7 @@ from ..parallel import hint, hint_pick
 from . import moe as moe_mod
 from .layers import (Ctx, attention_init, attn_apply, decode_attn_apply,
                      mlp, mlp_init, rms_norm)
-from .transformer import (_commit_decode_position, _dense_kv,
+from .transformer import (_commit_decode_position, _dense_kv, _fp8_token_kv,
                           _quantize_token_kv, _scatter_tokens, paged_attn,
                           paged_view)
 
@@ -100,7 +100,8 @@ def encdec_encode(ctx: Ctx, params, cfg, src_tokens=None, frames=None,
                           num_heads=cfg.num_heads,
                           num_kv_heads=cfg.num_kv_heads,
                           head_dim=cfg.head_dim, causal=False, window=0,
-                          rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+                          rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
+                          site="enc.attn")
         x = x + y
         h = rms_norm(x, lp["norm2_scale"], cfg.norm_eps)
         if cfg.moe is not None:
@@ -110,7 +111,7 @@ def encdec_encode(ctx: Ctx, params, cfg, src_tokens=None, frames=None,
                                      parallel_mode=cfg.moe.parallel_mode,
                                      dispatch_groups=cfg.moe.dispatch_groups)
         else:
-            y = mlp(ctx, lp["mlp"], h, cfg.mlp_act)
+            y = mlp(ctx, lp["mlp"], h, cfg.mlp_act, site="enc.ffn")
         x = x + y
         return hint_pick(x, ("batch", "model", None),
                          ("batch", None, None)), None
@@ -126,14 +127,15 @@ def _dec_layer(ctx, cfg, lp, x, positions, enc_kv, collect_kv):
     y, kv = attn_apply(ctx, lp["attn"], h, positions,
                        num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
                        head_dim=cfg.head_dim, causal=True, window=0,
-                       rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+                       rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps,
+                       site="dec.attn")
     x = x + y
     h = rms_norm(x, lp["norm2_scale"], cfg.norm_eps)
     y, _ = attn_apply(ctx, lp["cross"], h, positions,
                       num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
                       head_dim=cfg.head_dim, causal=False, window=0,
                       kv_override=enc_kv, use_rope=False,
-                      norm_eps=cfg.norm_eps)
+                      norm_eps=cfg.norm_eps, site="dec.cross")
     x = x + y
     h = rms_norm(x, lp["norm3_scale"], cfg.norm_eps)
     if cfg.moe is not None:
@@ -143,7 +145,8 @@ def _dec_layer(ctx, cfg, lp, x, positions, enc_kv, collect_kv):
                                    parallel_mode=cfg.moe.parallel_mode,
                                      dispatch_groups=cfg.moe.dispatch_groups)
     else:
-        y, aux = mlp(ctx, lp["mlp"], h, cfg.mlp_act), jnp.zeros((), jnp.float32)
+        y, aux = (mlp(ctx, lp["mlp"], h, cfg.mlp_act, site="dec.ffn"),
+                  jnp.zeros((), jnp.float32))
     return hint_pick(x + y, ("batch", "model", None),
                      ("batch", None, None)), aux, kv
 
@@ -151,9 +154,9 @@ def _dec_layer(ctx, cfg, lp, x, positions, enc_kv, collect_kv):
 def _cross_kv(ctx, lp, cfg, enc_out):
     """Per-layer cross-attention K/V from encoder output."""
     B, Se, _ = enc_out.shape
-    k = ctx.dot(enc_out, lp["cross"]["wk"]).reshape(
+    k = ctx.dot(enc_out, lp["cross"]["wk"], site="dec.cross.kv").reshape(
         B, Se, cfg.num_kv_heads, cfg.head_dim)
-    v = ctx.dot(enc_out, lp["cross"]["wv"]).reshape(
+    v = ctx.dot(enc_out, lp["cross"]["wv"], site="dec.cross.kv").reshape(
         B, Se, cfg.num_kv_heads, cfg.head_dim)
     return k, v
 
@@ -163,7 +166,7 @@ def _head(ctx, params, cfg, x):
         w = maybe_dequantize(params["embedding"], ctx.compute_dtype)
         logits = jnp.einsum("bsd,vd->bsv", x.astype(ctx.compute_dtype), w)
     else:
-        logits = ctx.dot(x, params["lm_head"])
+        logits = ctx.dot(x, params["lm_head"], site="head")
     return hint_pick(logits.astype(jnp.float32),
                      ("batch", "model", None), ("batch", None, "model"))
 
@@ -222,6 +225,21 @@ def encdec_init_cache(cfg, batch: int, max_len: int, enc_len: int,
             cross_v_codes=jnp.zeros((L, batch, enc_len, Hkv, hd), jnp.int8),
             cross_v_scales=jnp.zeros((L, batch, enc_len, Hkv), jnp.float32))
         return cache
+    if kv_dtype == "fp8":
+        # e4m3 codes + per-(token, head) f32 scales, self AND cross —
+        # same layout as int8 but with float8 storage ("k"/"v" keys so
+        # the fp8 path is "k_scales present, k_codes absent")
+        f8 = jnp.float8_e4m3fn
+        cache.update(
+            k=jnp.zeros((L, batch, max_len, Hkv, hd), f8),
+            k_scales=jnp.zeros((L, batch, max_len, Hkv), jnp.float32),
+            v=jnp.zeros((L, batch, max_len, Hkv, hd), f8),
+            v_scales=jnp.zeros((L, batch, max_len, Hkv), jnp.float32),
+            cross_k=jnp.zeros((L, batch, enc_len, Hkv, hd), f8),
+            cross_k_scales=jnp.zeros((L, batch, enc_len, Hkv), jnp.float32),
+            cross_v=jnp.zeros((L, batch, enc_len, Hkv, hd), f8),
+            cross_v_scales=jnp.zeros((L, batch, enc_len, Hkv), jnp.float32))
+        return cache
     dt = jnp.float32 if kv_dtype == "f32" else jnp.bfloat16
     cache.update(
         cross_k=jnp.zeros((L, batch, enc_len, Hkv, hd), dt),
@@ -266,6 +284,17 @@ def encdec_prefill(ctx: Ctx, params, cfg, cache, tgt_tokens, src_tokens=None,
         cvc, cvsc = _quantize_token_kv(cvs)
         new_cache["cross_k_codes"], new_cache["cross_k_scales"] = ckc, cksc
         new_cache["cross_v_codes"], new_cache["cross_v_scales"] = cvc, cvsc
+    elif "k_scales" in cache:   # fp8 self + cross caches
+        kc, ksc = _fp8_token_kv(ks)
+        vc, vsc = _fp8_token_kv(vs)
+        new_cache["k"] = cache["k"].at[:, :, :Sd].set(kc)
+        new_cache["k_scales"] = cache["k_scales"].at[:, :, :Sd].set(ksc)
+        new_cache["v"] = cache["v"].at[:, :, :Sd].set(vc)
+        new_cache["v_scales"] = cache["v_scales"].at[:, :, :Sd].set(vsc)
+        ckc, cksc = _fp8_token_kv(cks)
+        cvc, cvsc = _fp8_token_kv(cvs)
+        new_cache["cross_k"], new_cache["cross_k_scales"] = ckc, cksc
+        new_cache["cross_v"], new_cache["cross_v_scales"] = cvc, cvsc
     else:
         new_cache["cross_k"] = cks.astype(cache["cross_k"].dtype)
         new_cache["cross_v"] = cvs.astype(cache["cross_v"].dtype)
@@ -301,6 +330,8 @@ def encdec_decode_step(ctx: Ctx, params, cfg, tokens, cache):
     positions = cache["len"][:, None]
     x = embed_lookup(params["embedding"], tokens, ctx.compute_dtype)
     quant = "k_codes" in cache
+    fp8 = "k_scales" in cache and not quant
+    scaled = quant or fp8
     Se = (cache["cross_k_codes"] if quant else cache["cross_k"]).shape[2]
     enc_pos = _enc_positions(cache, B, Se)
 
@@ -309,12 +340,17 @@ def encdec_decode_step(ctx: Ctx, params, cfg, tokens, cache):
               cache["v_codes"], cache["v_scales"], cache["cross_k_codes"],
               cache["cross_k_scales"], cache["cross_v_codes"],
               cache["cross_v_scales"])
+    elif fp8:
+        xs = (params["decoder"]["layers"], cache["k"], cache["k_scales"],
+              cache["v"], cache["v_scales"], cache["cross_k"],
+              cache["cross_k_scales"], cache["cross_v"],
+              cache["cross_v_scales"])
     else:
         xs = (params["decoder"]["layers"], cache["k"], cache["v"],
               cache["cross_k"], cache["cross_v"])
 
     def body(x, layer_xs):
-        if quant:
+        if scaled:
             lp, kc, ksc, vc, vsc, ckc, cksc, cvc, cvsc = layer_xs
             k_dense, v_dense = _dense_kv(kc, ksc), _dense_kv(vc, vsc)
             ck, cv = _dense_kv(ckc, cksc), _dense_kv(cvc, cvsc)
@@ -326,7 +362,7 @@ def encdec_decode_step(ctx: Ctx, params, cfg, tokens, cache):
             ctx, lp["attn"], h, positions, k_dense, v_dense, cache["pos"],
             num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.head_dim, window=0, rope_theta=cfg.rope_theta,
-            norm_eps=cfg.norm_eps)
+            norm_eps=cfg.norm_eps, site="dec.attn")
         x = x + y
         h = rms_norm(x, lp["norm2_scale"], cfg.norm_eps)
         y, _ = attn_apply(ctx, lp["cross"], h, positions,
@@ -334,7 +370,7 @@ def encdec_decode_step(ctx: Ctx, params, cfg, tokens, cache):
                           num_kv_heads=cfg.num_kv_heads,
                           head_dim=cfg.head_dim, causal=False, window=0,
                           kv_override=(ck, cv, enc_pos), use_rope=False,
-                          norm_eps=cfg.norm_eps)
+                          norm_eps=cfg.norm_eps, site="dec.cross")
         x = x + y
         h = rms_norm(x, lp["norm3_scale"], cfg.norm_eps)
         if cfg.moe is not None:
@@ -345,11 +381,12 @@ def encdec_decode_step(ctx: Ctx, params, cfg, tokens, cache):
                                      dropless=True,
                                      dispatch_groups=cfg.moe.dispatch_groups)
         else:
-            y = mlp(ctx, lp["mlp"], h, cfg.mlp_act)
+            y = mlp(ctx, lp["mlp"], h, cfg.mlp_act, site="dec.ffn")
         x = x + y
-        if quant:
-            nkc, nks = _quantize_token_kv(k_new)
-            nvc, nvs = _quantize_token_kv(v_new)
+        if scaled:
+            qfn = _quantize_token_kv if quant else _fp8_token_kv
+            nkc, nks = qfn(k_new)
+            nvc, nvs = qfn(v_new)
             return x, (_scatter_tokens(kc, nkc, cache["len"]),
                        _scatter_tokens(ksc, nks, cache["len"]),
                        _scatter_tokens(vc, nvc, cache["len"]),
@@ -364,6 +401,9 @@ def encdec_decode_step(ctx: Ctx, params, cfg, tokens, cache):
     if quant:
         (new_cache["k_codes"], new_cache["k_scales"],
          new_cache["v_codes"], new_cache["v_scales"]) = new_kv
+    elif fp8:
+        (new_cache["k"], new_cache["k_scales"],
+         new_cache["v"], new_cache["v_scales"]) = new_kv
     else:
         new_cache["k"], new_cache["v"] = new_kv
     return _commit_decode_position(new_cache, cache, positions), logits
@@ -390,6 +430,13 @@ def encdec_init_paged_cache(cfg, slots: int, max_pages: int, num_pages: int,
             cross_k_scales=jnp.zeros((L, slots, enc_len, Hkv), jnp.float32),
             cross_v_codes=jnp.zeros((L, slots, enc_len, Hkv, hd), jnp.int8),
             cross_v_scales=jnp.zeros((L, slots, enc_len, Hkv), jnp.float32))
+    elif kv_dtype == "fp8":
+        f8 = jnp.float8_e4m3fn
+        cache.update(
+            cross_k=jnp.zeros((L, slots, enc_len, Hkv, hd), f8),
+            cross_k_scales=jnp.zeros((L, slots, enc_len, Hkv), jnp.float32),
+            cross_v=jnp.zeros((L, slots, enc_len, Hkv, hd), f8),
+            cross_v_scales=jnp.zeros((L, slots, enc_len, Hkv), jnp.float32))
     else:
         dt = jnp.float32 if kv_dtype == "f32" else jnp.bfloat16
         cache.update(
@@ -411,6 +458,8 @@ def encdec_paged_decode_step(ctx: Ctx, params, cfg, tokens, cache):
     view_pos, pid, off = paged_view(cache)
     x = embed_lookup(params["embedding"], tokens, ctx.compute_dtype)
     quant = "k_codes" in cache
+    fp8 = "k_scales" in cache and not quant
+    scaled = quant or fp8
     Se = (cache["cross_k_codes"] if quant else cache["cross_k"]).shape[2]
     enc_pos = _enc_positions(cache, B, Se)
     use_kernel = ctx.paged_attn_impl == "kernel"
@@ -421,12 +470,17 @@ def encdec_paged_decode_step(ctx: Ctx, params, cfg, tokens, cache):
               cache["k_scales"], cache["v_codes"], cache["v_scales"],
               cache["cross_k_codes"], cache["cross_k_scales"],
               cache["cross_v_codes"], cache["cross_v_scales"])
+    elif fp8:
+        xs = (params["decoder"]["layers"], cache["k"], cache["k_scales"],
+              cache["v"], cache["v_scales"], cache["cross_k"],
+              cache["cross_k_scales"], cache["cross_v"],
+              cache["cross_v_scales"])
     else:
         xs = (params["decoder"]["layers"], cache["k"], cache["v"],
               cache["cross_k"], cache["cross_v"])
 
     def body(x, layer_xs):
-        if quant:
+        if scaled:
             lp, *leaves = layer_xs[:5]
             ckc, cksc, cvc, cvsc = layer_xs[5:]
             ck, cv = _dense_kv(ckc, cksc), _dense_kv(cvc, cvsc)
@@ -439,7 +493,7 @@ def encdec_paged_decode_step(ctx: Ctx, params, cfg, tokens, cache):
             lengths_now, tables, use_kernel=use_kernel,
             num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
             head_dim=cfg.head_dim, window=0, rope_theta=cfg.rope_theta,
-            norm_eps=cfg.norm_eps)
+            norm_eps=cfg.norm_eps, site="dec.attn")
         x = x + y
         h = rms_norm(x, lp["norm2_scale"], cfg.norm_eps)
         y, _ = attn_apply(ctx, lp["cross"], h, positions,
@@ -447,7 +501,7 @@ def encdec_paged_decode_step(ctx: Ctx, params, cfg, tokens, cache):
                           num_kv_heads=cfg.num_kv_heads,
                           head_dim=cfg.head_dim, causal=False, window=0,
                           kv_override=(ck, cv, enc_pos), use_rope=False,
-                          norm_eps=cfg.norm_eps)
+                          norm_eps=cfg.norm_eps, site="dec.cross")
         x = x + y
         h = rms_norm(x, lp["norm3_scale"], cfg.norm_eps)
         if cfg.moe is not None:
@@ -458,7 +512,7 @@ def encdec_paged_decode_step(ctx: Ctx, params, cfg, tokens, cache):
                                      dropless=True,
                                      dispatch_groups=cfg.moe.dispatch_groups)
         else:
-            y = mlp(ctx, lp["mlp"], h, cfg.mlp_act)
+            y = mlp(ctx, lp["mlp"], h, cfg.mlp_act, site="dec.ffn")
         return x + y, new_leaves
 
     x, new_kv = jax.lax.scan(body, x, xs)
@@ -468,6 +522,9 @@ def encdec_paged_decode_step(ctx: Ctx, params, cfg, tokens, cache):
     if quant:
         (new_cache["k_codes"], new_cache["k_scales"],
          new_cache["v_codes"], new_cache["v_scales"]) = new_kv
+    elif fp8:
+        (new_cache["k"], new_cache["k_scales"],
+         new_cache["v"], new_cache["v_scales"]) = new_kv
     else:
         new_cache["k"], new_cache["v"] = new_kv
     new_cache["len"] = jnp.where(active > 0, cache["len"] + 1, cache["len"])

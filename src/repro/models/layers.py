@@ -9,12 +9,13 @@ Pallas kernel and the differentiable model path.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from ..core.qlinear import int8_mac_eligible, qmatmul
+from ..core.qlinear import act_quant_eligible, qmatmul
 from ..kernels.fasst import _naf
 from ..parallel import hint, hint_pick
 
@@ -27,7 +28,7 @@ __all__ = ["Ctx", "rms_norm", "layer_norm", "rope", "linear", "mlp",
 class Ctx:
     """Per-call execution context threaded through model code."""
     compute_dtype: Any = jnp.bfloat16
-    act_fmt: str = "bf16"          # matmul activation format (bf16 | int8)
+    act_fmt: str = "bf16"          # matmul act format (bf16 | int8 | fp8)
     attn_impl: str = "full"        # full | chunked
     attn_chunk: int = 1024
     use_fasst_kernel: bool = False # route NAFs through the Pallas kernel
@@ -37,26 +38,41 @@ class Ctx:
     # "kernel" routes through kernels/paged_attn.py (block-table DMA
     # walk, write-then-attend — the TPU serving path)
     paged_attn_impl: str = "gather"
-    # calibrated static activation scale for the int8 act path (w8a8):
-    # None = dynamic per-token quantization; set by deploy(calib_batches=)
-    act_scale: Any = None
-    # calibration sink: when set, dot() ships |x| of every activation
-    # entering an int8-weight matmul to the host via jax.debug.callback
-    # (scan-safe — model forwards scan over layers), where it lands as
-    # a concrete array appended to this list. core.calibration reads
-    # it; excluded from eq/hash so Ctx stays usable as a static arg.
+    # calibrated static activation scales for the quantized act paths:
+    # a tuple of (site, scale) pairs (hashable, so Ctx stays usable as
+    # a static arg) from core.calibration.calibrate_act_scales, set by
+    # deploy(calib_batches=). None — or a site absent from the registry
+    # — falls back to dynamic per-token quantization.
+    act_scales: Any = None
+    # calibration sink: when set, dot() ships the per-site |x| max of
+    # every activation entering a quantized-weight matmul to the host
+    # via jax.debug.callback (scan-safe — model forwards scan over
+    # layers). A core.calibration.SiteCollector; excluded from eq/hash
+    # so Ctx stays usable as a static arg.
     act_collector: Any = dataclasses.field(
         default=None, compare=False, repr=False)
 
-    def dot(self, x, w):
-        if self.act_collector is not None and int8_mac_eligible(w):
-            # integer-MAC matmuls only: blockwise int8 falls back to a
-            # dequantized matmul in qlinear and never quantizes x, so
-            # its activations must not steer the calibrated scale
-            jax.debug.callback(self.act_collector.append,
-                               jnp.abs(x.astype(jnp.float32)))
+    @functools.cached_property
+    def _site_scales(self):
+        return dict(self.act_scales) if self.act_scales is not None else {}
+
+    def scale_for(self, site):
+        """Calibrated static activation scale for a matmul site (None =
+        dynamic per-token quantization)."""
+        if site is None:
+            return None
+        return self._site_scales.get(site)
+
+    def dot(self, x, w, site=None):
+        """x @ w with the context's activation route. ``site`` is the
+        matmul's calibration label (e.g. "dec.ffn.in"): the collector
+        files absmax observations under it, and the static-scale
+        registry is keyed by it — unlabelled sites stay dynamic."""
+        if self.act_collector is not None and act_quant_eligible(w):
+            jax.debug.callback(self.act_collector.bind(site),
+                               jnp.max(jnp.abs(x.astype(jnp.float32))))
         return qmatmul(x, w, act=self.act_fmt, compute_dtype=self.compute_dtype,
-                       impl=self.matmul_impl, act_scale=self.act_scale)
+                       impl=self.matmul_impl, act_scale=self.scale_for(site))
 
     def naf(self, x, mode):
         if self.use_fasst_kernel:
@@ -99,8 +115,8 @@ def rope(x, positions, theta: float = 1e4):
         [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
 
 
-def linear(ctx: Ctx, x, w, b=None):
-    y = ctx.dot(x, w)
+def linear(ctx: Ctx, x, w, b=None, site=None):
+    y = ctx.dot(x, w, site=site)
     if b is not None:
         y = y + b.astype(y.dtype)
     return y
@@ -125,15 +141,17 @@ def mlp_init(key, d_model: int, d_ff: int, act: str, dtype=jnp.float32):
             "w_out": jax.random.normal(k2, (d_ff, d_model), dtype) * s_out}
 
 
-def mlp(ctx: Ctx, params, x, act: str):
+def mlp(ctx: Ctx, params, x, act: str, site="ffn"):
     if act in GLU_ACTS:
-        h = ctx.naf(ctx.dot(x, params["w_gate"]), GLU_ACTS[act])
-        h = h * ctx.dot(x, params["w_up"])
+        h = ctx.naf(ctx.dot(x, params["w_gate"], site=f"{site}.in"),
+                    GLU_ACTS[act])
+        h = h * ctx.dot(x, params["w_up"], site=f"{site}.in")
         h = hint(h, None, None, "model")
-        return ctx.dot(h, params["w_down"])
-    h = ctx.naf(ctx.dot(x, params["w_in"]), PLAIN_ACTS[act])
+        return ctx.dot(h, params["w_down"], site=f"{site}.out")
+    h = ctx.naf(ctx.dot(x, params["w_in"], site=f"{site}.in"),
+                PLAIN_ACTS[act])
     h = hint(h, None, None, "model")
-    return ctx.dot(h, params["w_out"])
+    return ctx.dot(h, params["w_out"], site=f"{site}.out")
 
 
 # -- attention ----------------------------------------------------------------
@@ -207,17 +225,19 @@ def _sdpa(q, k, v, mask, sm_scale):
 def attn_apply(ctx: Ctx, params, x, positions, *, num_heads, num_kv_heads,
                head_dim, causal=True, window=0, rope_theta=1e4,
                kv_override=None, kv_positions=None, use_rope=True,
-               norm_eps=1e-6):
+               norm_eps=1e-6, site="attn"):
     """Self- (or cross-, via kv_override) attention block body."""
     B, S, _ = x.shape
     H, Hkv = num_heads, num_kv_heads
     G = H // Hkv
 
-    q = linear(ctx, x, params["wq"], params.get("bias_q"))
+    q = linear(ctx, x, params["wq"], params.get("bias_q"), site=f"{site}.qkv")
     q = q.reshape(B, S, H, head_dim)
     if kv_override is None:
-        xk = linear(ctx, x, params["wk"], params.get("bias_k"))
-        xv = linear(ctx, x, params["wv"], params.get("bias_v"))
+        xk = linear(ctx, x, params["wk"], params.get("bias_k"),
+                    site=f"{site}.qkv")
+        xv = linear(ctx, x, params["wv"], params.get("bias_v"),
+                    site=f"{site}.qkv")
         k = xk.reshape(B, S, Hkv, head_dim)
         v = xv.reshape(B, S, Hkv, head_dim)
         pos_k = positions
@@ -261,13 +281,14 @@ def attn_apply(ctx: Ctx, params, x, positions, *, num_heads, num_kv_heads,
         out = _sdpa(qg, k, v, mask, sm_scale).reshape(B, S, H, head_dim)
 
     out = hint(out, "batch", None, "model", None)
-    y = ctx.dot(out.reshape(B, S, H * head_dim), params["wo"])
+    y = ctx.dot(out.reshape(B, S, H * head_dim), params["wo"],
+                site=f"{site}.out")
     return y, (k, v)
 
 
 def decode_attn_apply(ctx: Ctx, params, x, positions, cache_k, cache_v,
                       cache_positions, *, num_heads, num_kv_heads, head_dim,
-                      window=0, rope_theta=1e4, norm_eps=1e-6):
+                      window=0, rope_theta=1e4, norm_eps=1e-6, site="attn"):
     """One-token decode against a (possibly quantized) KV cache.
 
     x (B, 1, d); cache_k/v (B, Smax, Hkv, hd) dense view (dequantized by
@@ -278,9 +299,13 @@ def decode_attn_apply(ctx: Ctx, params, x, positions, cache_k, cache_v,
     assert S == 1
     H, Hkv = num_heads, num_kv_heads
 
-    q = linear(ctx, x, params["wq"], params.get("bias_q")).reshape(B, 1, H, head_dim)
-    k_new = linear(ctx, x, params["wk"], params.get("bias_k")).reshape(B, 1, Hkv, head_dim)
-    v_new = linear(ctx, x, params["wv"], params.get("bias_v")).reshape(B, 1, Hkv, head_dim)
+    qkv = f"{site}.qkv"
+    q = linear(ctx, x, params["wq"], params.get("bias_q"),
+               site=qkv).reshape(B, 1, H, head_dim)
+    k_new = linear(ctx, x, params["wk"], params.get("bias_k"),
+                   site=qkv).reshape(B, 1, Hkv, head_dim)
+    v_new = linear(ctx, x, params["wv"], params.get("bias_v"),
+                   site=qkv).reshape(B, 1, Hkv, head_dim)
     if "q_norm_scale" in params:
         q = rms_norm(q, params["q_norm_scale"], norm_eps)
         k_new = rms_norm(k_new, params["k_norm_scale"], norm_eps)
@@ -315,5 +340,6 @@ def decode_attn_apply(ctx: Ctx, params, x, positions, cache_k, cache_v,
     out = out + e_new.transpose(0, 3, 1, 2, 4) * v_new[:, :, :, None, :].astype(jnp.float32)
     out = out / denom.transpose(0, 3, 1, 2, 4)
     out = hint_pick(out, ("batch", None, "model", None, None), ("batch",))
-    y = ctx.dot(out.astype(cd).reshape(B, 1, H * head_dim), params["wo"])
+    y = ctx.dot(out.astype(cd).reshape(B, 1, H * head_dim), params["wo"],
+                site=f"{site}.out")
     return y, k_new, v_new

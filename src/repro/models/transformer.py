@@ -128,7 +128,7 @@ def _head(ctx: Ctx, params, cfg, x):
         w = maybe_dequantize(params["embedding"], ctx.compute_dtype)
         logits = jnp.einsum("bsd,vd->bsv", x.astype(ctx.compute_dtype), w)
     else:
-        logits = ctx.dot(x, params["lm_head"])
+        logits = ctx.dot(x, params["lm_head"], site="head")
     # prefer sequence-sharded logits (local full-vocab softmax in the loss)
     return hint_pick(logits.astype(jnp.float32),
                      ("batch", "model", None), ("batch", None, "model"))
@@ -281,23 +281,32 @@ def paged_view(cache):
     return pos, pid, off
 
 
+def _token_kv_quantizer(codes_dtype):
+    """Per-token KV quantizer matching a page pool's storage dtype."""
+    return _quantize_token_kv if codes_dtype == jnp.int8 else _fp8_token_kv
+
+
 def paged_attn(ctx, ap, x, positions, leaves, view_pos, pid, off,
                lengths_now, tables, *, use_kernel, num_heads, num_kv_heads,
-               head_dim, window=0, rope_theta=1e4, norm_eps=1e-6):
+               head_dim, window=0, rope_theta=1e4, norm_eps=1e-6,
+               site="attn"):
     """One layer of paged decode self-attention + KV commit.
 
     The single source of the paged attend/commit contract, shared by the
     LM and enc-dec decode steps. Dispatches between the gather path
     (dense chain view through decode_attn_apply — bit-identical to the
-    dense engine) and the Pallas-kernel path. Returns
+    dense engine) and the Pallas-kernel path. ``leaves`` is (k, v) for
+    bf16/f32 pages or (codes, scales, codes, scales) for int8/fp8 pages
+    (the codes dtype picks the token quantizer). Returns
     (attn_out_projection, updated_leaves).
     """
     if use_kernel:
         return _paged_attn_kernel_apply(
             ctx, ap, x, positions, leaves, pid, off, lengths_now, tables,
             num_heads=num_heads, num_kv_heads=num_kv_heads,
-            head_dim=head_dim, rope_theta=rope_theta, norm_eps=norm_eps)
-    if len(leaves) == 4:                       # int8 pages
+            head_dim=head_dim, rope_theta=rope_theta, norm_eps=norm_eps,
+            site=site)
+    if len(leaves) == 4:                       # int8 / fp8 pages
         kc, ksc, vc, vsc = leaves
         k_dense = _dense_kv(_gather_pages(kc, tables),
                             _gather_pages(ksc, tables))
@@ -310,10 +319,11 @@ def paged_attn(ctx, ap, x, positions, leaves, view_pos, pid, off,
     y, k_new, v_new = decode_attn_apply(
         ctx, ap, x, positions, k_dense, v_dense, view_pos,
         num_heads=num_heads, num_kv_heads=num_kv_heads, head_dim=head_dim,
-        window=window, rope_theta=rope_theta, norm_eps=norm_eps)
+        window=window, rope_theta=rope_theta, norm_eps=norm_eps, site=site)
     if len(leaves) == 4:
-        nkc, nks = _quantize_token_kv(k_new)
-        nvc, nvs = _quantize_token_kv(v_new)
+        qfn = _token_kv_quantizer(kc.dtype)
+        nkc, nks = qfn(k_new)
+        nvc, nvs = qfn(v_new)
         new_leaves = (_scatter_token(kc, nkc[:, 0], pid, off),
                       _scatter_token(ksc, nks[:, 0], pid, off),
                       _scatter_token(vc, nvc[:, 0], pid, off),
@@ -326,13 +336,14 @@ def paged_attn(ctx, ap, x, positions, leaves, view_pos, pid, off,
 
 def _paged_attn_kernel_apply(ctx, ap, x, positions, leaves, pid, off,
                              lengths_now, tables, *, num_heads, num_kv_heads,
-                             head_dim, rope_theta=1e4, norm_eps=1e-6):
+                             head_dim, rope_theta=1e4, norm_eps=1e-6,
+                             site="attn"):
     """Paged decode attention through the Pallas kernel (TPU path).
 
     Write-then-attend: the new token's K/V is committed to its page
-    first (quantized on int8 caches — vLLM semantics, unlike the gather
-    path which attends the fresh token at full precision), then one
-    kernel call covers the whole chain at ``lengths_now`` = len + 1
+    first (quantized on int8/fp8 caches — vLLM semantics, unlike the
+    gather path which attends the fresh token at full precision), then
+    one kernel call covers the whole chain at ``lengths_now`` = len + 1
     (idle slots pass 0 and attend nothing). ``leaves`` is this layer's
     page pool — (k, v) or (k_codes, k_scales, v_codes, v_scales).
     Returns (attn_out_projection, updated_leaves).
@@ -340,19 +351,24 @@ def _paged_attn_kernel_apply(ctx, ap, x, positions, leaves, pid, off,
     from ..kernels import ops as kops
     B = x.shape[0]
     H, Hkv, hd = num_heads, num_kv_heads, head_dim
-    q = linear(ctx, x, ap["wq"], ap.get("bias_q")).reshape(B, 1, H, hd)
-    k_new = linear(ctx, x, ap["wk"], ap.get("bias_k")).reshape(B, 1, Hkv, hd)
-    v_new = linear(ctx, x, ap["wv"], ap.get("bias_v")).reshape(B, 1, Hkv, hd)
+    qkv = f"{site}.qkv"
+    q = linear(ctx, x, ap["wq"], ap.get("bias_q"),
+               site=qkv).reshape(B, 1, H, hd)
+    k_new = linear(ctx, x, ap["wk"], ap.get("bias_k"),
+                   site=qkv).reshape(B, 1, Hkv, hd)
+    v_new = linear(ctx, x, ap["wv"], ap.get("bias_v"),
+                   site=qkv).reshape(B, 1, Hkv, hd)
     if "q_norm_scale" in ap:
         q = rms_norm(q, ap["q_norm_scale"], norm_eps)
         k_new = rms_norm(k_new, ap["k_norm_scale"], norm_eps)
     q = rope(q, positions, rope_theta)
     k_new = rope(k_new, positions, rope_theta)
 
-    if len(leaves) == 4:                       # int8 pages
+    if len(leaves) == 4:                       # int8 / fp8 pages
         kc, ksc, vc, vsc = leaves
-        nkc, nks = _quantize_token_kv(k_new)
-        nvc, nvs = _quantize_token_kv(v_new)
+        qfn = _token_kv_quantizer(kc.dtype)
+        nkc, nks = qfn(k_new)
+        nvc, nvs = qfn(v_new)
         kc = _scatter_token(kc, nkc[:, 0], pid, off)
         ksc = _scatter_token(ksc, nks[:, 0], pid, off)
         vc = _scatter_token(vc, nvc[:, 0], pid, off)
@@ -368,7 +384,8 @@ def _paged_attn_kernel_apply(ctx, ap, x, positions, leaves, pid, off,
         out = kops.paged_decode_attention(
             q[:, 0], kp, vp, tables, lengths_now, out_dtype=jnp.float32)
         new_leaves = (kp, vp)
-    y = ctx.dot(out.astype(x.dtype).reshape(B, 1, H * hd), ap["wo"])
+    y = ctx.dot(out.astype(x.dtype).reshape(B, 1, H * hd), ap["wo"],
+                site=f"{site}.out")
     return y, new_leaves
 
 
@@ -508,9 +525,13 @@ def lm_paged_decode_step(ctx: Ctx, params, cfg, tokens, cache):
     lengths_now = jnp.where(active > 0, cache["len"] + 1, 0)
 
     quant = "k_codes" in cache
+    fp8 = "k_scales" in cache and not quant
     if quant:
         xs = (params["layers"], windows, cache["k_codes"], cache["k_scales"],
               cache["v_codes"], cache["v_scales"])
+    elif fp8:
+        xs = (params["layers"], windows, cache["k"], cache["k_scales"],
+              cache["v"], cache["v_scales"])
     else:
         xs = (params["layers"], windows, cache["k"], cache["v"])
 
@@ -541,6 +562,9 @@ def lm_paged_decode_step(ctx: Ctx, params, cfg, tokens, cache):
     if quant:
         (new_cache["k_codes"], new_cache["k_scales"],
          new_cache["v_codes"], new_cache["v_scales"]) = new_kv
+    elif fp8:
+        (new_cache["k"], new_cache["k_scales"],
+         new_cache["v"], new_cache["v_scales"]) = new_kv
     else:
         new_cache["k"], new_cache["v"] = new_kv
     new_cache["len"] = jnp.where(active > 0, cache["len"] + 1, cache["len"])

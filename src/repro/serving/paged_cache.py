@@ -6,8 +6,9 @@ lengths are shorter. This module replaces that with vLLM-style paging:
 
   * the KV cache is a shared pool of ``num_pages`` fixed-size pages
     (``page_size`` tokens each), stored layer-stacked as
-    ``(L, P, ps, Hkv, hd)`` in bf16 or int8 codes + f32 scales (storage
-    dtypes come from ``core.formats.FORMATS``);
+    ``(L, P, ps, Hkv, hd)`` in bf16, int8 codes + f32 scales, or fp8
+    (e4m3) codes + f32 scales (storage dtypes come from
+    ``core.formats.FORMATS``);
   * each in-flight request owns a *chain* of pages handed out by the
     host-side ``PageAllocator`` free list; token ``t`` of a request
     lives at ``(chain[t // ps], t % ps)``;
@@ -147,9 +148,20 @@ def init_paged_kv(
             "v_codes": jnp.zeros((L, P, ps, Hkv, hd), code_dt),
             "v_scales": jnp.zeros((L, P, ps, Hkv), jnp.float32),
         }
+    if kv_dtype == "fp8":
+        # e4m3 codes + per-(token, head) scales, int8-pool layout with
+        # float8 storage; keys "k"/"v" so the fp8 path is detected as
+        # "k_scales present, k_codes absent" (matches the dense caches)
+        code_dt = get_format("fp8").storage_dtype
+        return {
+            "k": jnp.zeros((L, P, ps, Hkv, hd), code_dt),
+            "k_scales": jnp.zeros((L, P, ps, Hkv), jnp.float32),
+            "v": jnp.zeros((L, P, ps, Hkv, hd), code_dt),
+            "v_scales": jnp.zeros((L, P, ps, Hkv), jnp.float32),
+        }
     if kv_dtype not in ("bf16", "f32"):
         raise ValueError(
-            f"paged KV storage supports bf16 | f32 | int8, got {kv_dtype!r}"
+            f"paged KV storage supports bf16|f32|int8|fp8, got {kv_dtype!r}"
         )
     dt = get_format(kv_dtype).storage_dtype
     return {

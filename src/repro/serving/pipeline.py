@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config, reduce_config
-from ..core import PRESETS, calibrate_act_scale, quantize_tree, tree_nbytes
+from ..core import (QuantSpec, calibrate_act_scales, get_format,
+                    quantize_tree, resolve_spec, tree_nbytes)
 from ..data import LANG_CODES
 from ..models import Ctx, build_model
 from .engine import ServeEngine
@@ -63,8 +64,15 @@ class TranslationPipeline:
     params: Any
     engine: ServeEngine
     ctx: Ctx
-    policy: str
+    policy: str                   # the spec as the caller named it
     fp_bytes: int                 # parameter bytes before quantization
+    spec: QuantSpec               # the fully-resolved quantization spec
+
+    @property
+    def spec_str(self) -> str:
+        """Canonical grammar spelling of the deployed spec (what reports
+        record next to the requested alias)."""
+        return str(self.spec)
 
     @property
     def quantized_bytes(self) -> int:
@@ -116,7 +124,8 @@ class TranslationPipeline:
         return self.generate(prompts, params)
 
 
-def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
+def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
+           slots: int = 4,
            max_len: int = 64, smoke: bool = False, params: Any = None,
            ctx: Optional[Ctx] = None, kv_dtype: Optional[str] = None,
            init_seed: int = 0, paged: bool = False, page_size: int = 8,
@@ -129,8 +138,10 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
     """Build a ready-to-serve TranslationPipeline in one call.
 
     arch_or_cfg: registry name (see configs.REGISTRY) or a ModelConfig.
-    policy:      weight-precision preset (core.PRESETS); the KV-cache
-                 dtype follows the preset unless ``kv_dtype`` overrides.
+    policy:      quantization spec — a QuantSpec, a registered alias
+                 ("int4", "w8a8", ...), or a grammar string ("w4a8kv8",
+                 "wfp8e4m3afp8kvfp8"; see core.spec). The KV-cache dtype
+                 follows the spec unless ``kv_dtype`` overrides.
     smoke:       reduce the config to CPU-testable size and compute in
                  f32 (skipped when ``ctx`` is given).
     params:      pre-trained parameters to deploy (still quantized per
@@ -154,18 +165,18 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
                  weights), paged attention "gather" | "kernel" (Pallas
                  block-table walk; paged engines only).
     calib_batches: sample model batches for static activation
-                 calibration (paper §III w8a8 arm, ~1000 queries per
-                 language at paper scale). When the policy quantizes
-                 activations (act="int8", i.e. the w8a8 preset), the
-                 batches run through core.calibration.calibrate_act_scale
-                 against the already-quantized weights and the resulting
-                 single global static scale replaces dynamic per-token
-                 quantization in the int8 qlinear path (per-matmul scale
-                 trees are a ROADMAP follow-up). Ignored for policies
-                 that keep activations in bf16.
+                 calibration (paper §III, ~1000 queries per language at
+                 paper scale). When the spec quantizes activations
+                 (a8 / afp8), the batches run through
+                 core.calibration.calibrate_act_scales against the
+                 already-quantized weights and the resulting *per-site*
+                 static scales replace dynamic per-token quantization in
+                 the qlinear act path. An act-quantizing spec deployed
+                 WITHOUT calibration batches warns and stays dynamic
+                 (never silently bf16). Ignored for specs that keep
+                 activations in bf16.
     """
-    if policy not in PRESETS:
-        raise KeyError(f"unknown policy {policy!r}; have {sorted(PRESETS)}")
+    spec = resolve_spec(policy)
     cfg = get_config(arch_or_cfg) if isinstance(arch_or_cfg, str) \
         else arch_or_cfg
     if smoke:
@@ -173,11 +184,11 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
     model = build_model(cfg)
     if ctx is None:
         ctx = Ctx(compute_dtype=jnp.float32 if smoke else jnp.bfloat16)
-    # the policy owns deployment precision: its activation format wins
+    # the spec owns deployment precision: its activation format wins
     # even over an explicit ctx, else a caller-supplied ctx would
     # silently downgrade w8a8 to bf16 activations (compute dtype and
     # kernel routes remain the caller's)
-    ctx = dataclasses.replace(ctx, act_fmt=PRESETS[policy].act)
+    ctx = dataclasses.replace(ctx, act_fmt=spec.act)
     impls = {}
     if matmul_impl is not None:
         if matmul_impl not in _MATMUL_IMPLS:
@@ -194,32 +205,36 @@ def deploy(arch_or_cfg, policy: str = "int4", *, slots: int = 4,
     if params is None:
         params = model.init(jax.random.PRNGKey(init_seed))
     fp_bytes = tree_nbytes(params)
-    if policy != "f32":
-        params = quantize_tree(params, PRESETS[policy])
-    if calib_batches is not None and PRESETS[policy].act == "int8":
-        # static w8a8 deployment: observe the quantized model's matmul
-        # activations eagerly, thread one calibrated scale into the Ctx
-        ctx = dataclasses.replace(
-            ctx, act_scale=calibrate_act_scale(model, params, ctx,
-                                               calib_batches))
-    kv = kv_dtype or PRESETS[policy].kv_cache
-    if paged and kv == "fp8":
-        if kv_dtype is not None:     # explicitly requested: don't remap
-            raise ValueError(
-                "paged KV storage supports bf16 | f32 | int8; fp8 pages "
-                "are not implemented (see ROADMAP) — drop kv_dtype='fp8' "
-                "or deploy dense")
-        # preset fallback: nearest 8-bit format. Loud, because the
-        # dense==paged token-identity contract does not hold across a
-        # KV-format change.
-        warnings.warn(
-            f"policy {policy!r} stores KV as fp8, which paged caches do "
-            "not support yet; using int8 pages (token streams may differ "
-            "from a dense fp8 run)", stacklevel=2)
-        kv = "int8"
+    if spec.weights != "f32":
+        params = quantize_tree(params, spec.policy())
+    if spec.quantizes_act:
+        scales = {}
+        if calib_batches is not None:
+            # static PTQ deployment: observe the quantized model's
+            # matmul activations eagerly, one absmax per site, and
+            # thread the per-site scale registry into the Ctx
+            scales = calibrate_act_scales(
+                model, params, ctx, calib_batches,
+                max_code=get_format(spec.act).max_code)
+        if scales:
+            ctx = dataclasses.replace(
+                ctx, act_scales=tuple(sorted(scales.items())))
+        else:
+            # regression guard for the silent-bf16-activations bug
+            # class: the act path still *quantizes* (dynamically), but
+            # an uncalibrated static deployment should be loud
+            warnings.warn(
+                f"spec {spec} quantizes activations but no calibration "
+                "batches were provided (or the iterable was empty); "
+                "falling back to dynamic per-token activation "
+                "quantization — pass deploy(calib_batches=...) for the "
+                "paper's calibrated static-scale deployment",
+                stacklevel=2)
+    kv = kv_dtype or spec.kv
     engine = ServeEngine(model, params, slots=slots, max_len=max_len,
                          kv_dtype=kv, ctx=ctx, paged=paged,
                          page_size=page_size, num_pages=num_pages,
                          max_src_len=max_src_len, horizon=horizon)
-    return TranslationPipeline(cfg, model, params, engine, ctx, policy,
-                               fp_bytes)
+    name = policy if isinstance(policy, str) else str(spec)
+    return TranslationPipeline(cfg, model, params, engine, ctx, name,
+                               fp_bytes, spec)

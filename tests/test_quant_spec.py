@@ -1,0 +1,302 @@
+"""QuantSpec grammar + resolver + per-site calibration + fp8 arm.
+
+The PR 5 acceptance surface:
+  * the grammar round-trips (parse -> str -> parse is identity);
+  * every legacy preset alias resolves to a policy that quantizes a
+    tree byte-for-byte identically to the hand-written PR 4 table, and
+    an alias and its grammar spelling decode token-for-token equal;
+  * spec resolution errors name the bad spec and the valid choices;
+  * per-site calibration is deterministic, merges max-associatively,
+    and an a8 spec with zero calibration batches falls back to dynamic
+    quantization with a warning (the silent-bf16-activations guard);
+  * the fp8 end-to-end arm serves through fp8 page pools and lands in
+    the sweep with a resolved spec string.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, reduce_config
+from repro.core import (ALIASES, PRESETS, QuantSpec, QTensor, quantize_tree,
+                        resolve_spec, tree_nbytes)
+from repro.core.calibration import ActSiteStats
+from repro.core.policy import PrecisionPolicy
+from repro.data import SyntheticTranslation
+from repro.eval import quant_sweep
+from repro.models import Ctx, build_model
+from repro.serving import SamplingParams, deploy
+
+# the PR 4 preset table, hand-written — the compatibility contract
+_LEGACY = {
+    "f32": PrecisionPolicy("f32", weights="f32", embed="f32",
+                           compute_dtype=jnp.float32),
+    "bf16": PrecisionPolicy("bf16"),
+    "int8": PrecisionPolicy("int8", weights="int8", embed="int8"),
+    "w8a8": PrecisionPolicy("w8a8", weights="int8", embed="int8", act="int8",
+                            kv_cache="int8", block_size=2**20),
+    "fp8": PrecisionPolicy("fp8", weights="fp8", embed="fp8", kv_cache="fp8"),
+    "int4": PrecisionPolicy("int4", weights="int4", embed="int8",
+                            kv_cache="int8"),
+    "fp4": PrecisionPolicy("fp4", weights="fp4", embed="int8",
+                           kv_cache="int8"),
+    "nf4": PrecisionPolicy("nf4", weights="nf4", embed="int8",
+                           kv_cache="int8", double_quant=True),
+}
+
+GRAMMAR_CASES = ["w4a8kv8", "w8a8kv8g32", "wfp4a8", "wfp8e4m3afp8kvfp8",
+                 "w4kv8", "w16", "wf32", "w8", "wnf4kv8dq", "wfp8kvfp8",
+                 "w8a8kv8", "w4a8kv8e16g32", "wfp8e5m2kv8"]
+
+
+def _smoke_params():
+    rc = reduce_config(REGISTRY["nllb600m"])
+    return rc, build_model(rc).init(jax.random.PRNGKey(0))
+
+
+def _tree():
+    key = jax.random.PRNGKey(3)
+    return {"layers": {"attn": {"wq": jax.random.normal(key, (128, 64))},
+                       "norm1_scale": jnp.ones((64,))},
+            "embedding": jax.random.normal(key, (96, 64))}
+
+
+# -- grammar ----------------------------------------------------------------
+
+@pytest.mark.parametrize("text", GRAMMAR_CASES)
+def test_grammar_round_trips(text):
+    spec = QuantSpec.parse(text)
+    assert QuantSpec.parse(str(spec)) == spec
+    # acceptance criterion, literally:
+    assert QuantSpec.parse(text) == QuantSpec.parse(str(QuantSpec.parse(text)))
+
+
+def test_grammar_fields():
+    s = QuantSpec.parse("w4a8kv8")
+    assert (s.weights, s.act, s.kv, s.embed) == ("int4", "int8", "int8",
+                                                 "int8")
+    s = QuantSpec.parse("wfp8e4m3afp8kvfp8")
+    assert (s.weights, s.act, s.kv) == ("fp8", "fp8", "fp8")
+    assert QuantSpec.parse("w8a8kv8g32").group == 32
+    assert QuantSpec.parse("w8a8").group == 0          # per-channel default
+    assert QuantSpec.parse("w8").group == 64
+    assert QuantSpec.parse("wnf4kv8dq").double_quant
+
+
+def test_bad_specs_raise_with_choices():
+    for bad in ("int9", "w4a7", "kv8", "w4x", ""):
+        with pytest.raises(ValueError) as e:
+            resolve_spec(bad)
+        msg = str(e.value)
+        assert repr(bad) in msg           # names the bad spec
+        assert "int4" in msg              # lists aliases/formats
+    with pytest.raises(TypeError):
+        resolve_spec(42)
+
+
+def test_act_quant_requires_quantized_weights():
+    """w16a8 / wf32a8 would deploy a zero-QTensor tree whose matmuls
+    never quantize activations — the spec must refuse, not silently
+    mean bf16."""
+    for bad in ("w16a8", "wf32a8", "w16afp8"):
+        with pytest.raises(ValueError, match="passthrough"):
+            resolve_spec(bad)
+    with pytest.raises(ValueError, match="passthrough"):
+        QuantSpec(weights="bf16", act="int8")
+
+
+def test_bytes_per_param_from_spec():
+    bpp = resolve_spec("w4a8kv8").bytes_per_param
+    assert bpp == {"weights": 0.5, "embed": 1.0, "kv": 1.0}
+    assert resolve_spec("bf16").bytes_per_param["weights"] == 2.0
+
+
+# -- legacy preset equivalence ----------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(_LEGACY))
+def test_alias_policy_matches_legacy_table(name):
+    assert PRESETS[name] == _LEGACY[name]
+    assert resolve_spec(name).policy(name=name) == _LEGACY[name]
+    # the resolved grammar string re-resolves to the same deployment
+    # (name differs; every quantization-relevant field is equal)
+    rt = resolve_spec(str(resolve_spec(name))).policy()
+    import dataclasses
+    for f in dataclasses.fields(PrecisionPolicy):
+        if f.name != "name":
+            assert getattr(rt, f.name) == getattr(_LEGACY[name], f.name), \
+                (name, f.name)
+
+
+@pytest.mark.parametrize("name", ["int4", "w8a8", "nf4", "fp8"])
+def test_alias_tree_bytes_identical(name):
+    params = _tree()
+    qa = quantize_tree(params, _LEGACY[name])
+    qb = quantize_tree(params, resolve_spec(name).policy())
+    assert tree_nbytes(qa) == tree_nbytes(qb)
+    wa, wb = qa["layers"]["attn"]["wq"], qb["layers"]["attn"]["wq"]
+    assert isinstance(wa, QTensor) and wa.fmt == wb.fmt
+    np.testing.assert_array_equal(np.asarray(wa.data), np.asarray(wb.data))
+
+
+def test_alias_and_grammar_decode_identically():
+    """deploy("int4") and deploy("w4kv8") are the same deployment:
+    token-for-token equal greedy decodes (the alias-compat acceptance
+    criterion observed end to end)."""
+    rc, params = _smoke_params()
+    ds = SyntheticTranslation(rc.vocab_size, rc.enc_len, seed=0)
+    b = ds.sample(2)
+    streams = {}
+    for spec in ("int4", "w4kv8"):
+        pipe = deploy(rc, spec, params=params, slots=2, max_len=16,
+                      ctx=Ctx(compute_dtype=jnp.float32))
+        outs = pipe.translate(jnp.asarray(b["src_tokens"]), "eng",
+                              SamplingParams(max_new_tokens=6))
+        streams[spec] = [o.token_ids for o in outs]
+        assert pipe.quantized_bytes == tree_nbytes(
+            quantize_tree(params, _LEGACY["int4"]))
+    assert streams["int4"] == streams["w4kv8"]
+
+
+# -- per-site calibration ---------------------------------------------------
+
+def _calib_batches(rc, n=2, batch=4, seed=0):
+    ds = SyntheticTranslation(rc.vocab_size, rc.enc_len, seed=seed)
+    return ({k: jnp.asarray(v) for k, v in ds.sample(batch).items()
+             if not isinstance(v, str)} for _ in range(n))
+
+
+def test_site_stats_merge_is_max_associative():
+    obs = [("a", 1.0), ("b", 3.0), ("a", 2.0), ("c", 0.5), ("b", 1.0)]
+    regs = []
+    for chunk in (obs[:2], obs[2:4], obs[4:]):
+        r = ActSiteStats()
+        for site, v in chunk:
+            r.update(site, v)
+        regs.append(r)
+    a, b, c = regs
+    left = a.merge(b).merge(c)
+    right = a.merge(b.merge(c))
+    assert left.absmax == right.absmax == {"a": 2.0, "b": 3.0, "c": 0.5}
+    assert b.merge(a).absmax == a.merge(b).absmax      # commutative too
+    assert left.scales(127.0)["b"] == pytest.approx(3.0 / 127.0)
+
+
+def test_calibration_deterministic_and_per_site():
+    rc, params = _smoke_params()
+
+    def scales_of():
+        pipe = deploy(rc, "w8a8", params=params, slots=2, max_len=16,
+                      ctx=Ctx(compute_dtype=jnp.float32),
+                      calib_batches=_calib_batches(rc))
+        return dict(pipe.ctx.act_scales)
+
+    s1, s2 = scales_of(), scales_of()
+    assert s1 == s2                                    # deterministic
+    # distinct matmul sites observed, with genuinely different scales
+    assert {"enc.attn.qkv", "dec.ffn.in"} <= set(s1), sorted(s1)
+    assert len(set(s1.values())) >= 2
+    assert all(v > 0 for v in s1.values())
+
+
+def test_a8_without_calib_warns_and_stays_dynamic():
+    """Regression for the silent-bf16-activations bug class: an a8 spec
+    with zero calibration batches must fall back to *dynamic* act
+    quantization — loudly — and still serve."""
+    rc, params = _smoke_params()
+    for calib in (None, iter(())):                    # absent and empty
+        with pytest.warns(UserWarning, match="dynamic per-token"):
+            pipe = deploy(rc, "w8a8", params=params, slots=1, max_len=16,
+                          ctx=Ctx(compute_dtype=jnp.float32),
+                          calib_batches=calib)
+        assert pipe.ctx.act_scales is None
+        assert pipe.ctx.act_fmt == "int8"             # still quantizing
+    ds = SyntheticTranslation(rc.vocab_size, rc.enc_len, seed=0)
+    outs = pipe.translate(jnp.asarray(ds.sample(1)["src_tokens"]), "eng",
+                          SamplingParams(max_new_tokens=4))
+    assert outs[0].token_ids
+
+
+def test_bf16_spec_never_warns():
+    rc, params = _smoke_params()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        deploy(rc, "int8", params=params, slots=1, max_len=16,
+               ctx=Ctx(compute_dtype=jnp.float32))
+
+
+# -- fp8 end to end ---------------------------------------------------------
+
+def test_fp8_arm_serves_through_paged_fp8_pools():
+    rc, params = _smoke_params()
+    pipe = deploy(rc, "wfp8e4m3afp8kvfp8", params=params, slots=2,
+                  max_len=16, paged=True, page_size=4,
+                  ctx=Ctx(compute_dtype=jnp.float32),
+                  calib_batches=_calib_batches(rc))
+    cache = pipe.engine.cache
+    assert cache["k"].dtype == jnp.float8_e4m3fn       # real fp8 pages
+    assert cache["cross_k"].dtype == jnp.float8_e4m3fn
+    assert "k_scales" in cache and "k_codes" not in cache
+    assert dict(pipe.ctx.act_scales)                   # calibrated afp8
+    ds = SyntheticTranslation(rc.vocab_size, rc.enc_len, seed=0)
+    outs = pipe.translate(jnp.asarray(ds.sample(3)["src_tokens"]), "eng",
+                          SamplingParams(max_new_tokens=6))
+    assert len(outs) == 3 and all(o.token_ids for o in outs)
+    assert pipe.engine.kv_cache_bytes > 0
+
+
+def test_fp8_dense_paged_same_tokens():
+    """fp8 KV: the paged engine reproduces the dense engine's streams
+    (the PR 2 equivalence contract extended to fp8 pages)."""
+    rc, params = _smoke_params()
+    ds = SyntheticTranslation(rc.vocab_size, rc.enc_len, seed=0)
+    b = ds.sample(2)
+    streams = {}
+    for paged in (False, True):
+        pipe = deploy(rc, "fp8e2e", params=params, slots=2, max_len=16,
+                      paged=paged, page_size=4,
+                      ctx=Ctx(compute_dtype=jnp.float32))
+        outs = pipe.translate(jnp.asarray(b["src_tokens"]), "ita",
+                              SamplingParams(max_new_tokens=6))
+        streams[paged] = [o.token_ids for o in outs]
+    assert streams[False] == streams[True]
+
+
+def test_sweep_reports_resolved_spec_strings():
+    rc, params = _smoke_params()
+    rows = quant_sweep(
+        rc, ["bf16", "wfp8e4m3afp8kvfp8"], params=params,
+        pair_list=[("hin", "eng")], languages=["hin", "eng"], n_sent=2,
+        deploy_kwargs={"slots": 2, "max_len": 16, "paged": True,
+                       "page_size": 4,
+                       "ctx": Ctx(compute_dtype=jnp.float32)},
+        log=lambda *_: None)
+    by_fmt = {r.fmt: r for r in rows}
+    fp8 = by_fmt["wfp8e4m3afp8kvfp8"]
+    assert fp8.spec == "wfp8a8kvfp8" or fp8.spec == str(
+        resolve_spec("wfp8e4m3afp8kvfp8"))
+    assert by_fmt["bf16"].spec == "w16"
+    assert fp8.bleu_delta is not None                  # anchored delta
+    assert fp8.model_bytes < by_fmt["bf16"].model_bytes
+    assert fp8.mean_tok_s > 0
+    d = fp8.as_row()
+    assert d["spec"] == fp8.spec                       # lands in reports
+
+
+def test_report_v1_shim_upgrades_rows():
+    from repro.eval import report
+    v1 = report.dump({"schema": 1, "kind": "repro.eval", "arch": "x",
+                      "git_rev": None, "config": {},
+                      "rows": [{"fmt": "int4", "mean_bleu": 1.0},
+                               {"fmt": "mystery", "mean_bleu": 0.5}]})
+    r = report.load(v1)
+    assert r["schema"] == report.SCHEMA_VERSION
+    assert r["rows"][0]["spec"] == "w4kv8"             # alias resolved
+    assert r["rows"][1]["spec"] == "mystery"           # graceful fallback
+    assert report.load(report.dump(r)) == r            # still round-trips
+
+
+def test_aliases_cover_presets():
+    assert set(ALIASES) == set(PRESETS)
