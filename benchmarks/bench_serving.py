@@ -25,16 +25,27 @@ path silently fell back to per-token syncing (``decode_syncs`` above
 through the Pallas qmm kernel and paged attention through the Pallas
 block-table kernel (on CPU set REPRO_PALLAS_INTERPRET=1).
 
+``--spec-decode SPEC`` additionally measures each policy with a
+speculative draft arm (the same checkpoint quantized at SPEC drafts
+``LOOKAHEAD`` tokens per verify round; greedy output is unchanged).
+Spec rows report acceptance rate, mean accepted tokens per verify
+round, and verify calls per generated token; two tripwires red the run
+if the draft arm is dead weight — acceptance must be > 0 and the spec
+arm must need FEWER target-model forwards than the target-only run of
+the same burst (``verify_calls`` below the baseline's decode steps;
+run at --horizon 1 for an exact dispatch-level comparison).
+
 Rows (CSV on stdout; ``--json PATH`` additionally writes the artifact
 consumed by CI's bench-smoke job):
   serve_{policy}_{dense|paged}   burst throughput + occupancy + kv MB
   serve_{policy}_paged_rate{r}   continuous-arrival throughput
+  serve_{policy}_{mode}_specdec  speculative-decoding arm (--spec-decode)
 Every serving row also records per-request latency percentiles
 (p50/p95 TTFT and per-output-token time, from RequestStats via the
 latency_percentiles helper the eval suite shares).
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json P]
-        [--horizon K] [--impl xla|pallas]
+        [--horizon K] [--impl xla|pallas] [--spec-decode w4a8kv8]
 """
 
 from __future__ import annotations
@@ -59,6 +70,7 @@ GEN = 8
 SLOTS = 4
 MAX_LEN = 32
 PAGE = 4
+LOOKAHEAD = 4       # draft tokens per verify round (--spec-decode arm)
 
 
 def _requests(cfg, n):
@@ -97,14 +109,17 @@ def serve_rate(eng, reqs, gen, rate):
     return sum(o.num_generated for o in outs), dt, eng.occupancy, outs
 
 
-def _deploy(pol, paged, slots, smoke, horizon=1, impl="xla"):
+def _deploy(pol, paged, slots, smoke, horizon=1, impl="xla", draft=None):
     # paged engine: same page pool as the dense engine's KV capacity,
     # spread over twice the slots — memory buys concurrency, not padding
     impls = impl_routes(impl)
+    if draft is not None:
+        impls.update(draft_spec=draft, draft_lookahead=LOOKAHEAD)
     if paged:
+        pages = slots * pages_needed(MAX_LEN, PAGE)
         return deploy("nllb600m", pol, slots=2 * slots, max_len=MAX_LEN,
                       smoke=smoke, paged=True, page_size=PAGE,
-                      num_pages=slots * pages_needed(MAX_LEN, PAGE),
+                      num_pages=pages * (2 if draft else 1),
                       horizon=horizon, **impls)
     return deploy("nllb600m", pol, slots=slots, max_len=MAX_LEN, smoke=smoke,
                   horizon=horizon, **impls)
@@ -121,11 +136,14 @@ def _sync_bound(toks: int, horizon: int, extra: int) -> int:
 
 def run(smoke: bool = False, json_path: str | None = None,
         horizon: int = 1, impl: str = "xla",
-        policies: list[str] | None = None):
+        policies: list[str] | None = None,
+        spec_decode: str | None = None):
     if policies is None:
         policies = list(POLICIES[:2] if smoke else POLICIES)
     for pol in policies:                 # fail on typos before any build
         resolve_spec(pol)
+    if spec_decode is not None:
+        resolve_spec(spec_decode)
     n_req = REQUESTS
     rows = []
     tripped = []
@@ -147,6 +165,7 @@ def run(smoke: bool = False, json_path: str | None = None,
 
     for pol in policies:
         occ = {}
+        base_steps = {}
         for mode in ("dense", "paged"):
             pipe = _deploy(pol, mode == "paged", SLOTS, smoke=True,
                            horizon=horizon, impl=impl)
@@ -155,6 +174,7 @@ def run(smoke: bool = False, json_path: str | None = None,
             pipe.engine.reset_metrics()                  # measured run only
             toks, dt, _, outs = serve_burst(pipe.engine, reqs, GEN)
             occ[mode] = pipe.engine.occupancy
+            base_steps[mode] = pipe.engine.decode_steps
             check_syncs(f"serve_{pol}_{mode}", pipe.engine, toks,
                         pipe.engine.n_slots)
             emit(f"serve_{pol}_{mode}", dt * 1e6 / max(toks, 1), {
@@ -170,6 +190,45 @@ def run(smoke: bool = False, json_path: str | None = None,
                 "tokens_per_sync": round(pipe.engine.mean_tokens_per_sync, 2),
                 **latency_percentiles(outs),
             })
+            if spec_decode is None:
+                continue
+            # speculative arm: same checkpoint, same burst — the draft
+            # quantized at --spec-decode proposes LOOKAHEAD tokens per
+            # round, the target verifies them in one batched forward
+            pipe = _deploy(pol, mode == "paged", SLOTS, smoke=True,
+                           horizon=horizon, impl=impl, draft=spec_decode)
+            reqs = _requests(pipe.cfg, n_req)
+            serve_burst(pipe.engine, reqs, GEN)          # warmup: compiles
+            pipe.engine.reset_metrics()                  # measured run only
+            toks, dt, _, outs = serve_burst(pipe.engine, reqs, GEN)
+            eng = pipe.engine
+            name = f"serve_{pol}_{mode}_specdec"
+            emit(name, dt * 1e6 / max(toks, 1), {
+                "tok_s": round(toks / dt, 1),
+                "requests": n_req,
+                "draft_spec": pipe.draft_spec_str,
+                "lookahead": LOOKAHEAD,
+                "acceptance_rate": round(eng.acceptance_rate, 4),
+                "mean_accepted_per_verify":
+                    round(eng.mean_accepted_per_verify, 3),
+                "verify_calls": eng.verify_calls,
+                "verify_per_token": round(eng.verify_calls / max(toks, 1), 4),
+                "target_fw_baseline": base_steps[mode],
+                "drafted": eng.drafted_tokens,
+                "accepted": eng.accepted_tokens,
+                **latency_percentiles(outs),
+            })
+            # tripwires: a draft arm that never agrees with the target,
+            # or that costs MORE target forwards than decoding without
+            # it, is dead weight — red the run (after the JSON artifact)
+            if not eng.acceptance_rate > 0:
+                tripped.append(f"{name}: acceptance_rate "
+                               f"{eng.acceptance_rate:.4f} is not > 0")
+            if eng.verify_calls >= base_steps[mode]:
+                tripped.append(
+                    f"{name}: verify_calls {eng.verify_calls} >= "
+                    f"target-only decode steps {base_steps[mode]} — "
+                    "speculation saved no target forwards")
         # acceptance tripwire: continuous paged admission must keep the
         # engine at least as busy as the dense baseline — a violation
         # reds the bench-smoke CI job (raised after the JSON artifact is
@@ -202,7 +261,8 @@ def run(smoke: bool = False, json_path: str | None = None,
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"benchmark": "bench_serving", "smoke": smoke,
-                       "horizon": horizon, "impl": impl, "rows": rows},
+                       "horizon": horizon, "impl": impl,
+                       "spec_decode": spec_decode, "rows": rows},
                       f, indent=2)
     if tripped:
         raise RuntimeError("serving tripwire: " + "; ".join(tripped))
@@ -225,11 +285,16 @@ def main():
                     help="comma list of quantization specs (aliases or "
                          "grammar strings, e.g. bf16,w4a8kv8); default: "
                          "the standard preset sweep")
+    ap.add_argument("--spec-decode", default=None, metavar="SPEC",
+                    help="also measure each policy with a speculative "
+                         "draft arm quantized at SPEC (e.g. w4a8kv8); "
+                         "adds serve_*_specdec rows with acceptance "
+                         "rate and verify-calls-per-token")
     args = ap.parse_args()
     pols = ([p.strip() for p in args.policies.split(",") if p.strip()]
             if args.policies else None)
     run(smoke=args.smoke, json_path=args.json, horizon=args.horizon,
-        impl=args.impl, policies=pols)
+        impl=args.impl, policies=pols, spec_decode=args.spec_decode)
 
 
 if __name__ == "__main__":

@@ -24,9 +24,11 @@ __all__ = ["SCHEMA_VERSION", "make_report", "dump", "load", "save",
            "render_markdown"]
 
 # v2: every sweep row records the fully-resolved quantization spec
-# string ("spec") next to the requested alias ("fmt"); v1 reports are
-# upgraded on load (the alias is re-resolved when possible).
-SCHEMA_VERSION = 2
+# string ("spec") next to the requested alias ("fmt").
+# v3: every per-pair entry carries an "acceptance_rate" column
+# (speculative-decode draft acceptance; None for target-only runs).
+# Older reports are upgraded on load, one version at a time.
+SCHEMA_VERSION = 3
 
 
 def _git_rev() -> Optional[str]:
@@ -55,7 +57,7 @@ def _jsonify(x: Any) -> Any:
 
 def make_report(*, arch: str, rows: Sequence[Dict[str, Any]],
                 config: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-    """Assemble a schema-v1 report dict (already JSON-clean).
+    """Assemble a current-schema report dict (already JSON-clean).
 
     ``rows`` is one dict per precision format (FormatRow.as_row()), each
     carrying its nested per-pair grid. ``config`` records how the run
@@ -90,16 +92,34 @@ def _upgrade_v1(report: Dict[str, Any]) -> Dict[str, Any]:
             except (ValueError, TypeError):
                 row["spec"] = row.get("fmt")
         rows.append(row)
-    return {**report, "schema": SCHEMA_VERSION, "rows": rows}
+    return {**report, "schema": 2, "rows": rows}
+
+
+def _upgrade_v2(report: Dict[str, Any]) -> Dict[str, Any]:
+    """Schema 2 -> 3: per-pair entries gain the speculative-decode
+    "acceptance_rate" column — None, the exact value a target-only run
+    records, since pre-v3 runs had no draft arm."""
+    rows = []
+    for row in report.get("rows", []):
+        row = dict(row)
+        if row.get("pair_scores"):
+            row["pair_scores"] = [
+                {"acceptance_rate": None, **p} for p in row["pair_scores"]]
+        rows.append(row)
+    return {**report, "schema": 3, "rows": rows}
+
+
+_UPGRADES = {1: _upgrade_v1, 2: _upgrade_v2}
 
 
 def load(text: str) -> Dict[str, Any]:
-    """Parse a report; v1 artifacts are upgraded to the current schema
-    (v2 reports round-trip unchanged: load(dump(x)) == x)."""
+    """Parse a report; older artifacts are upgraded one schema version
+    at a time (current-schema reports round-trip unchanged:
+    load(dump(x)) == x)."""
     report = json.loads(text)
-    if isinstance(report, dict) and report.get("kind") == "repro.eval" \
-            and report.get("schema") == 1:
-        report = _upgrade_v1(report)
+    if isinstance(report, dict) and report.get("kind") == "repro.eval":
+        while report.get("schema") in _UPGRADES:
+            report = _UPGRADES[report["schema"]](report)
     return report
 
 

@@ -14,7 +14,12 @@ Per pair the suite reports corpus BLEU / chrF / token accuracy / exact
 match (streamed through `metrics.CorpusStat`) plus serving figures from
 `RequestStats`: tokens/s and the shared p50/p95 TTFT / per-output-token
 percentiles (`serving.latency_percentiles` — same columns as
-benchmarks/bench_serving.py).
+benchmarks/bench_serving.py). Speculative deployments
+(`deploy(..., draft_spec=...)`) additionally get a per-pair
+`acceptance_rate` column (None on target-only pipelines), and
+`assert_spec_decode_equivalence` gates the subsystem's core invariant:
+the greedy spec-decode grid must equal the target-only grid
+token-for-token, whatever the draft spec, cache layout, or horizon.
 """
 
 from __future__ import annotations
@@ -29,7 +34,8 @@ from ..data import LANG_CODES, SyntheticTranslation, pairs as fig9_pairs
 from ..serving import SamplingParams, latency_percentiles
 from .metrics import CorpusStat
 
-__all__ = ["PairScore", "evaluate_pairs", "summarize"]
+__all__ = ["PairScore", "evaluate_pairs", "summarize",
+           "decode_token_grid", "assert_spec_decode_equivalence"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +55,11 @@ class PairScore:
     ttft_p95_ms: float
     tpot_p50_ms: float
     tpot_p95_ms: float
+    # speculative decoding only: fraction of this pair's drafted tokens
+    # the target verify accepted (None on target-only deployments —
+    # acceptance is a *speed* signal, quality columns are identical by
+    # the greedy-equivalence invariant)
+    acceptance_rate: Optional[float] = None
 
     def as_row(self) -> Dict:
         return dataclasses.asdict(self)
@@ -122,13 +133,20 @@ def evaluate_pairs(pipe, pair_list: Optional[Sequence[Tuple[str, str]]] = None,
             wds.sample(n_sent, pair=(wsrc, wtgt))["src_tokens"]), wtgt, sp)
         pipe.engine.reset_metrics()
 
+    eng = pipe.engine
     scores: List[PairScore] = []
     for src_l, tgt_l in pair_list:
         batch = ds.sample(n_sent, pair=(src_l, tgt_l))
         refs = batch["tgt_out"][:, :gen]
+        d0, a0 = eng.drafted_tokens, eng.accepted_tokens
         t0 = time.perf_counter()
         outs = pipe.translate(jnp.asarray(batch["src_tokens"]), tgt_l, sp)
         dt = time.perf_counter() - t0
+        # per-pair acceptance from the counter deltas (None when the
+        # pair ran target-only: no draft arm, or no speculative rounds)
+        drafted = eng.drafted_tokens - d0
+        acc_rate = round((eng.accepted_tokens - a0) / drafted, 4) \
+            if drafted else None
 
         stat = CorpusStat()
         for out, ref in zip(outs, refs):
@@ -140,7 +158,8 @@ def evaluate_pairs(pipe, pair_list: Optional[Sequence[Tuple[str, str]]] = None,
             src=src_l, tgt=tgt_l, bleu=m["bleu"], chrf=m["chrf"],
             token_acc=m["token_acc"], exact_match=m["exact_match"],
             n_sent=n_sent, gen_tokens=toks,
-            tok_s=round(toks / dt, 1) if dt > 0 else 0.0, **lat))
+            tok_s=round(toks / dt, 1) if dt > 0 else 0.0,
+            acceptance_rate=acc_rate, **lat))
     return scores
 
 
@@ -153,3 +172,56 @@ def summarize(scores: Sequence[PairScore]) -> Dict[str, float]:
             "mean_token_acc": sum(s.token_acc for s in scores) / n,
             "gen_tokens": sum(s.gen_tokens for s in scores),
             "mean_tok_s": sum(s.tok_s for s in scores) / n}
+
+
+def decode_token_grid(pipe, pair_list: Optional[Sequence[Tuple[str, str]]]
+                      = None, *, n_sent: int = 4, seed: int = 0,
+                      max_new_tokens: Optional[int] = None,
+                      languages: Optional[Sequence[str]] = None
+                      ) -> Dict[Tuple[str, str], tuple]:
+    """The raw greedy token grid: (src, tgt) -> per-sentence
+    (token_ids, finish_reason) tuples, served through the engine exactly
+    like evaluate_pairs but without scoring — the comparable object for
+    equivalence gates (dense vs paged, horizon=1 vs K, spec-decode vs
+    target-only)."""
+    if pipe.cfg.family != "encdec":
+        raise TypeError(
+            f"token grids need a token-to-token enc-dec pipeline, got "
+            f"family {pipe.cfg.family!r}")
+    pair_list = list(pair_list) if pair_list is not None else fig9_pairs()
+    langs = list(languages) if languages is not None \
+        else _ordered_langs(pair_list)
+    cfg = pipe.cfg
+    ds = SyntheticTranslation(cfg.vocab_size, cfg.enc_len, seed=seed,
+                              languages=langs, split="eval")
+    ref_len = cfg.enc_len - 2
+    budget = pipe.engine.max_len - 1
+    gen = min(max_new_tokens or ref_len, ref_len, budget)
+    sp = SamplingParams(max_new_tokens=gen)
+    grid: Dict[Tuple[str, str], tuple] = {}
+    for src_l, tgt_l in pair_list:
+        batch = ds.sample(n_sent, pair=(src_l, tgt_l))
+        outs = pipe.translate(jnp.asarray(batch["src_tokens"]), tgt_l, sp)
+        grid[(src_l, tgt_l)] = tuple(
+            (tuple(o.token_ids), o.finish_reason) for o in outs)
+    return grid
+
+
+def assert_spec_decode_equivalence(spec_pipe, target_pipe,
+                                   pair_list: Optional[
+                                       Sequence[Tuple[str, str]]] = None,
+                                   **grid_kwargs) -> None:
+    """Gate the speculative-decoding invariant: the greedy grid served
+    by a draft-armed pipeline must equal the target-only pipeline's
+    grid token-for-token (finish reasons included). Raises
+    AssertionError naming the first diverging pair. ``grid_kwargs``
+    are forwarded to decode_token_grid (n_sent / seed / max_new_tokens
+    / languages)."""
+    want = decode_token_grid(target_pipe, pair_list, **grid_kwargs)
+    got = decode_token_grid(spec_pipe, pair_list, **grid_kwargs)
+    for pair, ref in want.items():
+        if got[pair] != ref:
+            raise AssertionError(
+                f"speculative decode diverged from target-only on "
+                f"{pair[0]}->{pair[1]} (draft "
+                f"{spec_pipe.draft_spec_str}): {got[pair]} != {ref}")

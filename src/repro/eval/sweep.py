@@ -77,9 +77,13 @@ def quant_sweep(arch_or_cfg, formats: Sequence[str], *, params: Any,
                 activation quantization.
     deploy_kwargs: serving knobs forwarded to every deploy() call —
                 slots, max_len, paged, page_size, num_pages, horizon,
-                matmul_impl/paged_attn_impl, smoke, ctx... (deploy()
-                itself derives each format's activation route from the
-                spec, so one ctx serves the whole sweep).
+                matmul_impl/paged_attn_impl, smoke, ctx,
+                draft_spec/draft_lookahead (speculative decoding: the
+                grid's token streams are unchanged by the
+                greedy-equivalence invariant, but every pair row gains
+                its acceptance_rate column)... (deploy() itself derives
+                each format's activation route from the spec, so one
+                ctx serves the whole sweep).
     """
     resolved = [resolve_spec(f) for f in formats]   # fail fast on typos
     dk = dict(deploy_kwargs or {})

@@ -117,6 +117,13 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--num-pages", type=int, default=None)
     ap.add_argument("--horizon", type=int, default=1)
+    ap.add_argument("--draft-spec", default=None, metavar="SPEC",
+                    help="speculative-decoding draft arm for every "
+                         "deployed format (same alias/grammar as "
+                         "--formats); grids are token-identical by the "
+                         "greedy-equivalence invariant, pair rows gain "
+                         "an acceptance_rate column")
+    ap.add_argument("--draft-lookahead", type=int, default=4)
     ap.add_argument("--impl", choices=IMPL_CHOICES, default="xla")
     ap.add_argument("--calib-batches", type=int, default=4,
                     help="calibration batches for act-quantizing presets "
@@ -138,6 +145,11 @@ def main(argv=None):
             resolve_spec(f)
         except ValueError as e:
             raise SystemExit(f"bad --formats entry: {e}")
+    if args.draft_spec is not None:
+        try:
+            resolve_spec(args.draft_spec)
+        except ValueError as e:
+            raise SystemExit(f"bad --draft-spec: {e}")
     pair_list = args.pairs if args.pairs is not None else (
         [("hin", "eng"), ("eng", "hin")] if args.smoke else fig9_pairs())
     bad = sorted({lang for p in pair_list for lang in p
@@ -180,7 +192,8 @@ def main(argv=None):
     deploy_kwargs = dict(
         slots=args.slots, max_len=max_len, paged=args.paged,
         page_size=args.page_size, num_pages=args.num_pages,
-        horizon=args.horizon,
+        horizon=args.horizon, draft_spec=args.draft_spec,
+        draft_lookahead=args.draft_lookahead,
         ctx=Ctx(compute_dtype=jnp.float32 if args.smoke else jnp.bfloat16),
         **impl_routes(args.impl))
     rows = quant_sweep(
@@ -199,6 +212,8 @@ def main(argv=None):
                 "train_steps": train_steps, "train_batch": args.train_batch,
                 "lr": args.lr, "slots": args.slots, "max_len": max_len,
                 "paged": args.paged, "horizon": args.horizon,
+                "draft_spec": args.draft_spec,
+                "draft_lookahead": args.draft_lookahead,
                 "impl": args.impl, "calib_batches": args.calib_batches,
                 "smoke": args.smoke, "wall_s": round(dt, 1)})
     print()

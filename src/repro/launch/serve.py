@@ -30,6 +30,13 @@ def main():
                     help="quantization spec: an alias "
                          f"({', '.join(sorted(ALIASES))}) or a grammar "
                          "string like w4a8kv8 / wfp8e4m3afp8kvfp8")
+    ap.add_argument("--draft-spec", default=None, metavar="SPEC",
+                    help="speculative-decoding draft arm: the same "
+                         "checkpoint quantized at this spec drafts "
+                         "tokens the target verifies (greedy output is "
+                         "unchanged, same alias/grammar as --policy)")
+    ap.add_argument("--draft-lookahead", type=int, default=4,
+                    help="tokens drafted per speculative verify round")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--gen", type=int, default=8)
@@ -52,13 +59,20 @@ def main():
     args = ap.parse_args()
 
     resolve_spec(args.policy)        # fail on typos before any build work
+    if args.draft_spec is not None:
+        resolve_spec(args.draft_spec)   # same early failure as --policy
     pipe = deploy(args.arch, args.policy, slots=args.slots,
                   max_len=args.max_len, smoke=args.smoke, paged=args.paged,
                   page_size=args.page_size, num_pages=args.num_pages,
-                  horizon=args.horizon, **impl_routes(args.impl))
+                  horizon=args.horizon, draft_spec=args.draft_spec,
+                  draft_lookahead=args.draft_lookahead,
+                  **impl_routes(args.impl))
     print(f"model bytes {pipe.fp_bytes/2**20:.1f} MB -> "
           f"{pipe.quantized_bytes/2**20:.1f} MB "
           f"({args.policy} = {pipe.spec_str}, {pipe.compression:.2f}x)")
+    if args.draft_spec is not None:
+        print(f"speculative draft arm: {args.draft_spec} = "
+              f"{pipe.draft_spec_str}, lookahead {args.draft_lookahead}")
 
     cfg = pipe.cfg
     # sources up to the engine's cross capacity (default enc_len) are
@@ -101,6 +115,11 @@ def main():
     if args.paged:
         line += (f", page util {pipe.engine.page_utilization:.2f}, "
                  f"kv {pipe.engine.kv_cache_bytes/2**20:.2f} MB")
+    if args.draft_spec is not None:
+        line += (f", acceptance {pipe.engine.acceptance_rate:.2f} "
+                 f"({pipe.engine.accepted_tokens}/"
+                 f"{pipe.engine.drafted_tokens} drafted, "
+                 f"{pipe.engine.verify_calls} verify rounds)")
     print(line + ")")
 
 

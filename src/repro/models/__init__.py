@@ -1,6 +1,6 @@
 """Model zoo: dense / MoE / SSM / hybrid / VLM / enc-dec families."""
 
-from .api import ModelAPI, build_model
+from .api import ModelAPI, build_model, decode_block
 from .layers import Ctx
 
-__all__ = ["ModelAPI", "build_model", "Ctx"]
+__all__ = ["ModelAPI", "build_model", "decode_block", "Ctx"]

@@ -24,11 +24,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Optional
 
+import jax
+import jax.numpy as jnp
+
 from . import encdec as ed
 from . import hybrid as hy
 from . import transformer as tf
 
-__all__ = ["ModelAPI", "build_model"]
+__all__ = ["ModelAPI", "build_model", "decode_block"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +43,28 @@ class ModelAPI:
     prefill: Callable
     decode_step: Callable
     init_paged_cache: Optional[Callable] = None
+
+
+def decode_block(model: "ModelAPI", ctx, params, tokens, cache):
+    """Teacher-forced multi-token decode: feed ``tokens`` (B, K) through
+    K fused ``decode_step`` micro-steps (one on-device ``lax.scan``) and
+    return ``(cache, logits (B, K, V))``.
+
+    This is the speculative-decoding verify path: one batched target
+    forward over a drafted block. Per-slot valid-length masking rides on
+    the cache's own machinery — dense caches mask by ``pos``/``len``,
+    paged caches by ``block_tables``/``len``/``active`` — identically to
+    single-token decode, so the logits at position i are exactly what a
+    sequential decode of the same prefix would produce. Callers that
+    need retired slots frozen inject an ``active`` mask into the cache
+    first (it is constant across the block, so once is enough).
+    """
+    def body(c, tok):
+        c, logits = model.decode_step(ctx, params, tok[:, None], c)
+        return c, logits[:, -1]
+
+    cache, lg = jax.lax.scan(body, cache, jnp.swapaxes(tokens, 0, 1))
+    return cache, jnp.swapaxes(lg, 0, 1)
 
 
 def _no_paged_cache(fam: str) -> Callable:

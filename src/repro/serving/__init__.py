@@ -3,7 +3,9 @@
 Canonical path:  deploy() -> TranslationPipeline -> SamplingParams /
 Request / RequestOutput, scheduled by the queue-owning ServeEngine
 (submit / step / run_until_drained). `greedy_generate` / `translate`
-remain as thin single-shot wrappers for legacy callers.
+remain as thin single-shot wrappers for legacy callers. Speculative
+decoding deploys a second arm of the same checkpoint via
+`deploy(..., draft_spec=...)` (see spec_decode).
 """
 
 from .engine import ServeEngine, greedy_generate, translate
@@ -11,8 +13,10 @@ from .paged_cache import PageAllocator, pages_needed
 from .params import (GREEDY, Request, RequestOutput, RequestStats,
                      SamplingParams, latency_percentiles)
 from .pipeline import IMPL_CHOICES, TranslationPipeline, deploy, impl_routes
+from .spec_decode import DraftArm, accept_longest_prefix, build_draft_arm
 
 __all__ = ["ServeEngine", "greedy_generate", "translate", "SamplingParams",
            "GREEDY", "Request", "RequestOutput", "RequestStats",
            "latency_percentiles", "TranslationPipeline", "deploy",
-           "PageAllocator", "pages_needed", "impl_routes", "IMPL_CHOICES"]
+           "PageAllocator", "pages_needed", "impl_routes", "IMPL_CHOICES",
+           "DraftArm", "accept_longest_prefix", "build_draft_arm"]

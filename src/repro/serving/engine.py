@@ -35,6 +35,22 @@ finish reasons, and stats — only the sync granularity changes.
 ``engine.decode_syncs`` / ``engine.mean_tokens_per_sync`` report how
 much host traffic the fusion eliminated.
 
+Speculative decoding (``draft=DraftArm(...)``)
+----------------------------------------------
+With a draft arm (see spec_decode.py: the SAME checkpoint quantized at
+an aggressive spec), every step whose active slots are all greedy runs
+a *speculative round* instead: the draft arm proposes
+``draft.lookahead`` tokens via the horizon scan, the target arm replays
+them in ONE batched teacher-forced forward, and the longest matching
+prefix (+ the target's token at the first divergence) is emitted —
+1..K tokens per slot per round, token-for-token identical to
+target-only greedy decoding. Any sampled request in the batch falls the
+step back to the target-only path. Both arms keep per-slot caches
+(paged engines: two chains per request out of ONE shared allocator,
+freed together at retirement); a rejection rolls BOTH caches back to
+the emitted length. ``acceptance_rate`` / ``mean_accepted_per_verify``
+/ ``verify_calls`` report how much draft work converted into output.
+
 Design notes:
   * One jitted fused decode+sample step (or K-step scan) serves every
     slot each tick; per-slot SamplingParams enter as traced arrays, so
@@ -66,11 +82,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..models.api import decode_block
 from ..models.layers import Ctx
 from .paged_cache import TRASH_PAGE, PageAllocator, paged_insert, pages_needed
 from .params import (GREEDY, Request, RequestOutput, RequestStats,
                      SamplingParams)
 from .sampler import sample_tokens, sample_tokens_scan
+from .spec_decode import DraftArm, accept_longest_prefix
 
 __all__ = ["ServeEngine", "greedy_generate", "translate"]
 
@@ -106,7 +124,8 @@ class ServeEngine:
                  kv_dtype: str = "bf16", ctx: Optional[Ctx] = None,
                  paged: bool = False, page_size: int = 8,
                  num_pages: Optional[int] = None,
-                 max_src_len: Optional[int] = None, horizon: int = 1):
+                 max_src_len: Optional[int] = None, horizon: int = 1,
+                 draft: Optional[DraftArm] = None):
         if horizon < 1:
             raise ValueError(f"horizon must be >= 1, got {horizon}")
         self.model = model
@@ -120,6 +139,13 @@ class ServeEngine:
         self.enc_cap = int(max_src_len or getattr(model.cfg, "enc_len", 0)
                            or 0)
         self.paged = bool(paged)
+        self.draft = draft
+        self.draft_cache = None
+        if draft is not None and fam not in _PAD_SAFE:
+            raise ValueError(
+                f"speculative decoding supports families {_PAD_SAFE}, got "
+                f"{fam!r} (the draft/verify scans need pos/len-masked "
+                "attention caches)")
         if self.paged:
             if fam not in _PAD_SAFE:
                 raise ValueError(
@@ -128,24 +154,41 @@ class ServeEngine:
                     "prompt lengths are not lengths-derived)")
             self.page_size = int(page_size)
             self.max_pages = pages_needed(max_len, self.page_size)
+            # a draft arm doubles the default pool: both arms reserve a
+            # full chain per request out of the SAME allocator id space
             usable = num_pages if num_pages is not None \
-                else slots * self.max_pages
+                else slots * self.max_pages * (2 if draft else 1)
             self.allocator = PageAllocator(usable + 1, reserved=1)
             if fam in ("encdec", "audio"):
                 self.cache = model.init_paged_cache(
                     slots, self.max_pages, usable + 1, self.page_size,
                     kv_dtype, enc_len=self.enc_cap)
+                if draft is not None:
+                    self.draft_cache = model.init_paged_cache(
+                        slots, self.max_pages, usable + 1, self.page_size,
+                        draft.kv_dtype, enc_len=self.enc_cap)
             else:
                 self.cache = model.init_paged_cache(
                     slots, self.max_pages, usable + 1, self.page_size,
                     kv_dtype)
+                if draft is not None:
+                    self.draft_cache = model.init_paged_cache(
+                        slots, self.max_pages, usable + 1, self.page_size,
+                        draft.kv_dtype)
             self._chains: Dict[int, list] = {}      # request id -> pages
+            self._draft_chains: Dict[int, list] = {}
         else:
             if fam in ("encdec", "audio"):
                 self.cache = model.init_cache(slots, max_len, kv_dtype,
                                               enc_len=self.enc_cap)
+                if draft is not None:
+                    self.draft_cache = model.init_cache(
+                        slots, max_len, draft.kv_dtype, enc_len=self.enc_cap)
             else:
                 self.cache = model.init_cache(slots, max_len, kv_dtype)
+                if draft is not None:
+                    self.draft_cache = model.init_cache(
+                        slots, max_len, draft.kv_dtype)
         self.slots = [_Slot(i) for i in range(slots)]
         self.cur = jnp.zeros((slots, 1), jnp.int32)
         # per-slot sampling state — traced args of the fused step, so
@@ -166,6 +209,10 @@ class ServeEngine:
         self._page_slot_steps = 0
         self._decode_syncs = 0            # host-overhead accounting
         self._synced_tokens = 0
+        self._verify_calls = 0            # speculative-decode accounting
+        self._drafted = 0
+        self._accepted = 0
+        self._rejected = 0
 
         fam = model.cfg.family
         self._tkey = "tgt_in" if fam in ("encdec", "audio") else "tokens"
@@ -217,6 +264,37 @@ class ServeEngine:
 
         self._prefill_paged_fn = jax.jit(_prefill_paged)
 
+        if draft is not None:
+            # the draft arm's prefill mirrors the target's but discards
+            # the sampled token — the first emitted token is the TARGET
+            # prefill's (exactness), the draft only warms its own cache
+            def _draft_prefill(p, batch):
+                one = model.init_cache(1, max_len, draft.kv_dtype)
+                one, _ = model.prefill(draft.ctx, p, one, batch)
+                return one
+
+            self._draft_prefill_fn = jax.jit(_draft_prefill)
+
+            def _draft_prefill_paged(p, inputs, lengths, slot_ids,
+                                     page_rows, cache):
+                n, s_bucket = inputs[self._tkey].shape
+                mini = model.init_cache(n, s_bucket, draft.kv_dtype)
+                mini, _ = model.prefill(draft.ctx, p, mini, inputs)
+                return paged_insert(cache, mini, slot_ids, page_rows,
+                                    lengths)
+
+            self._draft_prefill_paged_fn = jax.jit(_draft_prefill_paged)
+
+            # constant sampling args for the draft scan: temperature 0
+            # everywhere makes sample_tokens_scan a pure greedy argmax
+            self._z_f = jnp.zeros((slots,), jnp.float32)
+            self._z_i = jnp.zeros((slots,), jnp.int32)
+            self._o_f = jnp.ones((slots,), jnp.float32)
+            self._z_keys = jnp.zeros((slots, 2), jnp.uint32)
+            self._no_eos = jnp.full((slots,), -1, jnp.int32)
+            self._draft_fns: Dict[int, Callable] = {}
+            self._verify_fns: Dict[int, Callable] = {}
+
     # ------------------------------------------------------------------
     # request API
     # ------------------------------------------------------------------
@@ -246,15 +324,17 @@ class ServeEngine:
                 f"but the engine was built with max_len={self.max_len}; "
                 f"shorten the request or deploy with a larger max_len")
         if self.paged:
-            need = pages_needed(budget, self.page_size)
+            arms = 2 if self.draft is not None else 1
+            need = pages_needed(budget, self.page_size) * arms
             usable = self.allocator.capacity - self.allocator.reserved
             if need > usable:
                 # fail fast: an unfittable reservation would block the
                 # FIFO admission head forever, not just wait its turn
                 raise ValueError(
-                    f"request needs {need} KV pages but the pool holds "
-                    f"only {usable}; deploy with num_pages>={need} or "
-                    f"shorten the request")
+                    f"request needs {need} KV pages"
+                    + (" (target + draft arms)" if arms == 2 else "")
+                    + f" but the pool holds only {usable}; deploy with "
+                    f"num_pages>={need} or shorten the request")
         se = self._src_len(request.inputs)
         if se is not None and se > self.enc_cap:
             # shorter sources are fine (the per-slot cross cache is
@@ -296,7 +376,14 @@ class ServeEngine:
             raise ValueError(f"horizon must be >= 1, got {K}")
         self._admit_pending()
         n_active = sum(s.active for s in self.slots)
-        if n_active and K > 1:
+        # speculative rounds need exact-match acceptance, which only
+        # reproduces greedy sampling: any sampled request in the batch
+        # falls the whole step back to the target-only path (the draft
+        # cache goes stale — harmless, verification is target-owned)
+        speculate = (n_active and self.draft is not None
+                     and all(s.request.params.greedy
+                             for s in self.slots if s.active))
+        if not speculate and n_active and K > 1:
             # clamp the scan to the (power-of-two-bucketed) largest
             # remaining budget among active slots: an over-long horizon
             # must not burn batched micro-steps every slot has already
@@ -305,7 +392,9 @@ class ServeEngine:
             max_rem = max(s.request.params.max_new_tokens - len(s.tokens)
                           for s in self.slots if s.active)
             K = min(K, self._bucket(max_rem))
-        if n_active and K == 1:
+        if speculate:
+            self._spec_round()
+        elif n_active and K == 1:
             self._decode_steps += 1
             self._active_slot_steps += n_active
             if self.paged:
@@ -402,14 +491,63 @@ class ServeEngine:
         return len(self.prefill_shapes)
 
     def reset_metrics(self) -> None:
-        """Zero the occupancy/page-utilization/host-sync accumulators
-        (e.g. after a warmup pass, so reported numbers cover only the
-        measured run)."""
+        """Zero the occupancy/page-utilization/host-sync and
+        speculative-decode accumulators (e.g. after a warmup pass, so
+        reported numbers cover only the measured run)."""
         self._decode_steps = 0
         self._active_slot_steps = 0
         self._page_slot_steps = 0
         self._decode_syncs = 0
         self._synced_tokens = 0
+        self._verify_calls = 0
+        self._drafted = 0
+        self._accepted = 0
+        self._rejected = 0
+
+    @property
+    def verify_calls(self) -> int:
+        """Speculative verify rounds run — each is ONE batched target
+        forward over a drafted block, the denominator of the
+        forwards-per-token win speculation exists to deliver."""
+        return self._verify_calls
+
+    @property
+    def drafted_tokens(self) -> int:
+        return self._drafted
+
+    @property
+    def accepted_tokens(self) -> int:
+        return self._accepted
+
+    @property
+    def rejected_tokens(self) -> int:
+        return self._rejected
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of drafted tokens the target verify accepted (the
+        draft-quality metric; 0.0 before any speculative round)."""
+        if not self._drafted:
+            return 0.0
+        return self._accepted / self._drafted
+
+    @property
+    def mean_accepted_per_verify(self) -> float:
+        """Accepted draft tokens per verify round, summed over slots —
+        how much draft work each batched target forward converts into
+        output (on top of the 1 token/slot a round always emits)."""
+        if not self._verify_calls:
+            return 0.0
+        return self._accepted / self._verify_calls
+
+    @property
+    def decode_steps(self) -> int:
+        """Decode micro-steps the engine has run (each processes one
+        token position per slot through the target or draft model). At
+        horizon=1 on a target-only engine this equals the number of
+        batched target-model forward dispatches — the baseline the
+        speculative ``verify_calls`` count is measured against."""
+        return self._decode_steps
 
     @property
     def decode_syncs(self) -> int:
@@ -445,10 +583,14 @@ class ServeEngine:
 
     @property
     def kv_cache_bytes(self) -> int:
-        """Allocated KV-cache storage (the paged/dense memory knob)."""
+        """Allocated KV-cache storage (the paged/dense memory knob),
+        including the draft arm's cache when speculating."""
         total = 0
         for leaf in jax.tree_util.tree_leaves(self.cache):
             total += leaf.size * leaf.dtype.itemsize
+        if self.draft_cache is not None:
+            for leaf in jax.tree_util.tree_leaves(self.draft_cache):
+                total += leaf.size * leaf.dtype.itemsize
         return total
 
     # ------------------------------------------------------------------
@@ -505,7 +647,7 @@ class ServeEngine:
                 eos[s.id] = sp.eos_id
         return jnp.asarray(alive), jnp.asarray(rem), jnp.asarray(eos)
 
-    def _make_horizon_fn(self, K: int):
+    def _make_horizon_fn(self, K: int, ctx: Optional[Ctx] = None):
         """Compile the K-step fused decode scan.
 
         Carry: (cache, cur, offsets, alive, rem); emits the (K, slots)
@@ -516,8 +658,12 @@ class ServeEngine:
         trash page) and pads the rest of its block row. Block tables
         are static across the scan — every admitted request holds its
         full page budget (see _request_pages).
+
+        ``ctx`` overrides the engine Ctx — the speculative draft scan
+        reuses this exact compiled shape against the draft arm's ctx,
+        params, and cache (params and cache are traced arguments).
         """
-        model, ctx = self.model, self.ctx
+        model, ctx = self.model, ctx or self.ctx
         set_active = self._mask_active or self.paged
         strip_active = self._mask_active   # dense caches: key is transient
 
@@ -542,6 +688,107 @@ class ServeEngine:
             return cache, cur, offsets, block
 
         return jax.jit(_horizon)
+
+    # -- speculative decode (quantized-draft) --------------------------
+
+    def _make_verify_fn(self, K: int):
+        """Compile the speculative verify: ONE batched target forward
+        over the drafted block (a fused teacher-forced K-step replay of
+        ``decode_step``), longest-matching-prefix acceptance, and the
+        shared rollback that truncates BOTH arms' caches to the emitted
+        length. Everything device-side; the host syncs only the emitted
+        block + per-slot counts, once per round."""
+        model, ctx = self.model, self.ctx
+        set_active = self._mask_active or self.paged
+        strip_active = self._mask_active
+
+        def _rollback(c, roll):
+            # both arms wrote exactly K positions this round; keep the
+            # first n_emit of them. Dense caches also re-mask `pos` so
+            # rolled-back positions read as invalid (-1) in attention.
+            new = dict(c)
+            new_len = c["len"] - roll
+            new["len"] = new_len
+            if "pos" in c:
+                idx = jnp.arange(c["pos"].shape[1], dtype=c["pos"].dtype)
+                new["pos"] = jnp.where(idx[None, :] >= new_len[:, None],
+                                       -1, c["pos"])
+            return new
+
+        def _verify(p, cur, cache, dcache, block, alive):
+            # teacher-forced feed: the pending token, then the first
+            # K-1 drafts — position i's logits are the target's choice
+            # given prefix (.., cur, d_0..d_{i-1})
+            feed = jnp.concatenate(
+                [cur, jnp.swapaxes(block[:K - 1], 0, 1)], axis=1)
+            if set_active:
+                cache = dict(cache, active=alive)
+            cache, logits = decode_block(model, ctx, p, feed, cache)
+            if strip_active:
+                cache = {k: v for k, v in cache.items() if k != "active"}
+            tgt = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+            tgt = jnp.swapaxes(tgt, 0, 1).astype(block.dtype)   # (K, S)
+            out, n_emit, acc, new_cur = accept_longest_prefix(
+                block, tgt, alive)
+            roll = jnp.where(alive > 0, K - n_emit, 0)
+            return (_rollback(cache, roll), _rollback(dcache, roll),
+                    out, n_emit, acc, new_cur[:, None])
+
+        return jax.jit(_verify)
+
+    def _spec_round(self):
+        """One speculative round: draft K tokens with the horizon scan
+        on the draft arm, verify them in one batched target forward,
+        emit the longest matching prefix + the target's token at the
+        first divergence (1..K tokens per live slot)."""
+        draft = self.draft
+        max_rem = max(s.request.params.max_new_tokens - len(s.tokens)
+                      for s in self.slots if s.active)
+        K = max(1, min(draft.lookahead, self._bucket(max_rem)))
+        self._decode_steps += K
+        if self.paged:
+            self._page_slot_steps += K * self.allocator.pages_in_use
+        dfn = self._draft_fns.get(K)
+        if dfn is None:
+            dfn = self._draft_fns[K] = self._make_horizon_fn(
+                K, ctx=draft.ctx)
+        vfn = self._verify_fns.get(K)
+        if vfn is None:
+            vfn = self._verify_fns[K] = self._make_verify_fn(K)
+        alive, _, _ = self._scan_masks()
+        # the draft scan must not retire anyone — acceptance is the
+        # verify pass's call: no EOS ids, budget that outlasts the scan
+        rem = (K + 1) * alive
+        self.draft_cache, _, _, block = dfn(
+            draft.params, self.cur, self.draft_cache, self._z_f,
+            self._z_i, self._o_f, self._z_keys, self._z_i, alive, rem,
+            self._no_eos)
+        self.cache, self.draft_cache, out, n_emit, acc, self.cur = vfn(
+            self.params, self.cur, self.cache, self.draft_cache, block,
+            alive)
+        self._verify_calls += 1
+        self._decode_syncs += 1
+        blk = np.asarray(out)               # one sync per round
+        n_emit = np.asarray(n_emit)
+        acc = np.asarray(acc)
+        for s in self.slots:
+            if not s.active:
+                continue
+            a = int(acc[s.id])
+            st = self._stats[s.request.id]
+            st.drafted += K
+            st.accepted += a
+            st.rejected += K - a
+            self._drafted += K
+            self._accepted += a
+            self._rejected += K - a
+            for t in range(int(n_emit[s.id])):
+                s.tokens.append(int(blk[t, s.id]))
+                self._synced_tokens += 1
+                self._active_slot_steps += 1
+                self._maybe_retire(s)
+                if not s.active:
+                    break
 
     def _bucket(self, n: int) -> int:
         """Smallest power-of-two >= n, capped at max_len."""
@@ -572,13 +819,21 @@ class ServeEngine:
 
     # -- paged admission -----------------------------------------------
 
-    def _request_pages(self, request: Request) -> int:
-        """Pages reserved at admission: the full prompt+decode budget, so
-        an admitted request can never die mid-decode from page pressure
-        (no preemption/swap path yet — see ROADMAP)."""
+    def _arm_pages(self, request: Request) -> int:
+        """Pages one KV arm reserves at admission: the full
+        prompt+decode budget, so an admitted request can never die
+        mid-decode from page pressure (no preemption/swap path yet —
+        see ROADMAP)."""
         budget = (request.inputs[self._tkey].shape[1]
                   + request.params.max_new_tokens)
         return pages_needed(min(budget, self.max_len), self.page_size)
+
+    def _request_pages(self, request: Request) -> int:
+        """Total page reservation across arms: a speculative engine
+        holds a second, same-length chain in the draft arm's KV format
+        out of the shared allocator."""
+        arms = 2 if self.draft is not None else 1
+        return self._arm_pages(request) * arms
 
     def _shape_key(self, request: Request):
         """Padded-batch compile key: prompt bucket + any side-input shapes."""
@@ -636,9 +891,16 @@ class ServeEngine:
         chains = []
         rows = np.zeros((n, self.max_pages), np.int32)  # 0 = trash page
         for i, r in enumerate(group):
-            chain = self.allocator.alloc_chain(self._request_pages(r))
+            chain = self.allocator.alloc_chain(self._arm_pages(r))
             chains.append(chain)
             rows[i, :len(chain)] = chain
+        dchains = []
+        if self.draft is not None:
+            drows = np.zeros((n, self.max_pages), np.int32)
+            for i, r in enumerate(group):
+                dchain = self.allocator.alloc_chain(self._arm_pages(r))
+                dchains.append(dchain)
+                drows[i, :len(dchain)] = dchain
         keys = jnp.stack(
             [jax.random.PRNGKey(r.params.seed) for r in group])
         self.cache, first = self._prefill_paged_fn(
@@ -648,6 +910,12 @@ class ServeEngine:
             jnp.asarray([r.params.top_k for r in group], jnp.int32),
             jnp.asarray([r.params.top_p for r in group], jnp.float32),
             keys)
+        if self.draft is not None:
+            self.draft_cache = self._draft_prefill_paged_fn(
+                self.draft.params, inputs,
+                jnp.asarray(true_lens, jnp.int32),
+                jnp.asarray(free, jnp.int32), jnp.asarray(drows),
+                self.draft_cache)
         self.prefill_shapes.add(
             tuple(sorted((k, tuple(v.shape)) for k, v in inputs.items())))
         first = np.asarray(first)
@@ -663,6 +931,8 @@ class ServeEngine:
             self._keys = self._keys.at[sid].set(keys[i])
             self._offsets = self._offsets.at[sid].set(1)
             self._chains[r.id] = chains[i]
+            if self.draft is not None:
+                self._draft_chains[r.id] = dchains[i]
             s.request = r
             s.tokens = [tok]
             s.active = True
@@ -694,6 +964,10 @@ class ServeEngine:
             tuple(sorted((k, tuple(v.shape)) for k, v in inputs.items())))
         self.cache = self._splice(self.cache, self._pad_cross(one_cache),
                                   slot)
+        if self.draft is not None:
+            done = self._draft_prefill_fn(self.draft.params, inputs)
+            self.draft_cache = self._splice(
+                self.draft_cache, self._pad_cross(done), slot)
         tok = int(tok)
         self.cur = self.cur.at[slot, 0].set(tok)
         self._temps = self._temps.at[slot].set(sp.temperature)
@@ -726,12 +1000,22 @@ class ServeEngine:
         s.request = None
         if self.paged:
             # reclaim the chain and park the slot on the trash page so
-            # its idle decode writes cannot touch live pages
+            # its idle decode writes cannot touch live pages; both arms'
+            # chains are freed together, by this one path, whatever the
+            # finish reason — a second free would raise in the allocator
             self.allocator.free_chain(self._chains.pop(rid))
             self.cache["block_tables"] = \
                 self.cache["block_tables"].at[s.id].set(TRASH_PAGE)
             self.cache["active"] = self.cache["active"].at[s.id].set(0)
             self.cache["len"] = self.cache["len"].at[s.id].set(0)
+            if self.draft is not None:
+                self.allocator.free_chain(self._draft_chains.pop(rid))
+                self.draft_cache["block_tables"] = \
+                    self.draft_cache["block_tables"].at[s.id].set(TRASH_PAGE)
+                self.draft_cache["active"] = \
+                    self.draft_cache["active"].at[s.id].set(0)
+                self.draft_cache["len"] = \
+                    self.draft_cache["len"].at[s.id].set(0)
 
     def _pad_cross(self, one_cache):
         """Zero-pad a single-request cache's cross-attention leaves from

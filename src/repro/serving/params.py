@@ -83,6 +83,12 @@ class RequestStats:
     at its last *synced* position, so this is the authoritative count
     (always equal to ``len(RequestOutput.token_ids)``), not the number
     of device-side decode steps the slot participated in.
+
+    ``drafted`` / ``accepted`` / ``rejected`` count speculative-decode
+    draft tokens proposed for this request, how many the target model's
+    verify pass accepted, and how many it threw away (all zero on a
+    target-only engine). ``accepted + rejected == drafted`` for every
+    completed verify round the request participated in.
     """
 
     arrival_s: float = 0.0
@@ -90,6 +96,9 @@ class RequestStats:
     finished_s: float = 0.0
     prompt_len: int = 0
     new_tokens: int = 0
+    drafted: int = 0
+    accepted: int = 0
+    rejected: int = 0
 
     @property
     def ttft_s(self) -> float:

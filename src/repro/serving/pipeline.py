@@ -30,6 +30,7 @@ from ..data import LANG_CODES
 from ..models import Ctx, build_model
 from .engine import ServeEngine
 from .params import Request, RequestOutput, SamplingParams
+from .spec_decode import build_draft_arm
 
 __all__ = ["deploy", "TranslationPipeline", "impl_routes", "IMPL_CHOICES"]
 
@@ -67,12 +68,19 @@ class TranslationPipeline:
     policy: str                   # the spec as the caller named it
     fp_bytes: int                 # parameter bytes before quantization
     spec: QuantSpec               # the fully-resolved quantization spec
+    draft_spec: Optional[QuantSpec] = None  # speculative draft arm spec
 
     @property
     def spec_str(self) -> str:
         """Canonical grammar spelling of the deployed spec (what reports
         record next to the requested alias)."""
         return str(self.spec)
+
+    @property
+    def draft_spec_str(self) -> Optional[str]:
+        """Canonical spelling of the speculative draft spec (None on a
+        target-only deployment)."""
+        return str(self.draft_spec) if self.draft_spec is not None else None
 
     @property
     def quantized_bytes(self) -> int:
@@ -133,7 +141,9 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
            max_src_len: Optional[int] = None, horizon: int = 1,
            matmul_impl: Optional[str] = None,
            paged_attn_impl: Optional[str] = None,
-           calib_batches: Optional[Iterable[dict]] = None
+           calib_batches: Optional[Iterable[dict]] = None,
+           draft_spec: Union[str, QuantSpec, None] = None,
+           draft_lookahead: int = 4
            ) -> TranslationPipeline:
     """Build a ready-to-serve TranslationPipeline in one call.
 
@@ -175,6 +185,18 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
                  WITHOUT calibration batches warns and stays dynamic
                  (never silently bf16). Ignored for specs that keep
                  activations in bf16.
+    draft_spec:  quantization spec for a speculative-decoding draft arm
+                 (same grammar/aliases as ``policy`` — e.g. target
+                 "int8" with draft "wfp4a8" or "w4a8kv8"): the SAME
+                 checkpoint is quantized a second time at this spec,
+                 and greedy requests decode speculatively — the draft
+                 proposes K tokens, the target verifies them in one
+                 batched forward and emits the longest matching prefix.
+                 Output stays token-for-token identical to target-only
+                 decoding (see serving.spec_decode); sampled requests
+                 fall back to target-only. ``calib_batches`` calibrates
+                 both arms.
+    draft_lookahead: tokens drafted per speculative verify round (K).
     """
     spec = resolve_spec(policy)
     cfg = get_config(arch_or_cfg) if isinstance(arch_or_cfg, str) \
@@ -205,6 +227,12 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
     if params is None:
         params = model.init(jax.random.PRNGKey(init_seed))
     fp_bytes = tree_nbytes(params)
+    raw_params = params             # the draft arm quantizes from here
+    if draft_spec is not None and calib_batches is not None \
+            and not isinstance(calib_batches, (list, tuple)):
+        # both arms calibrate from the same batches; a one-shot
+        # iterable would be exhausted by the target pass
+        calib_batches = list(calib_batches)
     if spec.weights != "f32":
         params = quantize_tree(params, spec.policy())
     if spec.quantizes_act:
@@ -230,11 +258,18 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
                 "quantization — pass deploy(calib_batches=...) for the "
                 "paper's calibrated static-scale deployment",
                 stacklevel=2)
+    draft = None
+    if draft_spec is not None:
+        draft = build_draft_arm(model, raw_params, ctx, draft_spec,
+                                lookahead=draft_lookahead,
+                                calib_batches=calib_batches)
     kv = kv_dtype or spec.kv
     engine = ServeEngine(model, params, slots=slots, max_len=max_len,
                          kv_dtype=kv, ctx=ctx, paged=paged,
                          page_size=page_size, num_pages=num_pages,
-                         max_src_len=max_src_len, horizon=horizon)
+                         max_src_len=max_src_len, horizon=horizon,
+                         draft=draft)
     name = policy if isinstance(policy, str) else str(spec)
     return TranslationPipeline(cfg, model, params, engine, ctx, name,
-                               fp_bytes, spec)
+                               fp_bytes, spec,
+                               draft_spec=draft.spec if draft else None)

@@ -1,0 +1,147 @@
+"""Quantized-draft speculative decoding: draft cheap, verify exact.
+
+The paper's FP4/W4 arms are ~4x smaller and faster than bf16, but
+post-training quantization loses quality unevenly across language pairs
+(Marie & Fujita, PAPERS.md). Speculative decoding sidesteps the quality
+question entirely: a *draft* arm — the SAME checkpoint re-quantized at
+an aggressive spec (``w4a8kv8``, ``wfp4a8``) — proposes K tokens per
+round with the horizon-fused scan, and the *target* arm replays the
+drafted block in one teacher-forced fused forward, accepting the longest
+prefix that matches its own greedy argmax.
+
+The greedy-equivalence invariant
+--------------------------------
+For greedy requests (``temperature == 0``) the emitted token stream is
+token-for-token identical to target-only decoding, whatever the draft
+spec. Per round the engine emits ``accepted + 1`` tokens: the accepted
+draft prefix (positions where draft argmax == target argmax) plus the
+target's own argmax at the first divergence — exactly the token
+target-only decoding would have produced there. The draft arm can only
+change *how fast* tokens arrive (acceptance rate), never *which* tokens
+arrive; a garbage draft degrades to ~1 token per verify round, i.e.
+target-only speed. Rollback after a rejection truncates BOTH arms'
+caches to the accepted length, so every retained KV entry corresponds to
+an emitted token.
+
+Temperature fallback
+--------------------
+Sampled requests (``temperature > 0``) draw from a per-request PRNG
+stream whose draws are not reproduced by exact-match acceptance, so any
+step whose active slots include a sampled request runs the normal
+target-only path for the whole batch. The draft arm's cache simply goes
+stale during the fallback (its positions lag the target's); staleness
+lowers acceptance when speculation resumes but can never corrupt output,
+because every emitted token is target-derived.
+
+``DraftArm`` is the deployable bundle (built by ``build_draft_arm`` or
+``deploy(..., draft_spec=...)``); ``accept_longest_prefix`` is the pure
+acceptance rule, unit-testable without an engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Iterable, Optional, Tuple
+
+import jax.numpy as jnp
+
+from ..core import (QuantSpec, calibrate_act_scales, get_format,
+                    quantize_tree, resolve_spec)
+from ..models.layers import Ctx
+
+__all__ = ["DraftArm", "accept_longest_prefix", "build_draft_arm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftArm:
+    """The draft side of a speculative deployment: the same checkpoint
+    quantized at ``spec``, with its own Ctx (draft act format / scales)
+    and KV-cache dtype. ``lookahead`` is K, the tokens drafted per
+    verify round."""
+
+    params: Any
+    ctx: Ctx
+    spec: QuantSpec
+    kv_dtype: str
+    lookahead: int = 4
+
+    def __post_init__(self):
+        if self.lookahead < 1:
+            raise ValueError(
+                f"draft lookahead must be >= 1, got {self.lookahead}")
+
+
+def accept_longest_prefix(draft_block, target_block, alive, pad_id: int = 0
+                          ) -> Tuple[Any, Any, Any, Any]:
+    """The speculative acceptance rule, vectorized over slots.
+
+    draft_block / target_block: (K, S) i32 — the K drafted tokens and
+    the target model's greedy argmax at each drafted position (position
+    i of ``target_block`` is the target's choice given the prefix
+    ``cur, d_0..d_{i-1}``). alive: (S,) i32 mask.
+
+    Returns ``(out, n_emit, accepted, new_cur)``:
+      out       (K, S) — emitted tokens: the accepted draft prefix, then
+                the target's token at the first divergence, then pad.
+      n_emit    (S,)   — tokens emitted this round: min(accepted + 1, K).
+      accepted  (S,)   — length of the matching prefix (0..K).
+      new_cur   (S,)   — the last emitted token, the next round's
+                pending ``cur`` (pad for dead slots).
+
+    When all K draft tokens match, n_emit == K and new_cur is the last
+    draft token — the bonus target token at position K is deliberately
+    NOT emitted, keeping both arms' caches symmetric (each advanced
+    exactly K positions this round, rollback is a shared truncation).
+    """
+    draft_block = jnp.asarray(draft_block)
+    target_block = jnp.asarray(target_block)
+    K = draft_block.shape[0]
+    alive = jnp.asarray(alive) > 0
+    match = (draft_block == target_block) & alive[None, :]
+    accepted = jnp.cumprod(match.astype(jnp.int32), axis=0).sum(axis=0)
+    n_emit = jnp.minimum(accepted + 1, K)
+    idx = jnp.arange(K, dtype=jnp.int32)[:, None]
+    out = jnp.where(idx < accepted[None, :], draft_block,
+                    jnp.where(idx == accepted[None, :], target_block,
+                              jnp.int32(pad_id)))
+    out = jnp.where(alive[None, :], out, jnp.int32(pad_id))
+    new_cur = jnp.take_along_axis(out, (n_emit - 1)[None, :], axis=0)[0]
+    return out, n_emit, jnp.where(alive, accepted, 0), new_cur
+
+
+def build_draft_arm(model, raw_params, base_ctx: Ctx, draft_spec,
+                    *, lookahead: int = 4,
+                    calib_batches: Optional[Iterable[dict]] = None
+                    ) -> DraftArm:
+    """Quantize a second arm of ``raw_params`` (the UN-quantized
+    checkpoint) at ``draft_spec`` and bundle it as a DraftArm.
+
+    ``base_ctx`` supplies compute dtype and kernel routes; the draft's
+    activation format and (when calibrated) static scales replace the
+    target's. Same calibration contract as deploy(): an act-quantizing
+    draft spec without calibration batches warns and stays dynamic.
+    """
+    spec = resolve_spec(draft_spec)
+    ctx = dataclasses.replace(base_ctx, act_fmt=spec.act, act_scales=None)
+    params = raw_params
+    if spec.weights != "f32":
+        params = quantize_tree(raw_params, spec.policy())
+    if spec.quantizes_act:
+        scales = {}
+        if calib_batches is not None:
+            scales = calibrate_act_scales(
+                model, params, ctx, calib_batches,
+                max_code=get_format(spec.act).max_code)
+        if scales:
+            ctx = dataclasses.replace(
+                ctx, act_scales=tuple(sorted(scales.items())))
+        else:
+            warnings.warn(
+                f"draft spec {spec} quantizes activations but no "
+                "calibration batches were provided (or the iterable was "
+                "empty); the draft falls back to dynamic per-token "
+                "activation quantization",
+                stacklevel=2)
+    return DraftArm(params=params, ctx=ctx, spec=spec, kv_dtype=spec.kv,
+                    lookahead=int(lookahead))
