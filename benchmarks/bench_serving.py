@@ -13,17 +13,33 @@ config, along two axes the paged-KV engine moves:
     enc-dec model benchmarked here the per-slot cross-attention cache
     still scales with slots, so total KV bytes are NOT equal — compare
     the kv_mb column, which reports the whole cache honestly;
-  * tok/s vs request rate — requests arrive ``rate`` per engine step
-    instead of as one burst, exercising continuous mid-flight admission.
+  * tok/s vs request rate — requests arrive as seeded Poisson traffic
+    (mean ``rate`` arrivals per scheduler round, injected through
+    ``engine.stream(on_round=...)``) instead of as one burst,
+    exercising continuous mid-flight admission through the overlapped
+    scheduler. The seed is fixed, so CI trajectories compare identical
+    arrival traces.
 
 ``--horizon K`` runs every engine with K-step horizon-fused decode (one
 host sync per K decode steps instead of per token); rows then report
 ``decode_syncs`` and ``tokens_per_sync`` so the BENCH trajectory tracks
 host-overhead elimination, and a tripwire reds the run if the fused
 path silently fell back to per-token syncing (``decode_syncs`` above
-``ceil(tokens/horizon) + slots``). ``--impl pallas`` routes matmuls
-through the Pallas qmm kernel and paged attention through the Pallas
-block-table kernel (on CPU set REPRO_PALLAS_INTERPRET=1).
+``ceil(tokens/horizon) + slots``). At K > 1 every row also reports
+``overlap_rounds`` — rounds whose host walk was hidden behind an
+already-dispatched next scan — and a second tripwire reds the run when
+a burst long enough to need several horizons per request never
+overlapped once (the double-buffered loop silently degenerated to
+dispatch-then-walk). ``--impl pallas`` routes matmuls through the
+Pallas qmm kernel and paged attention through the Pallas block-table
+kernel (on CPU set REPRO_PALLAS_INTERPRET=1).
+
+``--sla-ttft-ms`` / ``--sla-tpot-ms`` add one serve_{policy}_sla row
+per policy: the paged engine re-deployed with
+``deploy(..., sla=SLATarget(...))``, served under the same Poisson
+arrivals, reporting the measured p95s next to the targets, whether the
+final observation window held them, how often the controller retuned,
+and the horizon/prefill-cap it settled on.
 
 ``--spec-decode SPEC`` additionally measures each policy with a
 speculative draft arm (the same checkpoint quantized at SPEC drafts
@@ -38,14 +54,16 @@ run at --horizon 1 for an exact dispatch-level comparison).
 Rows (CSV on stdout; ``--json PATH`` additionally writes the artifact
 consumed by CI's bench-smoke job):
   serve_{policy}_{dense|paged}   burst throughput + occupancy + kv MB
-  serve_{policy}_paged_rate{r}   continuous-arrival throughput
+  serve_{policy}_paged_rate{r}   Poisson continuous-arrival throughput
   serve_{policy}_{mode}_specdec  speculative-decoding arm (--spec-decode)
+  serve_{policy}_sla             SLA-admission arm (--sla-ttft-ms/...)
 Every serving row also records per-request latency percentiles
 (p50/p95 TTFT and per-output-token time, from RequestStats via the
 latency_percentiles helper the eval suite shares).
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json P]
-        [--horizon K] [--impl xla|pallas] [--spec-decode w4a8kv8]
+        [--horizon K] [--rate R] [--impl xla|pallas]
+        [--spec-decode w4a8kv8] [--sla-ttft-ms T --sla-tpot-ms T]
 """
 
 from __future__ import annotations
@@ -56,11 +74,12 @@ import math
 import time
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import resolve_spec
 from repro.data import SyntheticTranslation
-from repro.serving import (IMPL_CHOICES, SamplingParams, deploy, impl_routes,
-                           latency_percentiles, pages_needed)
+from repro.serving import (IMPL_CHOICES, SamplingParams, SLATarget, deploy,
+                           impl_routes, latency_percentiles, pages_needed)
 
 from .common import csv_row
 
@@ -94,27 +113,43 @@ def serve_burst(eng, reqs, gen):
     return sum(o.num_generated for o in outs), dt, eng.occupancy, outs
 
 
-def serve_rate(eng, reqs, gen, rate):
-    """``rate`` new requests per engine step (continuous admission)."""
+def serve_rate(eng, reqs, gen, rate, seed=0):
+    """Poisson arrivals (mean ``rate`` per scheduler round, seeded rng)
+    injected through the overlapped streaming loop. A drained engine
+    with arrivals still pending is force-fed one request so the stream
+    never exits early on an unlucky run of zero draws."""
     sp = SamplingParams(max_new_tokens=gen)
     pending = list(reqs)
+    rng = np.random.default_rng(seed)
+
+    def arrive():
+        if not pending:
+            return
+        n = int(rng.poisson(rate))
+        if n == 0 and eng.num_active == 0 and eng.num_pending == 0:
+            n = 1
+        for r in pending[:n]:
+            eng.submit(r, sp)
+        del pending[:n]
+
     t0 = time.perf_counter()
     outs = []
+    arrive()
     while pending or len(outs) < len(reqs):
-        for r in pending[:rate]:
-            eng.submit(r, sp)
-        pending = pending[rate:]
-        outs.extend(eng.step())
+        outs.extend(eng.stream(on_round=arrive))
     dt = time.perf_counter() - t0
     return sum(o.num_generated for o in outs), dt, eng.occupancy, outs
 
 
-def _deploy(pol, paged, slots, smoke, horizon=1, impl="xla", draft=None):
+def _deploy(pol, paged, slots, smoke, horizon=1, impl="xla", draft=None,
+            sla=None):
     # paged engine: same page pool as the dense engine's KV capacity,
     # spread over twice the slots — memory buys concurrency, not padding
     impls = impl_routes(impl)
     if draft is not None:
         impls.update(draft_spec=draft, draft_lookahead=LOOKAHEAD)
+    if sla is not None:
+        impls.update(sla=sla)
     if paged:
         pages = slots * pages_needed(MAX_LEN, PAGE)
         return deploy("nllb600m", pol, slots=2 * slots, max_len=MAX_LEN,
@@ -137,13 +172,20 @@ def _sync_bound(toks: int, horizon: int, extra: int) -> int:
 def run(smoke: bool = False, json_path: str | None = None,
         horizon: int = 1, impl: str = "xla",
         policies: list[str] | None = None,
-        spec_decode: str | None = None):
+        spec_decode: str | None = None,
+        rate: int | None = None,
+        sla_ttft_ms: float | None = None,
+        sla_tpot_ms: float | None = None):
     if policies is None:
         policies = list(POLICIES[:2] if smoke else POLICIES)
     for pol in policies:                 # fail on typos before any build
         resolve_spec(pol)
     if spec_decode is not None:
         resolve_spec(spec_decode)
+    sla = (SLATarget(p95_ttft_ms=sla_ttft_ms, p95_tpot_ms=sla_tpot_ms,
+                     window=REQUESTS)
+           if (sla_ttft_ms is not None or sla_tpot_ms is not None) else None)
+    rates = [rate] if rate is not None else ([2] if smoke else [1, 2, 4])
     n_req = REQUESTS
     rows = []
     tripped = []
@@ -163,6 +205,18 @@ def run(smoke: bool = False, json_path: str | None = None,
                 f"{name}: decode_syncs {eng.decode_syncs} > "
                 f"ceil({toks}/{horizon}) + {extra} = {bound}")
 
+    def check_overlap(name, eng):
+        # overlap tripwire: a run whose requests each span several
+        # horizons must have dispatched ahead at least once — zero
+        # means the double-buffered loop silently fell back to serial
+        # dispatch-then-walk (spec-decode arms disable overlap by
+        # design and are never checked here)
+        if 1 < horizon < GEN - 1 and eng.metrics().overlap_rounds == 0:
+            tripped.append(
+                f"{name}: overlap_rounds == 0 at horizon {horizon} with "
+                f"{GEN}-token requests — host walks are not being hidden "
+                "behind dispatched-ahead scans")
+
     for pol in policies:
         occ = {}
         base_steps = {}
@@ -173,21 +227,24 @@ def run(smoke: bool = False, json_path: str | None = None,
             serve_burst(pipe.engine, reqs, GEN)          # warmup: compiles
             pipe.engine.reset_metrics()                  # measured run only
             toks, dt, _, outs = serve_burst(pipe.engine, reqs, GEN)
-            occ[mode] = pipe.engine.occupancy
-            base_steps[mode] = pipe.engine.decode_steps
+            m = pipe.engine.metrics()
+            occ[mode] = m.occupancy
+            base_steps[mode] = m.decode_steps
             check_syncs(f"serve_{pol}_{mode}", pipe.engine, toks,
                         pipe.engine.n_slots)
+            check_overlap(f"serve_{pol}_{mode}", pipe.engine)
             emit(f"serve_{pol}_{mode}", dt * 1e6 / max(toks, 1), {
                 "tok_s": round(toks / dt, 1),
                 "requests": n_req,
-                "occupancy": round(pipe.engine.occupancy, 3),
-                "page_util": round(pipe.engine.page_utilization, 3),
-                "kv_mb": round(pipe.engine.kv_cache_bytes / 2**20, 3),
+                "occupancy": round(m.occupancy, 3),
+                "page_util": round(m.page_utilization, 3),
+                "kv_mb": round(m.kv_cache_bytes / 2**20, 3),
                 "compression": f"{pipe.compression:.2f}x",
-                "prefill_compiles": pipe.engine.prefill_compiles,
+                "prefill_compiles": m.prefill_compiles,
                 "horizon": horizon,
-                "decode_syncs": pipe.engine.decode_syncs,
-                "tokens_per_sync": round(pipe.engine.mean_tokens_per_sync, 2),
+                "decode_syncs": m.decode_syncs,
+                "tokens_per_sync": round(m.mean_tokens_per_sync, 2),
+                "overlap_rounds": m.overlap_rounds,
                 **latency_percentiles(outs),
             })
             if spec_decode is None:
@@ -201,32 +258,32 @@ def run(smoke: bool = False, json_path: str | None = None,
             serve_burst(pipe.engine, reqs, GEN)          # warmup: compiles
             pipe.engine.reset_metrics()                  # measured run only
             toks, dt, _, outs = serve_burst(pipe.engine, reqs, GEN)
-            eng = pipe.engine
+            sm = pipe.engine.metrics()
             name = f"serve_{pol}_{mode}_specdec"
             emit(name, dt * 1e6 / max(toks, 1), {
                 "tok_s": round(toks / dt, 1),
                 "requests": n_req,
                 "draft_spec": pipe.draft_spec_str,
                 "lookahead": LOOKAHEAD,
-                "acceptance_rate": round(eng.acceptance_rate, 4),
+                "acceptance_rate": round(sm.acceptance_rate, 4),
                 "mean_accepted_per_verify":
-                    round(eng.mean_accepted_per_verify, 3),
-                "verify_calls": eng.verify_calls,
-                "verify_per_token": round(eng.verify_calls / max(toks, 1), 4),
+                    round(sm.mean_accepted_per_verify, 3),
+                "verify_calls": sm.verify_calls,
+                "verify_per_token": round(sm.verify_calls / max(toks, 1), 4),
                 "target_fw_baseline": base_steps[mode],
-                "drafted": eng.drafted_tokens,
-                "accepted": eng.accepted_tokens,
+                "drafted": sm.drafted_tokens,
+                "accepted": sm.accepted_tokens,
                 **latency_percentiles(outs),
             })
             # tripwires: a draft arm that never agrees with the target,
             # or that costs MORE target forwards than decoding without
             # it, is dead weight — red the run (after the JSON artifact)
-            if not eng.acceptance_rate > 0:
+            if not sm.acceptance_rate > 0:
                 tripped.append(f"{name}: acceptance_rate "
-                               f"{eng.acceptance_rate:.4f} is not > 0")
-            if eng.verify_calls >= base_steps[mode]:
+                               f"{sm.acceptance_rate:.4f} is not > 0")
+            if sm.verify_calls >= base_steps[mode]:
                 tripped.append(
-                    f"{name}: verify_calls {eng.verify_calls} >= "
+                    f"{name}: verify_calls {sm.verify_calls} >= "
                     f"target-only decode steps {base_steps[mode]} — "
                     "speculation saved no target forwards")
         # acceptance tripwire: continuous paged admission must keep the
@@ -242,26 +299,63 @@ def run(smoke: bool = False, json_path: str | None = None,
                 f"{pol}: paged occupancy {occ['paged']:.3f} < dense "
                 f"{occ['dense']:.3f}")
 
-        for rate in ((2,) if smoke else (1, 2, 4)):
+        for r in rates:
             pipe = _deploy(pol, True, SLOTS, smoke=True, horizon=horizon,
                            impl=impl)
             reqs = _requests(pipe.cfg, n_req)
-            serve_rate(pipe.engine, reqs, GEN, rate)     # warmup
+            serve_rate(pipe.engine, reqs, GEN, r)        # warmup
             pipe.engine.reset_metrics()                  # measured run only
-            toks, dt, occ_r, outs = serve_rate(pipe.engine, reqs, GEN, rate)
-            check_syncs(f"serve_{pol}_paged_rate{rate}", pipe.engine, toks,
+            toks, dt, occ_r, outs = serve_rate(pipe.engine, reqs, GEN, r)
+            m = pipe.engine.metrics()
+            check_syncs(f"serve_{pol}_paged_rate{r}", pipe.engine, toks,
                         n_req)
-            emit(f"serve_{pol}_paged_rate{rate}", dt * 1e6 / max(toks, 1), {
-                "tok_s": round(toks / dt, 1), "rate_per_step": rate,
+            emit(f"serve_{pol}_paged_rate{r}", dt * 1e6 / max(toks, 1), {
+                "tok_s": round(toks / dt, 1), "rate_per_round": r,
                 "occupancy": round(occ_r, 3),
-                "decode_syncs": pipe.engine.decode_syncs,
-                "tokens_per_sync": round(pipe.engine.mean_tokens_per_sync, 2),
+                "decode_syncs": m.decode_syncs,
+                "tokens_per_sync": round(m.mean_tokens_per_sync, 2),
+                "overlap_rounds": m.overlap_rounds,
                 **latency_percentiles(outs)})
+
+        if sla is not None:
+            # SLA-admission arm: same Poisson traffic, the engine's own
+            # controller retunes horizon/prefill admission against the
+            # measured percentiles (no sync-count tripwire here — the
+            # controller changes the horizon mid-run by design)
+            r = rates[0]
+            pipe = _deploy(pol, True, SLOTS, smoke=True, horizon=horizon,
+                           impl=impl, sla=sla)
+            reqs = _requests(pipe.cfg, n_req)
+            serve_rate(pipe.engine, reqs, GEN, r)        # warmup
+            pipe.engine.reset_metrics()                  # measured run only
+            toks, dt, _, outs = serve_rate(pipe.engine, reqs, GEN, r)
+            m = pipe.engine.metrics()
+            ctl = pipe.engine.sla
+            lat = latency_percentiles(outs)
+            held = ctl.holding()
+            name = f"serve_{pol}_sla"
+            emit(name, dt * 1e6 / max(toks, 1), {
+                "tok_s": round(toks / dt, 1), "rate_per_round": r,
+                "sla_ttft_ms": sla_ttft_ms, "sla_tpot_ms": sla_tpot_ms,
+                "sla_held": None if held is None else int(held),
+                "retunes": ctl.retunes,
+                "final_horizon": ctl.horizon,
+                "final_prefill_cap": ctl.prefill_cap,
+                "overlap_rounds": m.overlap_rounds,
+                **lat})
+            if held is False:
+                tripped.append(
+                    f"{name}: final window missed the SLA "
+                    f"(ttft_p95 {lat['ttft_p95_ms']}ms vs "
+                    f"{sla_ttft_ms}, tpot_p95 {lat['tpot_p95_ms']}ms "
+                    f"vs {sla_tpot_ms})")
 
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"benchmark": "bench_serving", "smoke": smoke,
                        "horizon": horizon, "impl": impl,
+                       "rate": rate, "sla_ttft_ms": sla_ttft_ms,
+                       "sla_tpot_ms": sla_tpot_ms,
                        "spec_decode": spec_decode, "rows": rows},
                       f, indent=2)
     if tripped:
@@ -290,11 +384,24 @@ def main():
                          "draft arm quantized at SPEC (e.g. w4a8kv8); "
                          "adds serve_*_specdec rows with acceptance "
                          "rate and verify-calls-per-token")
+    ap.add_argument("--rate", type=int, default=None, metavar="R",
+                    help="mean Poisson arrivals per scheduler round for "
+                         "the continuous-admission rows (default: the "
+                         "standard 1/2/4 sweep, 2 under --smoke)")
+    ap.add_argument("--sla-ttft-ms", type=float, default=None, metavar="T",
+                    help="p95 TTFT target: adds serve_*_sla rows served "
+                         "under deploy(sla=SLATarget(...)) admission "
+                         "control; a final window that misses the "
+                         "target reds the run")
+    ap.add_argument("--sla-tpot-ms", type=float, default=None, metavar="T",
+                    help="p95 per-output-token target (see --sla-ttft-ms)")
     args = ap.parse_args()
     pols = ([p.strip() for p in args.policies.split(",") if p.strip()]
             if args.policies else None)
     run(smoke=args.smoke, json_path=args.json, horizon=args.horizon,
-        impl=args.impl, policies=pols, spec_decode=args.spec_decode)
+        impl=args.impl, policies=pols, spec_decode=args.spec_decode,
+        rate=args.rate, sla_ttft_ms=args.sla_ttft_ms,
+        sla_tpot_ms=args.sla_tpot_ms)
 
 
 if __name__ == "__main__":

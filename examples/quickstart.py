@@ -1,8 +1,9 @@
-"""Quickstart: the paper's full pipeline in ~75 lines.
+"""Quickstart: the paper's full pipeline in ~90 lines.
 
 Train a reduced NLLB-600M on the synthetic many-to-many translation task,
 post-training-quantize it to INT4 (the paper's deployment format),
 translate the same sources into two different languages with one model,
+stream a translation token-by-token as each fused horizon block lands,
 then redeploy with an FP4 speculative draft arm (same checkpoint, same
 tokens, fewer target-model forwards).
 
@@ -52,6 +53,21 @@ for lang in ("ita", "hin"):
     outs = pipe.translate(src, lang, SamplingParams(max_new_tokens=6))
     print(f"-> {lang}: {[o.token_ids for o in outs]}")
 
+# --- stream one translation token-by-token -----------------------------
+# translate_stream yields each token id as its horizon block syncs; the
+# finished RequestOutput (with TTFT / per-token latency) is the
+# generator's return value.
+stream = pipe.translate_stream(src[:1], "ita",
+                               SamplingParams(max_new_tokens=6))
+print("-> ita (streamed):", end=" ", flush=True)
+while True:
+    try:
+        print(next(stream), end=" ", flush=True)
+    except StopIteration as fin:
+        out = fin.value
+        break
+print(f"| ttft {out.ttft_ms:.1f} ms, {out.tpot_ms:.2f} ms/token")
+
 # --- speculative decoding: draft at FP4, verify at INT8 ----------------
 # The same checkpoint deploys twice — an aggressive wfp4a8 draft arm
 # proposes tokens, the int8 target verifies them in one batched
@@ -62,7 +78,7 @@ spec_pipe = deploy(cfg, "int8", slots=2, max_len=16, params=params,
 for lang in ("ita", "hin"):
     outs = spec_pipe.translate(src, lang, SamplingParams(max_new_tokens=6))
     print(f"-> {lang} (speculative): {[o.token_ids for o in outs]}")
-eng = spec_pipe.engine
+m = spec_pipe.engine.metrics()
 print(f"draft {spec_pipe.draft_spec_str}: acceptance "
-      f"{eng.acceptance_rate:.2f} ({eng.accepted_tokens}/"
-      f"{eng.drafted_tokens} drafted, {eng.verify_calls} verify rounds)")
+      f"{m.acceptance_rate:.2f} ({m.accepted_tokens}/"
+      f"{m.drafted_tokens} drafted, {m.verify_calls} verify rounds)")

@@ -5,7 +5,10 @@ INT4-weight / INT8-KV pipeline — the TPU analogue of the paper's
 real-time FPGA translation node. The engine owns admission and slot
 scheduling: we submit 8 requests with *mixed* per-request SamplingParams
 (greedy next to seeded nucleus sampling, all served by one compiled step
-function) and drain.
+function — one of them streaming token-by-token through an on_token
+callback) and consume outputs as each request finishes
+(``engine.stream()``; the overlapped scheduler dispatches the next
+horizon while the host walks the previous block).
 
 Part 2 (the paper's evaluation mode, Fig. 9): fit the synthetic
 many-to-many task, deploy the checkpoint at int8, and print the
@@ -37,7 +40,7 @@ cal_ds = SyntheticTranslation(reduce_config(REGISTRY["nllb600m"]).vocab_size,
 calib = ({k: jnp.asarray(v) for k, v in cal_ds.sample(8).items()
           if not isinstance(v, str)} for _ in range(2))
 pipe = deploy("nllb600m", "w4a8kv8", slots=4, max_len=32, smoke=True,
-              calib_batches=calib)
+              horizon=4, calib_batches=calib)
 print(f"deployed nllb600m @ {pipe.policy} (= {pipe.spec_str}): "
       f"{pipe.fp_bytes/2**20:.2f} MB -> "
       f"{pipe.quantized_bytes/2**20:.2f} MB ({pipe.compression:.1f}x), "
@@ -45,6 +48,7 @@ print(f"deployed nllb600m @ {pipe.policy} (= {pipe.spec_str}): "
 ds = SyntheticTranslation(pipe.cfg.vocab_size, pipe.cfg.enc_len, seed=0)
 
 t0 = time.perf_counter()
+live = []            # request 0 streams token-by-token as blocks sync
 for rid in range(8):
     b = ds.sample(1)
     req = {"src_tokens": jnp.asarray(b["src_tokens"]),
@@ -52,17 +56,20 @@ for rid in range(8):
     sp = (SamplingParams(max_new_tokens=6) if rid % 2 == 0 else
           SamplingParams(temperature=0.8, top_p=0.9, max_new_tokens=6,
                          seed=rid))
-    pipe.engine.submit(req, sp)
+    pipe.engine.submit(req, sp, on_token=live.append if rid == 0 else None)
 
 served = 0
-for o in sorted(pipe.engine.run_until_drained(), key=lambda o: o.request_id):
+for o in pipe.engine.stream():           # yields as each request finishes
     mode = "greedy" if o.request_id % 2 == 0 else "top-p "
     print(f"request {o.request_id} ({mode}, slot {o.slot}, "
-          f"{o.finish_reason}): {o.token_ids}")
+          f"{o.finish_reason}, ttft {o.ttft_ms:.1f} ms): {o.token_ids}")
     served += o.num_generated
 dt = time.perf_counter() - t0
+m = pipe.engine.metrics()
 print(f"\n8 requests, {served} tokens in {dt:.2f}s "
-      f"({served/dt:.1f} tok/s on this host)")
+      f"({served/dt:.1f} tok/s on this host, "
+      f"{m.decode_syncs} host syncs, {m.overlap_rounds} overlapped rounds; "
+      f"request 0 streamed {len(live)} tokens live)")
 
 # -- part 2: converge the task, print the per-pair chrF grid ---------------
 

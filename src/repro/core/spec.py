@@ -10,18 +10,24 @@ place (:func:`resolve_spec`).
 
 Grammar (one ``w`` field, the rest optional, in this order)::
 
-    w<fmt> [a<fmt>] [kv<fmt>] [e<fmt>] [g<int>] [dq]
+    w<fmt> [a<fmt>] [kv<fmt>] [x<fmt>] [e<fmt>] [g<int>] [dq]
 
     w   weight storage         4|8|16|fp4|nf4|fp8|fp8e4m3|fp8e5m2|f32 ...
     a   activation format      8 (int8) | fp8 | 16 (bf16, default)
     kv  KV-cache storage       8 | fp8 | 16 (default) | f32
+    x   attention-matmul format — the QK/PV activation-activation
+                               einsums (both operands fake-quantized,
+                               wide f32 accumulate; the sparseml
+                               QuantizableMatMul shape): 8 | fp8 |
+                               16 (bf16, default = untouched)
     e   embedding storage      default: int8 for 4-bit weights, else = w
     g   weight block size      g0 = per-channel (one K-block); default 64,
                                or per-channel when w8 meets a8 so the
                                integer-MAC path stays eligible
     dq  double-quantize the block scales (QLoRA trick)
 
-Examples: ``w4a8kv8``, ``w8a8kv8g32``, ``wfp4a8``, ``wfp8e4m3afp8kvfp8``.
+Examples: ``w4a8kv8``, ``w8a8kv8g32``, ``wfp4a8``, ``wfp8e4m3afp8kvfp8``,
+``w8a8kv8x8``.
 Legacy preset names (``int4``, ``w8a8``, ``nf4``, ...) are registered
 aliases in :data:`ALIASES`; ``str(spec)`` is the canonical grammar form
 and round-trips: ``QuantSpec.parse(str(spec)) == spec``.
@@ -37,7 +43,7 @@ from .formats import FORMATS
 
 __all__ = ["QuantSpec", "ALIASES", "resolve_spec", "SPEC_GRAMMAR"]
 
-SPEC_GRAMMAR = "w<fmt>[a<fmt>][kv<fmt>][e<fmt>][g<int>][dq]"
+SPEC_GRAMMAR = "w<fmt>[a<fmt>][kv<fmt>][x<fmt>][e<fmt>][g<int>][dq]"
 
 # grammar token -> core.formats name (longest token wins during parsing)
 _TOKENS = {
@@ -56,6 +62,7 @@ _KV_FMTS = ("bf16", "f32", "int8", "fp8")
 _FMT_ALT = "|".join(sorted(_TOKENS, key=len, reverse=True))
 _SPEC_RE = re.compile(
     rf"^w(?P<w>{_FMT_ALT})(?:a(?P<a>{_FMT_ALT}))?(?:kv(?P<kv>{_FMT_ALT}))?"
+    rf"(?:x(?P<x>{_FMT_ALT}))?"
     rf"(?:e(?P<e>{_FMT_ALT}))?(?:g(?P<g>\d+))?(?P<dq>dq)?$")
 
 
@@ -84,6 +91,7 @@ class QuantSpec:
     weights: str = "bf16"
     act: str = "bf16"
     kv: str = "bf16"
+    attn: str = "bf16"              # QK/PV attention-matmul format (x<fmt>)
     embed: Optional[str] = None
     group: Optional[int] = None     # weight block size; 0 = per-channel
     double_quant: bool = False
@@ -111,6 +119,13 @@ class QuantSpec:
             raise ValueError(
                 f"KV-cache format must be one of {_KV_FMTS}, got "
                 f"{self.kv!r}")
+        if self.attn not in _ACT_FMTS:
+            # attention matmuls are activation x activation: no weight
+            # tree involved, so (unlike a<fmt>) any weight format may
+            # carry an x<fmt> slot
+            raise ValueError(
+                f"attention-matmul format must be one of {_ACT_FMTS}, "
+                f"got {self.attn!r}")
         if self.embed is None:
             object.__setattr__(self, "embed", _default_embed(self.weights))
         elif self.embed not in FORMATS:
@@ -137,6 +152,7 @@ class QuantSpec:
             weights=_TOKENS[m.group("w")],
             act=_TOKENS[m.group("a")] if m.group("a") else "bf16",
             kv=_TOKENS[m.group("kv")] if m.group("kv") else "bf16",
+            attn=_TOKENS[m.group("x")] if m.group("x") else "bf16",
             embed=_TOKENS[m.group("e")] if m.group("e") else None,
             group=int(g) if g is not None else None,
             double_quant=m.group("dq") is not None)
@@ -149,6 +165,8 @@ class QuantSpec:
             out += ["a", _CANON[self.act]]
         if self.kv != "bf16":
             out += ["kv", _CANON[self.kv]]
+        if self.attn != "bf16":
+            out += ["x", _CANON[self.attn]]
         if self.embed != _default_embed(self.weights):
             out += ["e", _CANON[self.embed]]
         if self.group != _default_group(self.weights, self.act):
@@ -186,6 +204,13 @@ class QuantSpec:
     @property
     def quantizes_act(self) -> bool:
         return self.act != "bf16"
+
+    @property
+    def quantizes_attn(self) -> bool:
+        """True when the QK/PV attention matmuls run fake-quantized
+        (the x<fmt> slot; routed via Ctx.attn_act_fmt, not the weight
+        tree — see models.layers.Ctx.attn_dot)."""
+        return self.attn != "bf16"
 
 
 # Legacy preset names as registered aliases — field-for-field the PR 4

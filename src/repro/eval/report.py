@@ -27,8 +27,11 @@ __all__ = ["SCHEMA_VERSION", "make_report", "dump", "load", "save",
 # string ("spec") next to the requested alias ("fmt").
 # v3: every per-pair entry carries an "acceptance_rate" column
 # (speculative-decode draft acceptance; None for target-only runs).
+# v4: every sweep row carries format-level "ttft_p95_ms"/"tpot_p95_ms"
+# columns (worst direction over the pair grid — the numbers an
+# SLATarget is written against; None for pre-v4 runs).
 # Older reports are upgraded on load, one version at a time.
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 
 def _git_rev() -> Optional[str]:
@@ -109,7 +112,25 @@ def _upgrade_v2(report: Dict[str, Any]) -> Dict[str, Any]:
     return {**report, "schema": 3, "rows": rows}
 
 
-_UPGRADES = {1: _upgrade_v1, 2: _upgrade_v2}
+def _upgrade_v3(report: Dict[str, Any]) -> Dict[str, Any]:
+    """Schema 3 -> 4: sweep rows gain format-level "ttft_p95_ms" /
+    "tpot_p95_ms" latency columns. Pre-v4 runs measured per-pair
+    percentiles but never rolled them up, so the roll-up is recomputed
+    where pair data exists (max over directions, matching quant_sweep)
+    and None otherwise."""
+    rows = []
+    for row in report.get("rows", []):
+        row = dict(row)
+        for col in ("ttft_p95_ms", "tpot_p95_ms"):
+            if col not in row:
+                vals = [p[col] for p in row.get("pair_scores") or []
+                        if isinstance(p.get(col), (int, float))]
+                row[col] = max(vals) if vals else None
+        rows.append(row)
+    return {**report, "schema": 4, "rows": rows}
+
+
+_UPGRADES = {1: _upgrade_v1, 2: _upgrade_v2, 3: _upgrade_v3}
 
 
 def load(text: str) -> Dict[str, Any]:
@@ -148,8 +169,8 @@ def _fmt(v: Any, nd: int = 3, signed: bool = False) -> str:
 
 def _sweep_table(rows: List[Dict[str, Any]]) -> List[str]:
     head = ("| format | spec | BLEU | ΔBLEU | chrF | ΔchrF | model MB "
-            "| compr | kv MB | tok/s | calib |")
-    sep = "|---" * 11 + "|"
+            "| compr | kv MB | tok/s | ttft p95 | tpot p95 | calib |")
+    sep = "|---" * 13 + "|"
     lines = [head, sep]
     for r in rows:
         lines.append(
@@ -161,6 +182,8 @@ def _sweep_table(rows: List[Dict[str, Any]]) -> List[str]:
             f" | {r['model_bytes'] / 2**20:.2f} | {_fmt(r['compression'], 2)}x"
             f" | {r['kv_cache_bytes'] / 2**20:.2f}"
             f" | {_fmt(r['mean_tok_s'], 1)}"
+            f" | {_fmt(r.get('ttft_p95_ms'), 1)}"
+            f" | {_fmt(r.get('tpot_p95_ms'), 2)}"
             f" | {'static' if r.get('calibrated') else 'dyn'} |")
     return lines
 

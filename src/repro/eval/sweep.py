@@ -44,6 +44,10 @@ class FormatRow:
     mean_token_acc: float
     mean_tok_s: float
     gen_tokens: int
+    # worst-direction serving latency over the pair grid (schema v4) —
+    # the numbers an SLATarget for this format is written against
+    ttft_p95_ms: Optional[float]
+    tpot_p95_ms: Optional[float]
     bleu_delta: Optional[float]        # vs the anchor row (None = anchor
     chrf_delta: Optional[float]        # itself, or anchor not in sweep)
     calibrated: bool                   # per-site static act scales set?
@@ -108,6 +112,10 @@ def quant_sweep(arch_or_cfg, formats: Sequence[str], *, params: Any,
             mean_token_acc=agg["mean_token_acc"],
             mean_tok_s=round(agg["mean_tok_s"], 1),
             gen_tokens=agg["gen_tokens"],
+            ttft_p95_ms=round(max(s.ttft_p95_ms for s in scores), 3)
+            if scores else None,
+            tpot_p95_ms=round(max(s.tpot_p95_ms for s in scores), 3)
+            if scores else None,
             bleu_delta=None, chrf_delta=None,
             calibrated=pipe.ctx.act_scales is not None,
             pair_scores=tuple(scores))

@@ -124,6 +124,10 @@ def main(argv=None):
                          "greedy-equivalence invariant, pair rows gain "
                          "an acceptance_rate column")
     ap.add_argument("--draft-lookahead", type=int, default=4)
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="serve the grid with serial dispatch-then-walk "
+                         "rounds (default: overlapped scheduler; grids "
+                         "are token-identical either way)")
     ap.add_argument("--impl", choices=IMPL_CHOICES, default="xla")
     ap.add_argument("--calib-batches", type=int, default=4,
                     help="calibration batches for act-quantizing presets "
@@ -193,7 +197,7 @@ def main(argv=None):
         slots=args.slots, max_len=max_len, paged=args.paged,
         page_size=args.page_size, num_pages=args.num_pages,
         horizon=args.horizon, draft_spec=args.draft_spec,
-        draft_lookahead=args.draft_lookahead,
+        draft_lookahead=args.draft_lookahead, overlap=not args.no_overlap,
         ctx=Ctx(compute_dtype=jnp.float32 if args.smoke else jnp.bfloat16),
         **impl_routes(args.impl))
     rows = quant_sweep(
@@ -212,6 +216,7 @@ def main(argv=None):
                 "train_steps": train_steps, "train_batch": args.train_batch,
                 "lr": args.lr, "slots": args.slots, "max_len": max_len,
                 "paged": args.paged, "horizon": args.horizon,
+                "overlap": not args.no_overlap,
                 "draft_spec": args.draft_spec,
                 "draft_lookahead": args.draft_lookahead,
                 "impl": args.impl, "calib_batches": args.calib_batches,

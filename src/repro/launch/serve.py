@@ -2,7 +2,11 @@
 
 One deploy() call builds the quantized pipeline; the scheduler-owned
 engine handles admission and slot scheduling internally — the launcher
-just submits requests and drains.
+submits requests and streams outputs as each finishes (the overlapped
+scheduler dispatches horizon N+1 while the host walks horizon N;
+``--no-overlap`` restores serial dispatch-then-walk, and
+``--sla-ttft-ms``/``--sla-tpot-ms`` attach the percentile-feedback
+admission controller).
 
   PYTHONPATH=src python -m repro.launch.serve --arch nllb600m --smoke \
       --policy int4 --requests 6 --gen 8 --temperature 0.7 --top-p 0.9
@@ -19,7 +23,8 @@ import jax.numpy as jnp
 from ..configs import REGISTRY
 from ..core import ALIASES, resolve_spec
 from ..data import SyntheticTranslation
-from ..serving import IMPL_CHOICES, SamplingParams, deploy, impl_routes
+from ..serving import (IMPL_CHOICES, SamplingParams, SLATarget, deploy,
+                       impl_routes)
 
 
 def main():
@@ -52,6 +57,15 @@ def main():
     ap.add_argument("--impl", choices=IMPL_CHOICES, default="xla",
                     help="kernel route: pallas = Pallas qmm + Pallas "
                          "paged attention")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="serial dispatch-then-walk rounds instead of "
+                         "dispatching horizon N+1 while walking N")
+    ap.add_argument("--sla-ttft-ms", type=float, default=None, metavar="T",
+                    help="p95 time-to-first-token target: the engine "
+                         "auto-tunes horizon and prefill admission "
+                         "against measured percentiles")
+    ap.add_argument("--sla-tpot-ms", type=float, default=None, metavar="T",
+                    help="p95 per-output-token target (see --sla-ttft-ms)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -61,11 +75,17 @@ def main():
     resolve_spec(args.policy)        # fail on typos before any build work
     if args.draft_spec is not None:
         resolve_spec(args.draft_spec)   # same early failure as --policy
+    sla = None
+    if args.sla_ttft_ms is not None or args.sla_tpot_ms is not None:
+        sla = SLATarget(p95_ttft_ms=args.sla_ttft_ms,
+                        p95_tpot_ms=args.sla_tpot_ms,
+                        window=max(args.requests // 2, 1))
     pipe = deploy(args.arch, args.policy, slots=args.slots,
                   max_len=args.max_len, smoke=args.smoke, paged=args.paged,
                   page_size=args.page_size, num_pages=args.num_pages,
                   horizon=args.horizon, draft_spec=args.draft_spec,
                   draft_lookahead=args.draft_lookahead,
+                  overlap=not args.no_overlap, sla=sla,
                   **impl_routes(args.impl))
     print(f"model bytes {pipe.fp_bytes/2**20:.1f} MB -> "
           f"{pipe.quantized_bytes/2**20:.1f} MB "
@@ -99,28 +119,38 @@ def main():
         print(f"[req {rid}] queued (pending={pipe.engine.num_pending}, "
               f"active={pipe.engine.num_active})")
 
-    outs = pipe.engine.run_until_drained()
-    dt = time.perf_counter() - t0
-    done_tokens = 0
-    for o in sorted(outs, key=lambda o: o.request_id):
-        done_tokens += o.num_generated
+    # outputs stream back as each request finishes, not at the drain
+    outs = []
+    for o in pipe.engine.stream():
+        outs.append(o)
         print(f"[req {o.request_id}] slot {o.slot} {o.finish_reason:6s} "
-              f"ttft {o.stats.ttft_s*1e3:6.1f} ms: {o.token_ids}")
+              f"ttft {o.ttft_ms:6.1f} ms tpot {o.tpot_ms:5.2f} ms: "
+              f"{o.token_ids}")
+    dt = time.perf_counter() - t0
+    done_tokens = sum(o.num_generated for o in outs)
+    m = pipe.engine.metrics()
     line = (f"served {args.requests} requests, {done_tokens} tokens in "
             f"{dt:.2f}s ({done_tokens/dt:.1f} tok/s host, "
-            f"{pipe.engine.prefill_compiles} prefill compiles, "
-            f"{pipe.engine.decode_syncs} decode syncs @ "
-            f"{pipe.engine.mean_tokens_per_sync:.1f} tok/sync, "
-            f"occupancy {pipe.engine.occupancy:.2f}")
+            f"{m.prefill_compiles} prefill compiles, "
+            f"{m.decode_syncs} decode syncs @ "
+            f"{m.mean_tokens_per_sync:.1f} tok/sync, "
+            f"{m.overlap_rounds} overlapped rounds, "
+            f"occupancy {m.occupancy:.2f}")
     if args.paged:
-        line += (f", page util {pipe.engine.page_utilization:.2f}, "
-                 f"kv {pipe.engine.kv_cache_bytes/2**20:.2f} MB")
+        line += (f", page util {m.page_utilization:.2f}, "
+                 f"kv {m.kv_cache_bytes/2**20:.2f} MB")
     if args.draft_spec is not None:
-        line += (f", acceptance {pipe.engine.acceptance_rate:.2f} "
-                 f"({pipe.engine.accepted_tokens}/"
-                 f"{pipe.engine.drafted_tokens} drafted, "
-                 f"{pipe.engine.verify_calls} verify rounds)")
+        line += (f", acceptance {m.acceptance_rate:.2f} "
+                 f"({m.accepted_tokens}/{m.drafted_tokens} drafted, "
+                 f"{m.verify_calls} verify rounds)")
     print(line + ")")
+    if pipe.engine.sla is not None:
+        ctl = pipe.engine.sla
+        held = ctl.holding()
+        print(f"sla: target ttft_p95 {args.sla_ttft_ms} ms / tpot_p95 "
+              f"{args.sla_tpot_ms} ms -> horizon {ctl.horizon}, "
+              f"prefill cap {ctl.prefill_cap}, {ctl.retunes} retunes, "
+              f"held={'n/a' if held is None else held}")
 
 
 if __name__ == "__main__":

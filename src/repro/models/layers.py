@@ -15,7 +15,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from ..core.qlinear import act_quant_eligible, qmatmul
+from ..core.qlinear import act_quant_eligible, qmatmul, quantize_activations
 from ..kernels.fasst import _naf
 from ..parallel import hint, hint_pick
 
@@ -29,6 +29,11 @@ class Ctx:
     """Per-call execution context threaded through model code."""
     compute_dtype: Any = jnp.bfloat16
     act_fmt: str = "bf16"          # matmul act format (bf16 | int8 | fp8)
+    # attention-matmul (QK / PV einsum) activation format — QuantSpec's
+    # x<fmt> slot. These are act x act products with no weight tree, so
+    # they can't route through qmatmul; attn_dot() fake-quants both
+    # operands instead. bf16 = untouched wide-accumulate einsum.
+    attn_act_fmt: str = "bf16"
     attn_impl: str = "full"        # full | chunked
     attn_chunk: int = 1024
     use_fasst_kernel: bool = False # route NAFs through the Pallas kernel
@@ -36,7 +41,9 @@ class Ctx:
     # paged decode attention: "gather" materializes each chain as a
     # dense view (CPU path, bit-identical to the dense engine);
     # "kernel" routes through kernels/paged_attn.py (block-table DMA
-    # walk, write-then-attend — the TPU serving path)
+    # walk, write-then-attend — the TPU serving path). The Pallas
+    # kernel computes QK/PV in bf16 regardless of attn_act_fmt — the
+    # x<fmt> fake-quant route is the "gather"/dense path only.
     paged_attn_impl: str = "gather"
     # calibrated static activation scales for the quantized act paths:
     # a tuple of (site, scale) pairs (hashable, so Ctx stays usable as
@@ -73,6 +80,33 @@ class Ctx:
                                jnp.max(jnp.abs(x.astype(jnp.float32))))
         return qmatmul(x, w, act=self.act_fmt, compute_dtype=self.compute_dtype,
                        impl=self.matmul_impl, act_scale=self.scale_for(site))
+
+    def _attn_fq(self, x, site):
+        """Fake-quantize one attention-matmul operand at the context's
+        attention format: observe the pre-quant f32 absmax when
+        calibrating, quantize at the calibrated static scale (or
+        dynamic per-token absmax), dequantize back to f32."""
+        if self.act_collector is not None:
+            jax.debug.callback(self.act_collector.bind(site),
+                               jnp.max(jnp.abs(x)))
+        codes, scale = quantize_activations(x, fmt=self.attn_act_fmt,
+                                            scale=self.scale_for(site))
+        return codes.astype(jnp.float32) * scale
+
+    def attn_dot(self, subscripts, a, b, site=None):
+        """QK / PV attention einsum with the context's attention route.
+
+        bf16 is bit-identical to the pre-x<fmt> path (one einsum with
+        f32 accumulation). Quantized formats fake-quant BOTH operands —
+        calibration sites "{site}.a" / "{site}.b" — and contract in f32
+        (the sparseml QuantizableMatMul shape: two quantized inputs,
+        wide accumulate, no weight tree involved)."""
+        if self.attn_act_fmt == "bf16":
+            return jnp.einsum(subscripts, a, b,
+                              preferred_element_type=jnp.float32)
+        af = self._attn_fq(a.astype(jnp.float32), f"{site}.a")
+        bf = self._attn_fq(b.astype(jnp.float32), f"{site}.b")
+        return jnp.einsum(subscripts, af, bf)
 
     def naf(self, x, mode):
         if self.use_fasst_kernel:
@@ -192,17 +226,19 @@ def _mask(pos_q, pos_k, window, causal: bool):
     return m
 
 
-def _sdpa(q, k, v, mask, sm_scale):
+def _sdpa(ctx: Ctx, q, k, v, mask, sm_scale, site="attn"):
     """q (B,Sq,Hkv,G,hd), k/v (B,Sk,Hkv,hd), mask (B,Sq,Sk) -> (B,Sq,Hkv,G,hd).
 
     bf16 MXU einsums with f32 accumulation (paper's quire-style wide
-    accumulate, cast once). Scores are explicitly sharding-hinted: KV-head
-    sharding when the head count divides the model axis (Megatron
-    attention), otherwise batch-only (heads replicated on the model axis
-    — revisit per-arch in §Perf).
+    accumulate, cast once); both matmuls route through ctx.attn_dot so
+    the x<fmt> spec slot reaches QK ("{site}.qk") and PV ("{site}.pv").
+    Scores are explicitly sharding-hinted: KV-head sharding when the
+    head count divides the model axis (Megatron attention), otherwise
+    batch-only (heads replicated on the model axis — revisit per-arch
+    in §Perf).
     """
-    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k.astype(q.dtype),
-                        preferred_element_type=jnp.float32) * sm_scale
+    scores = ctx.attn_dot("bqhgd,bkhd->bhgqk", q, k.astype(q.dtype),
+                          site=f"{site}.qk") * sm_scale
     # layout preference: (1) KV-heads on model (zero-comm Megatron attention,
     # kv=16 archs); (2) *query-sequence* on model — softmax over Sk stays
     # local, K/V are gathered once per layer; removes the 16x head
@@ -215,8 +251,7 @@ def _sdpa(q, k, v, mask, sm_scale):
     scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     p = hint_pick(p, *score_specs)
-    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v,
-                     preferred_element_type=jnp.float32)
+    out = ctx.attn_dot("bhgqk,bkhd->bqhgd", p, v, site=f"{site}.pv")
     out = hint_pick(out, ("batch", None, "model", None, None),
                     ("batch", "model", None, None, None), ("batch",))
     return out.astype(v.dtype)
@@ -272,13 +307,14 @@ def attn_apply(ctx: Ctx, params, x, positions, *, num_heads, num_kv_heads,
 
         def body(_, qm):
             qi, mi = qm
-            return None, _sdpa(qi, k, v, mi, sm_scale)
+            return None, _sdpa(ctx, qi, k, v, mi, sm_scale, site=site)
 
         _, oc = jax.lax.scan(body, None,
                              (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(mc, 1, 0)))
         out = jnp.moveaxis(oc, 0, 1).reshape(B, S, H, head_dim)
     else:
-        out = _sdpa(qg, k, v, mask, sm_scale).reshape(B, S, H, head_dim)
+        out = _sdpa(ctx, qg, k, v, mask, sm_scale,
+                    site=site).reshape(B, S, H, head_dim)
 
     out = hint(out, "batch", None, "model", None)
     y = ctx.dot(out.reshape(B, S, H * head_dim), params["wo"],
@@ -322,21 +358,26 @@ def decode_attn_apply(ctx: Ctx, params, x, positions, cache_k, cache_v,
     # commits (and possibly quantizes) k_new/v_new into the cache after.
     sm_scale = head_dim ** -0.5
     cd = qg.dtype
-    s_cache = jnp.einsum("bqhgd,bkhd->bhgqk", qg, cache_k.astype(cd),
-                         preferred_element_type=jnp.float32) * sm_scale
+    # both QK products share the "{site}.qk" calibration site (same q
+    # operand, same key role — the cache and the current token must see
+    # one scale) and the cache-side PV product carries "{site}.pv"; the
+    # e_new * v_new single-token term is an elementwise f32 product, not
+    # a matmul, so it stays full-precision
+    s_cache = ctx.attn_dot("bqhgd,bkhd->bhgqk", qg, cache_k.astype(cd),
+                           site=f"{site}.qk") * sm_scale
     s_cache = hint_pick(s_cache, ("batch", "model", None, None, None),
                         ("batch", None, None, None, "model"), ("batch",))
     mask = _mask(positions, cache_positions, window, causal=True)  # (B,1,S)
     s_cache = jnp.where(mask[:, None, None, :, :], s_cache, -1e30)
-    s_new = jnp.einsum("bqhgd,bqhd->bhgq", qg, k_new.astype(cd),
-                       preferred_element_type=jnp.float32)[..., None] * sm_scale
+    s_new = ctx.attn_dot("bqhgd,bqhd->bhgq", qg, k_new.astype(cd),
+                         site=f"{site}.qk")[..., None] * sm_scale
 
     m = jnp.maximum(jnp.max(s_cache, axis=-1, keepdims=True), s_new)
     e_cache = jnp.exp(s_cache - m)                       # (B,Hkv,G,1,S)
     e_new = jnp.exp(s_new - m)                           # (B,Hkv,G,1,1)
     denom = jnp.sum(e_cache, axis=-1, keepdims=True) + e_new
-    out = jnp.einsum("bhgqk,bkhd->bqhgd", e_cache.astype(cd),
-                     cache_v.astype(cd), preferred_element_type=jnp.float32)
+    out = ctx.attn_dot("bhgqk,bkhd->bqhgd", e_cache.astype(cd),
+                       cache_v.astype(cd), site=f"{site}.pv")
     out = out + e_new.transpose(0, 3, 1, 2, 4) * v_new[:, :, :, None, :].astype(jnp.float32)
     out = out / denom.transpose(0, 3, 1, 2, 4)
     out = hint_pick(out, ("batch", None, "model", None, None), ("batch",))

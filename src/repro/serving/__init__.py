@@ -2,13 +2,21 @@
 
 Canonical path:  deploy() -> TranslationPipeline -> SamplingParams /
 Request / RequestOutput, scheduled by the queue-owning ServeEngine
-(submit / step / run_until_drained). `greedy_generate` / `translate`
-remain as thin single-shot wrappers for legacy callers. Speculative
-decoding deploys a second arm of the same checkpoint via
+(submit / step / run_until_drained / stream). Tokens stream as each
+fused horizon block lands — `submit(..., on_token=cb)`,
+`engine.stream_request(...)`, `pipe.translate_stream(...)` — and
+`deploy(..., sla=SLATarget(...))` attaches percentile-feedback
+admission control; `engine.metrics()` returns the one frozen
+EngineMetrics snapshot every benchmark reads. Speculative decoding
+deploys a second arm of the same checkpoint via
 `deploy(..., draft_spec=...)` (see spec_decode).
+
+`greedy_generate` / `translate` remain as deprecated single-shot
+wrappers for legacy callers.
 """
 
 from .engine import ServeEngine, greedy_generate, translate
+from .metrics import EngineMetrics, SLATarget
 from .paged_cache import PageAllocator, pages_needed
 from .params import (GREEDY, Request, RequestOutput, RequestStats,
                      SamplingParams, latency_percentiles)
@@ -19,4 +27,5 @@ __all__ = ["ServeEngine", "greedy_generate", "translate", "SamplingParams",
            "GREEDY", "Request", "RequestOutput", "RequestStats",
            "latency_percentiles", "TranslationPipeline", "deploy",
            "PageAllocator", "pages_needed", "impl_routes", "IMPL_CHOICES",
-           "DraftArm", "accept_longest_prefix", "build_draft_arm"]
+           "DraftArm", "accept_longest_prefix", "build_draft_arm",
+           "EngineMetrics", "SLATarget"]

@@ -11,6 +11,37 @@ EOS-aware retirement — behind three calls:
     outs = engine.step()       # admit + one fused decode horizon
     outs = engine.run_until_drained()                   # serve everything
 
+Streaming + the overlapped scheduler
+------------------------------------
+``submit(..., on_token=cb)`` registers a per-request streaming callback:
+the engine fires it with each token id as the horizon block carrying
+that token lands on the host (first token at prefill). ``stream()``
+yields RequestOutputs as requests finish; ``stream_request()`` submits
+one request and yields its tokens as they arrive.
+
+Internally everything drains through ONE loop, ``_rounds()``: a
+double-buffered step generator that dispatches horizon N+1 *before*
+syncing horizon N's token block, using the scan's own final alive/rem
+carry as the next scan's masks. JAX async dispatch makes this the whole
+trick — the host walk of block N (retire/stream/admit, all Python) runs
+while the device is already busy with N+1, and freed slots refill from
+the prompt queue between dispatches instead of waiting for a drain
+point. The in-scan retirement rule (EOS + budget) is exactly the rule
+the host walk applies, so the device carry always equals the host's
+post-walk view for continuing slots; slots admitted or aborted between
+dispatches are merged in from host state (``_dirty_slots``). Token
+streams are token-for-token identical to serial stepping at any horizon
+— slots never attend to each other, so overlap moves *when* work
+happens, never *what* is computed. ``run_until_drained`` is a thin
+wrapper over this loop; ``overlap=False`` (or ``horizon=1``, or a draft
+arm, whose speculative rounds are host decision points) degrades it to
+the serial dispatch-then-walk order.
+
+With ``sla=SLATarget(...)`` an ``SLAController`` folds every retired
+request's TTFT/TPOT into a sliding window and retunes the effective
+horizon and the paged prefill-group cap against the measured p95s (see
+serving/metrics.py).
+
 The horizon knob
 ----------------
 ``step(horizon=K)`` (default: the engine's ``horizon``, default 1) runs
@@ -76,7 +107,8 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+import warnings
+from typing import Callable, Dict, Iterator, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +116,7 @@ import numpy as np
 
 from ..models.api import decode_block
 from ..models.layers import Ctx
+from .metrics import EngineMetrics, SLAController, SLATarget
 from .paged_cache import TRASH_PAGE, PageAllocator, paged_insert, pages_needed
 from .params import (GREEDY, Request, RequestOutput, RequestStats,
                      SamplingParams)
@@ -125,7 +158,8 @@ class ServeEngine:
                  paged: bool = False, page_size: int = 8,
                  num_pages: Optional[int] = None,
                  max_src_len: Optional[int] = None, horizon: int = 1,
-                 draft: Optional[DraftArm] = None):
+                 draft: Optional[DraftArm] = None, overlap: bool = True,
+                 sla: Optional[SLATarget] = None):
         if horizon < 1:
             raise ValueError(f"horizon must be >= 1, got {horizon}")
         self.model = model
@@ -213,6 +247,13 @@ class ServeEngine:
         self._drafted = 0
         self._accepted = 0
         self._rejected = 0
+        self.overlap = bool(overlap)      # dispatch horizon N+1 before
+        self._overlap_rounds = 0          # ... syncing horizon N's block
+        # slots (re)admitted since the last horizon dispatch: the carry
+        # merge must take THEIR masks from host state, not the device
+        self._dirty_slots: set = set()
+        self.sla = (SLAController(sla, self.horizon, slots)
+                    if sla is not None else None)
 
         fam = model.cfg.family
         self._tkey = "tgt_in" if fam in ("encdec", "audio") else "tokens"
@@ -299,7 +340,8 @@ class ServeEngine:
     # request API
     # ------------------------------------------------------------------
 
-    def submit(self, request, params: Optional[SamplingParams] = None) -> int:
+    def submit(self, request, params: Optional[SamplingParams] = None, *,
+               on_token: Optional[Callable[[int], None]] = None) -> int:
         """Enqueue a request; returns its request id.
 
         ``request`` is a Request or a B=1 model batch dict; ``params``
@@ -307,11 +349,19 @@ class ServeEngine:
         dense engine the request is admitted immediately when a slot is
         free; on a paged engine admission happens at the next step() so
         a burst of submits lands as one batched multi-slot prefill.
+
+        ``on_token`` (or ``Request.on_token``) is the streaming hook:
+        called with each generated token id as the horizon block
+        carrying it lands on the host — the first token fires during
+        prefill admission, before submit() even returns on a dense
+        engine. Callbacks run on the scheduler walk; keep them cheap.
         """
         if not isinstance(request, Request):
             request = Request(inputs=dict(request), params=params or GREEDY)
         elif params is not None:
             request = dataclasses.replace(request, params=params)
+        if on_token is not None:
+            request = dataclasses.replace(request, on_token=on_token)
         toks = jnp.asarray(request.inputs[self._tkey])
         if toks.ndim == 1:
             toks = toks[None]
@@ -371,87 +421,296 @@ class ServeEngine:
         much of the queue as freed slots (and, when paged, freed pages)
         allow, so slots refill at horizon boundaries instead of waiting
         for a full drain."""
-        K = self.horizon if horizon is None else int(horizon)
-        if K < 1:
-            raise ValueError(f"horizon must be >= 1, got {K}")
+        K = self._effective_horizon(horizon)
         self._admit_pending()
         n_active = sum(s.active for s in self.slots)
-        # speculative rounds need exact-match acceptance, which only
-        # reproduces greedy sampling: any sampled request in the batch
-        # falls the whole step back to the target-only path (the draft
-        # cache goes stale — harmless, verification is target-owned)
-        speculate = (n_active and self.draft is not None
-                     and all(s.request.params.greedy
-                             for s in self.slots if s.active))
-        if not speculate and n_active and K > 1:
+        if self._speculate_now():
+            self._spec_round()
+        elif n_active and K == 1:
+            self._token_step()
+        elif n_active:
             # clamp the scan to the (power-of-two-bucketed) largest
             # remaining budget among active slots: an over-long horizon
             # must not burn batched micro-steps every slot has already
             # retired out of, and bucketing keeps compiled scan lengths
             # bounded by log2(max_len), not one per distinct budget
-            max_rem = max(s.request.params.max_new_tokens - len(s.tokens)
-                          for s in self.slots if s.active)
-            K = min(K, self._bucket(max_rem))
-        if speculate:
-            self._spec_round()
-        elif n_active and K == 1:
-            self._decode_steps += 1
-            self._active_slot_steps += n_active
-            if self.paged:
-                self._page_slot_steps += self.allocator.pages_in_use
-            self.cache, nxt = self._step_fn(
-                self.params, self.cur, self.cache, self._temps,
-                self._top_ks, self._top_ps, self._keys, self._offsets)
-            self.cur = nxt[:, None]
-            self._offsets = self._offsets + 1
-            self._decode_syncs += 1
-            nxt_host = np.asarray(nxt)          # one sync per token
-            for s in self.slots:
-                if not s.active:
-                    continue
-                s.tokens.append(int(nxt_host[s.id]))
-                self._synced_tokens += 1
-                self._maybe_retire(s)
-        elif n_active:
-            self._decode_steps += K
-            if self.paged:
-                self._page_slot_steps += K * self.allocator.pages_in_use
-            fn = self._horizon_fns.get(K)
-            if fn is None:
-                fn = self._horizon_fns[K] = self._make_horizon_fn(K)
-            alive, rem, eos = self._scan_masks()
-            self.cache, self.cur, self._offsets, block = fn(
-                self.params, self.cur, self.cache, self._temps,
-                self._top_ks, self._top_ps, self._keys, self._offsets,
-                alive, rem, eos)
-            self._decode_syncs += 1
-            blk = np.asarray(block)             # one sync per horizon
-            for s in self.slots:
-                if not s.active:
-                    continue
-                for t in range(K):              # walk until retirement
-                    s.tokens.append(int(blk[t, s.id]))
-                    self._synced_tokens += 1
-                    self._active_slot_steps += 1
-                    self._maybe_retire(s)
-                    if not s.active:
-                        break
-        out, self._finished = self._finished, []
-        return out
+            _, _, block, Kd = self._dispatch_horizon(
+                min(K, self._bucket(self._max_rem())))
+            self._walk_block(block, Kd)
+        return self._take_finished()
 
     def run_until_drained(self, max_steps: int = 1_000_000,
                           horizon: Optional[int] = None
                           ) -> List[RequestOutput]:
         """Serve every queued/in-flight request; returns all outputs.
 
-        ``horizon`` overrides the engine default for every step."""
-        outs: List[RequestOutput] = []
-        while self._queue or self._finished or any(s.active for s in self.slots):
-            outs.extend(self.step(horizon))
-            max_steps -= 1
-            if max_steps <= 0:
-                raise RuntimeError("run_until_drained did not converge")
+        Thin wrapper over the overlapped round loop (``_rounds``):
+        token-for-token identical to serial stepping at any horizon,
+        but the host walk of each synced block runs while the next
+        horizon is already dispatched on device (``overlap=False``
+        restores the serial order). ``horizon`` overrides the engine
+        default for every round."""
+        outs: List[RequestOutput] = list(self._take_finished())
+        for _ in self._rounds(horizon, max_rounds=max_steps):
+            outs.extend(self._take_finished())
+        outs.extend(self._take_finished())
         return outs
+
+    def stream(self, horizon: Optional[int] = None,
+               on_round: Optional[Callable[[], None]] = None,
+               max_rounds: int = 1_000_000
+               ) -> Iterator[RequestOutput]:
+        """Serve until drained, yielding each RequestOutput as its
+        request finishes (same overlapped loop as run_until_drained).
+
+        ``on_round`` is called once after every scheduler round —
+        external drivers inject new arrivals there (bench_serving
+        ``--rate`` submits its Poisson arrivals from it), and work
+        submitted by the callback keeps the loop alive. Note the
+        callback never fires on an engine that is already drained at
+        call time (the loop exits before its first round)."""
+        yield from self._take_finished()
+        for _ in self._rounds(horizon, max_rounds=max_rounds):
+            if on_round is not None:
+                on_round()
+            yield from self._take_finished()
+        yield from self._take_finished()
+
+    def stream_request(self, request,
+                       params: Optional[SamplingParams] = None,
+                       horizon: Optional[int] = None) -> Iterator[int]:
+        """Submit ONE request and yield its token ids as each horizon
+        block lands; the finished RequestOutput is the generator's
+        return value (``StopIteration.value``).
+
+        Other in-flight requests keep being served while this one
+        streams — their outputs stay claimable via run_until_drained()
+        / stream(). If the request is aborted externally mid-stream the
+        generator ends and returns None (abort() hands the output to
+        its own caller)."""
+        buf: List[int] = []
+        rid = self.submit(request, params, on_token=buf.append)
+
+        def claim():
+            for i, o in enumerate(self._finished):
+                if o.request_id == rid:
+                    return self._finished.pop(i)
+            return None
+
+        out = claim()       # dense prefill may already have finished it
+        while buf:
+            yield buf.pop(0)
+        rounds = self._rounds(horizon)
+        try:
+            while out is None:
+                try:
+                    next(rounds)
+                except (StopIteration, RuntimeError):
+                    break   # drained (abort) or round budget exhausted
+                while buf:
+                    yield buf.pop(0)
+                out = claim()
+        finally:
+            # closing the round loop walks any dispatched-ahead block,
+            # so other slots' synced tokens are never dropped
+            rounds.close()
+        while buf:
+            yield buf.pop(0)
+        return out
+
+    def _take_finished(self) -> List[RequestOutput]:
+        out, self._finished = self._finished, []
+        return out
+
+    def _effective_horizon(self, horizon: Optional[int]) -> int:
+        """Resolve one round's horizon: explicit arg > SLA controller >
+        engine default."""
+        if horizon is not None:
+            K = int(horizon)
+        elif self.sla is not None:
+            K = self.sla.horizon
+        else:
+            K = self.horizon
+        if K < 1:
+            raise ValueError(f"horizon must be >= 1, got {K}")
+        return K
+
+    def _speculate_now(self) -> bool:
+        # speculative rounds need exact-match acceptance, which only
+        # reproduces greedy sampling: any sampled request in the batch
+        # falls the whole step back to the target-only path (the draft
+        # cache goes stale — harmless, verification is target-owned)
+        return (self.draft is not None
+                and any(s.active for s in self.slots)
+                and all(s.request.params.greedy
+                        for s in self.slots if s.active))
+
+    def _max_rem(self) -> int:
+        """Largest remaining token budget among active slots (host view)."""
+        rems = [s.request.params.max_new_tokens - len(s.tokens)
+                for s in self.slots if s.active]
+        return max(rems) if rems else 0
+
+    def _emit(self, s: _Slot, tok: int, synced: bool = True) -> None:
+        """Deliver one token to a slot's request: append, count, fire
+        the streaming callback, retire on EOS/budget. ``synced=False``
+        marks the prefill-produced first token (it never crossed the
+        decode sync path)."""
+        s.tokens.append(tok)
+        if synced:
+            self._synced_tokens += 1
+        cb = s.request.on_token
+        if cb is not None:
+            cb(tok)
+        if s.active:    # the callback may have aborted its own request
+            self._maybe_retire(s)
+
+    def _token_step(self) -> None:
+        """The legacy horizon=1 path: one fused decode+sample dispatch,
+        one host sync per token."""
+        self._decode_steps += 1
+        self._active_slot_steps += sum(s.active for s in self.slots)
+        if self.paged:
+            self._page_slot_steps += self.allocator.pages_in_use
+        self.cache, nxt = self._step_fn(
+            self.params, self.cur, self.cache, self._temps,
+            self._top_ks, self._top_ps, self._keys, self._offsets)
+        self.cur = nxt[:, None]
+        self._offsets = self._offsets + 1
+        self._decode_syncs += 1
+        nxt_host = np.asarray(nxt)          # one sync per token
+        for s in self.slots:
+            if s.active:
+                self._emit(s, int(nxt_host[s.id]))
+
+    def _dispatch_horizon(self, K: int, carry=None):
+        """Dispatch one K-step fused horizon WITHOUT syncing its block.
+
+        Returns ``(alive, rem, block, K)`` — all device handles except
+        K. ``carry=None`` builds the scan masks from host slot state
+        (the serial path). ``carry=(alive, rem)`` reuses the previous
+        dispatch's device-side final carry, so this scan launches while
+        the host is still walking that block: the in-scan retirement
+        rule computes exactly the alive/rem the host walk will arrive
+        at for continuing slots. Slots touched since that dispatch are
+        merged from host state — fresh admissions override with their
+        own masks (the carry says dead), aborts force alive to 0 via
+        the min (their in-flight micro-steps waste masked compute
+        only). eos/sampling arrays are always host-rebuilt: stale
+        values sit behind a zero alive mask.
+        """
+        self._decode_steps += K
+        if self.paged:
+            self._page_slot_steps += K * self.allocator.pages_in_use
+        fn = self._horizon_fns.get(K)
+        if fn is None:
+            fn = self._horizon_fns[K] = self._make_horizon_fn(K)
+        alive_h, rem_h, eos = self._scan_masks()
+        if carry is None:
+            alive, rem = alive_h, rem_h
+        else:
+            alive_c, rem_c = carry
+            fresh = np.zeros((self.n_slots,), bool)
+            for sid in self._dirty_slots:
+                fresh[sid] = True
+            fresh = jnp.asarray(fresh)
+            alive = jnp.where(fresh, alive_h, jnp.minimum(alive_c, alive_h))
+            rem = jnp.where(fresh, rem_h, rem_c)
+        self._dirty_slots.clear()
+        self.cache, self.cur, self._offsets, alive_o, rem_o, block = fn(
+            self.params, self.cur, self.cache, self._temps, self._top_ks,
+            self._top_ps, self._keys, self._offsets, alive, rem, eos)
+        return alive_o, rem_o, block, K
+
+    def _walk_block(self, block, K: int) -> None:
+        """Sync one dispatched (K, slots) token block and walk it on
+        the host: emit/stream/retire exactly as the serial horizon
+        path. A block every slot already retired out of (possible for a
+        dispatched-ahead horizon that an EOS invalidated) is dropped
+        without syncing."""
+        if not any(s.active for s in self.slots):
+            return
+        self._decode_syncs += 1
+        blk = np.asarray(block)             # one sync per horizon
+        for s in self.slots:
+            if not s.active:
+                continue
+            for t in range(K):              # walk until retirement
+                self._active_slot_steps += 1
+                self._emit(s, int(blk[t, s.id]))
+                if not s.active:
+                    break
+
+    def _ahead_horizon(self, K_cfg: int, Kd: int) -> int:
+        """Length of the next scan to dispatch before walking the
+        in-flight Kd-step block, or 0 to stay serial. Dispatch-ahead
+        only pays when some slot's budget outlasts the in-flight block
+        (otherwise the extra scan is all-masked waste and would skew
+        sync counts vs the serial engine); a draft arm disables it —
+        speculative rounds are host decision points and remain the
+        faster path for greedy batches."""
+        if not self.overlap or K_cfg <= 1 or self.draft is not None:
+            return 0
+        rem_after = self._max_rem() - Kd
+        if rem_after <= 0:
+            return 0
+        return min(K_cfg, self._bucket(rem_after))
+
+    def _rounds(self, horizon: Optional[int] = None,
+                max_rounds: int = 1_000_000) -> Iterator[None]:
+        """The overlapped scheduler loop; yields once per round.
+
+        Round shape: admit pending prompts into freed slots, then —
+        with a block in flight — dispatch the NEXT horizon from the
+        in-flight scan's device carry and only then sync+walk the
+        block, so the Python walk (retire, stream callbacks, admission)
+        overlaps the device's work on horizon N+1. Speculative rounds
+        and horizon=1 run serially through their legacy paths (still
+        streaming). Finished outputs accumulate in ``_finished`` for
+        the caller to claim between rounds; closing the generator early
+        walks any dispatched-ahead block first, so engine host state
+        stays consistent with the device."""
+        pending = None
+        rounds = 0
+        try:
+            while True:
+                self._admit_pending()
+                if (pending is None and not self._queue
+                        and not any(s.active for s in self.slots)):
+                    return
+                rounds += 1
+                if rounds > max_rounds:
+                    raise RuntimeError("run_until_drained did not converge")
+                if pending is not None:
+                    alive_d, rem_d, block, Kd = pending
+                    pending = None
+                    nk = self._ahead_horizon(
+                        self._effective_horizon(horizon), Kd)
+                    if nk:
+                        pending = self._dispatch_horizon(
+                            nk, carry=(alive_d, rem_d))
+                        self._overlap_rounds += 1
+                    self._walk_block(block, Kd)
+                elif any(s.active for s in self.slots):
+                    K = self._effective_horizon(horizon)
+                    if self._speculate_now():
+                        self._spec_round()
+                    elif K == 1:
+                        self._token_step()
+                    else:
+                        pending = self._dispatch_horizon(
+                            min(K, self._bucket(self._max_rem())))
+                        if not self.overlap:
+                            _, _, block, Kd = pending
+                            pending = None
+                            self._walk_block(block, Kd)
+                # else: queue blocked with nothing active — a no-op
+                # round; the round budget turns a livelock into the
+                # legacy non-convergence error
+                yield
+        finally:
+            if pending is not None:
+                self._walk_block(pending[2], pending[3])
 
     def abort(self, request_id: int) -> Optional[RequestOutput]:
         """Cancel a queued or in-flight request. Returns its output
@@ -490,19 +749,53 @@ class ServeEngine:
         bounded by the bucket count, not the number of prompt lengths)."""
         return len(self.prefill_shapes)
 
+    def metrics(self) -> EngineMetrics:
+        """One frozen snapshot of every engine counter, ratio, and
+        gauge — the single read surface for benchmarks, the eval suite,
+        and launchers (the individual properties remain for
+        back-compat)."""
+        return EngineMetrics(
+            decode_steps=self._decode_steps,
+            decode_syncs=self._decode_syncs,
+            synced_tokens=self._synced_tokens,
+            active_slot_steps=self._active_slot_steps,
+            page_slot_steps=self._page_slot_steps,
+            overlap_rounds=self._overlap_rounds,
+            verify_calls=self._verify_calls,
+            drafted_tokens=self._drafted,
+            accepted_tokens=self._accepted,
+            rejected_tokens=self._rejected,
+            mean_tokens_per_sync=self.mean_tokens_per_sync,
+            occupancy=self.occupancy,
+            page_utilization=self.page_utilization,
+            acceptance_rate=self.acceptance_rate,
+            mean_accepted_per_verify=self.mean_accepted_per_verify,
+            kv_cache_bytes=self.kv_cache_bytes,
+            prefill_compiles=self.prefill_compiles)
+
     def reset_metrics(self) -> None:
-        """Zero the occupancy/page-utilization/host-sync and
-        speculative-decode accumulators (e.g. after a warmup pass, so
-        reported numbers cover only the measured run)."""
+        """Zero every EngineMetrics counter (occupancy/page-utilization/
+        host-sync/overlap/speculative-decode accumulators — e.g. after a
+        warmup pass, so reported numbers cover only the measured run).
+        The EngineMetrics.GAUGES fields are live state, not accumulation,
+        and are unaffected."""
         self._decode_steps = 0
         self._active_slot_steps = 0
         self._page_slot_steps = 0
         self._decode_syncs = 0
         self._synced_tokens = 0
+        self._overlap_rounds = 0
         self._verify_calls = 0
         self._drafted = 0
         self._accepted = 0
         self._rejected = 0
+
+    @property
+    def overlap_rounds(self) -> int:
+        """Rounds where the next horizon was dispatched before the
+        previous block's host sync — each one is a host walk whose cost
+        the device hid behind real work (the overlap tripwire metric)."""
+        return self._overlap_rounds
 
     @property
     def verify_calls(self) -> int:
@@ -662,6 +955,11 @@ class ServeEngine:
         ``ctx`` overrides the engine Ctx — the speculative draft scan
         reuses this exact compiled shape against the draft arm's ctx,
         params, and cache (params and cache are traced arguments).
+
+        The scan's FINAL alive/rem carry is returned alongside the
+        block: it equals the host's post-walk view of the slots (same
+        EOS/budget rule), which is what lets the overlapped loop
+        dispatch horizon N+1 from it before the host has walked N.
         """
         model, ctx = self.model, ctx or self.ctx
         set_active = self._mask_active or self.paged
@@ -683,9 +981,9 @@ class ServeEngine:
                 alive = jnp.where(hit_eos | (rem <= 0), 0, alive)
                 return (cache, tok[:, None], offsets + 1, alive, rem), tok
 
-            (cache, cur, offsets, _, _), block = jax.lax.scan(
+            (cache, cur, offsets, alive, rem), block = jax.lax.scan(
                 body, (cache, cur, offsets, alive, rem), None, length=K)
-            return cache, cur, offsets, block
+            return cache, cur, offsets, alive, rem, block
 
         return jax.jit(_horizon)
 
@@ -759,7 +1057,7 @@ class ServeEngine:
         # the draft scan must not retire anyone — acceptance is the
         # verify pass's call: no EOS ids, budget that outlasts the scan
         rem = (K + 1) * alive
-        self.draft_cache, _, _, block = dfn(
+        self.draft_cache, _, _, _, _, block = dfn(
             draft.params, self.cur, self.draft_cache, self._z_f,
             self._z_i, self._o_f, self._z_keys, self._z_i, alive, rem,
             self._no_eos)
@@ -783,10 +1081,8 @@ class ServeEngine:
             self._accepted += a
             self._rejected += K - a
             for t in range(int(n_emit[s.id])):
-                s.tokens.append(int(blk[t, s.id]))
-                self._synced_tokens += 1
                 self._active_slot_steps += 1
-                self._maybe_retire(s)
+                self._emit(s, int(blk[t, s.id]))
                 if not s.active:
                     break
 
@@ -854,6 +1150,10 @@ class ServeEngine:
         over it, so no request starves.
         """
         free = sum(not s.active for s in self.slots)
+        if self.sla is not None:
+            # SLA-tuned prefill group cap: smaller admission batches get
+            # queued heads to their first token sooner when TTFT slips
+            free = min(free, self.sla.prefill_cap)
         if not free or not self._queue:
             return []
         head_key = self._shape_key(self._queue[0])
@@ -934,11 +1234,12 @@ class ServeEngine:
             if self.draft is not None:
                 self._draft_chains[r.id] = dchains[i]
             s.request = r
-            s.tokens = [tok]
+            s.tokens = []
             s.active = True
             self._last_admitted_slot = sid
+            self._dirty_slots.add(sid)
             self._stats[r.id].first_token_s = now
-            self._maybe_retire(s)
+            self._emit(s, tok, synced=False)
 
     # -- dense admission -----------------------------------------------
 
@@ -976,11 +1277,12 @@ class ServeEngine:
         self._keys = self._keys.at[slot].set(key)
         self._offsets = self._offsets.at[slot].set(1)  # token 0 drew fold 0
         s.request = request
-        s.tokens = [tok]                # prefill produced the first token
+        s.tokens = []                   # prefill produced the first token
         s.active = True
         self._last_admitted_slot = slot
+        self._dirty_slots.add(slot)
         self._stats[request.id].first_token_s = time.perf_counter()
-        self._maybe_retire(s)
+        self._emit(s, tok, synced=False)
 
     def _maybe_retire(self, s: _Slot):
         sp = s.request.params
@@ -994,8 +1296,13 @@ class ServeEngine:
         st = self._stats.pop(rid)
         st.finished_s = time.perf_counter()
         st.new_tokens = len(s.tokens)
-        self._finished.append(RequestOutput(
-            rid, s.request.inputs, list(s.tokens), reason, st, slot=s.id))
+        out = RequestOutput(
+            rid, s.request.inputs, list(s.tokens), reason, st, slot=s.id)
+        self._finished.append(out)
+        if self.sla is not None and reason != "abort":
+            # aborts carry caller-truncated timings; feeding them to the
+            # percentile window would reward cancelling slow requests
+            self.sla.observe(out)
         s.active = False
         s.request = None
         if self.paged:
@@ -1062,8 +1369,27 @@ def _row(batch: dict, i: int) -> dict:
             if hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1}
 
 
+_DEPRECATION = (
+    " is deprecated and will be removed: deploy() a TranslationPipeline "
+    "from repro.serving and use pipe.generate()/pipe.translate() — or the "
+    "streaming surface (pipe.translate_stream / engine.submit(on_token=...)"
+    " / engine.stream()) for token-at-a-time delivery")
+
+
 def greedy_generate(model, ctx, params, batch, *, steps: int, max_len: int,
                     kv_dtype: str = "bf16", eos_id: Optional[int] = None):
+    """Deprecated prefill + greedy decode shim; see ``_DEPRECATION``.
+
+    Returns (tokens (B, steps), cache)."""
+    warnings.warn("greedy_generate" + _DEPRECATION, DeprecationWarning,
+                  stacklevel=2)
+    return _greedy_generate(model, ctx, params, batch, steps=steps,
+                            max_len=max_len, kv_dtype=kv_dtype,
+                            eos_id=eos_id)
+
+
+def _greedy_generate(model, ctx, params, batch, *, steps: int, max_len: int,
+                     kv_dtype: str = "bf16", eos_id: Optional[int] = None):
     """Prefill + greedy decode. Returns (tokens (B, steps), cache).
 
     Thin wrapper over a single-shot ServeEngine (one slot per batch row).
@@ -1087,12 +1413,16 @@ def greedy_generate(model, ctx, params, batch, *, steps: int, max_len: int,
 def translate(model, ctx, params, src_tokens, lang_code: int, *,
               steps: int, max_len: int = 0,
               kv_dtype: str = "bf16", eos_id: Optional[int] = None):
-    """NMT entry point (paper Fig. 2b): many-to-many via target lang code.
+    """Deprecated NMT shim (paper Fig. 2b): many-to-many via target lang
+    code; see ``_DEPRECATION`` — TranslationPipeline.translate /
+    translate_stream is the supported surface.
 
     ``max_len`` defaults to the decoder prompt length (the 1-token lang
     code) + ``steps``; an explicit ``max_len`` too small for the request
     raises instead of silently wrapping the KV cache.
     """
+    warnings.warn("translate" + _DEPRECATION, DeprecationWarning,
+                  stacklevel=2)
     B = src_tokens.shape[0]
     prompt_len = 1                       # decoder prompt = target lang code
     max_len = max_len or prompt_len + steps
@@ -1102,7 +1432,7 @@ def translate(model, ctx, params, src_tokens, lang_code: int, *,
             f"= {prompt_len + steps} cache positions but max_len={max_len}")
     tgt_in = jnp.full((B, 1), lang_code, jnp.int32)
     batch = {"src_tokens": src_tokens, "tgt_in": tgt_in}
-    toks, _ = greedy_generate(model, ctx, params, batch, steps=steps,
-                              max_len=max_len, kv_dtype=kv_dtype,
-                              eos_id=eos_id)
+    toks, _ = _greedy_generate(model, ctx, params, batch, steps=steps,
+                               max_len=max_len, kv_dtype=kv_dtype,
+                               eos_id=eos_id)
     return toks

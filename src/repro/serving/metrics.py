@@ -1,0 +1,191 @@
+"""Engine-level serving metrics and SLA-aware admission control.
+
+``EngineMetrics`` is the one snapshot type for everything the engine
+counts: the ad-hoc attribute zoo (``decode_syncs``, ``acceptance_rate``,
+``verify_calls``, ``occupancy``, ...) that benchmarks and the eval suite
+used to read one attribute at a time is now a single frozen dataclass
+returned by ``ServeEngine.metrics()``. Counters accumulate across rounds
+and reset together via ``reset_metrics()``; the two gauge fields
+(``kv_cache_bytes``, ``prefill_compiles``) are recomputed from live
+engine state at snapshot time — a gauge has no accumulation to reset, so
+``EngineMetrics.GAUGES`` names them and the reset test asserts every
+field *outside* that set returns to zero.
+
+``SLATarget`` + ``SLAController`` close the serving loop on latency:
+``deploy(..., sla=SLATarget(p95_ttft_ms=...))`` attaches a controller
+that folds every retired request's TTFT/TPOT into a sliding window and
+retunes two admission knobs against the measured p95s —
+
+* the effective fused-decode **horizon** (a long scan amortizes the host
+  sync, so it lowers TPOT, but admission waits for scan boundaries, so
+  it raises queued-prompt TTFT), and
+* the paged **prefill group cap** (how many queued prompts one batched
+  prefill admits; a big group compiles fewer shapes but holds the queue
+  head hostage to stragglers).
+
+The controller is deliberately percentile-feedback only — it never
+inspects queue depth or arrival-rate estimates, so the same policy works
+under ``bench_serving --rate`` Poisson load and bursty real traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, List, Optional, Tuple
+
+__all__ = ["EngineMetrics", "SLATarget", "SLAController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineMetrics:
+    """Frozen snapshot of every engine counter + derived ratio.
+
+    All fields except those named in ``GAUGES`` are run-scoped: they
+    start at zero, accumulate monotonically, and ``reset_metrics()``
+    zeroes them (benchmarks reset after warmup so compile time never
+    pollutes measured rates).
+    """
+
+    # decode-loop counters
+    decode_steps: int            # decode micro-steps dispatched (incl. masked)
+    decode_syncs: int            # host blocks on a device token buffer
+    synced_tokens: int           # tokens actually emitted to requests
+    active_slot_steps: int       # slot-steps that served a live request
+    page_slot_steps: int         # page-steps attended (paged occupancy basis)
+    overlap_rounds: int          # horizons dispatched before the previous sync
+    # speculative-decoding counters
+    verify_calls: int
+    drafted_tokens: int
+    accepted_tokens: int
+    rejected_tokens: int
+    # derived ratios (0.0 when the denominator counter is still zero)
+    mean_tokens_per_sync: float
+    occupancy: float             # active slot-steps / dispatched slot-steps
+    page_utilization: float
+    acceptance_rate: float
+    mean_accepted_per_verify: float
+    # gauges — live engine state, not resettable accumulation
+    kv_cache_bytes: int
+    prefill_compiles: int
+
+    GAUGES: ClassVar[Tuple[str, ...]] = ("kv_cache_bytes", "prefill_compiles")
+
+    def as_dict(self) -> Dict[str, float]:
+        """Plain dict for JSON rows (benchmarks, eval reports)."""
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class SLATarget:
+    """Latency objectives for SLA-aware admission.
+
+    Either percentile target may be ``None`` (unconstrained). ``window``
+    is how many request completions feed one retune decision — small
+    windows react fast but chase noise; the default suits smoke-scale
+    benchmarks. ``min_horizon``/``max_horizon`` bound the controller
+    (``max_horizon=None`` means the deployed horizon is the ceiling).
+    """
+
+    p95_ttft_ms: Optional[float] = None
+    p95_tpot_ms: Optional[float] = None
+    window: int = 16
+    min_horizon: int = 1
+    max_horizon: Optional[int] = None
+
+    def __post_init__(self):
+        if self.p95_ttft_ms is None and self.p95_tpot_ms is None:
+            raise ValueError("SLATarget needs p95_ttft_ms or p95_tpot_ms "
+                             "(both None constrains nothing)")
+        for name in ("p95_ttft_ms", "p95_tpot_ms"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be positive, got {v}")
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
+        if self.min_horizon < 1:
+            raise ValueError("min_horizon must be >= 1")
+        if self.max_horizon is not None and self.max_horizon < self.min_horizon:
+            raise ValueError("max_horizon < min_horizon")
+
+
+class SLAController:
+    """Percentile feedback loop over request completions.
+
+    The engine calls ``observe(output)`` at every retirement; once a full
+    window has accumulated the controller compares measured p95 TTFT/TPOT
+    against the target and moves its two knobs:
+
+    * p95 TTFT over target → **halve the horizon** and **halve the
+      prefill group cap**: queued prompts admit at scan boundaries, so
+      shorter scans and smaller admission groups get first tokens out
+      sooner at some sync-rate cost.
+    * p95 TPOT over target (TTFT fine) → **double the horizon** back:
+      steady-state token cadence is gated by host syncs per token.
+    * both under target → relax one step toward the deployed
+      configuration (horizon first, then group cap), so a transient
+      burst doesn't pin the engine in its defensive posture forever.
+
+    TTFT wins ties: a breached first-token SLA is user-visible queueing,
+    a breached TPOT usually follows from the same congestion.
+    """
+
+    def __init__(self, target: SLATarget, horizon: int, slots: int):
+        self.target = target
+        self.base_horizon = max(1, int(horizon))
+        self.max_horizon = (target.max_horizon
+                            if target.max_horizon is not None
+                            else self.base_horizon)
+        self.max_horizon = max(self.max_horizon, target.min_horizon)
+        self.horizon = min(self.base_horizon, self.max_horizon)
+        self.slots = max(1, int(slots))
+        self.prefill_cap = self.slots
+        self.retunes = 0
+        self.windows = 0
+        self.last: Dict[str, float] = {}
+        self._window: List[Tuple[float, float]] = []
+
+    def observe(self, output) -> bool:
+        """Fold one retired RequestOutput; True if a retune fired."""
+        self._window.append((output.ttft_ms, output.tpot_ms))
+        if len(self._window) < self.target.window:
+            return False
+        return self._retune()
+
+    def _p95(self, idx: int) -> float:
+        vals = sorted(w[idx] for w in self._window)
+        # nearest-rank p95 — no numpy needed for a <= window-sized list
+        rank = max(0, int(round(0.95 * (len(vals) - 1))))
+        return vals[rank]
+
+    def _retune(self) -> bool:
+        ttft, tpot = self._p95(0), self._p95(1)
+        self._window.clear()
+        self.windows += 1
+        self.last = {"ttft_p95_ms": ttft, "tpot_p95_ms": tpot}
+        t = self.target
+        old = (self.horizon, self.prefill_cap)
+        if t.p95_ttft_ms is not None and ttft > t.p95_ttft_ms:
+            self.horizon = max(t.min_horizon, self.horizon // 2)
+            self.prefill_cap = max(1, self.prefill_cap // 2)
+        elif t.p95_tpot_ms is not None and tpot > t.p95_tpot_ms:
+            self.horizon = min(self.max_horizon, max(1, self.horizon * 2))
+        elif self.horizon < min(self.base_horizon, self.max_horizon):
+            self.horizon = min(self.base_horizon, self.max_horizon,
+                               self.horizon * 2)
+        elif self.prefill_cap < self.slots:
+            self.prefill_cap = min(self.slots, self.prefill_cap * 2)
+        changed = (self.horizon, self.prefill_cap) != old
+        self.retunes += int(changed)
+        return changed
+
+    def holding(self) -> Optional[bool]:
+        """Did the last full window meet the target? None before one."""
+        if not self.last:
+            return None
+        t = self.target
+        ok = True
+        if t.p95_ttft_ms is not None:
+            ok &= self.last["ttft_p95_ms"] <= t.p95_ttft_ms
+        if t.p95_tpot_ms is not None:
+            ok &= self.last["tpot_p95_ms"] <= t.p95_tpot_ms
+        return ok

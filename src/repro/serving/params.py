@@ -22,7 +22,7 @@ Sampling semantics:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 __all__ = ["SamplingParams", "GREEDY", "Request", "RequestOutput",
            "RequestStats", "FINISH_REASONS", "latency_percentiles"]
@@ -67,11 +67,19 @@ class Request:
     ``inputs`` follows the ModelAPI batch convention — ``{"tokens"}`` for
     LM families, ``{"src_tokens", "tgt_in"}`` for enc-dec. ``id`` is
     assigned by the engine at submit time.
+
+    ``on_token`` is the streaming hook: the engine calls it with each
+    token id as the horizon block carrying that token lands on the host
+    (the prefill-sampled first token fires at admission). Callbacks run
+    on the scheduler's walk of the synced block — keep them cheap, and
+    note that aborting the request from inside its own callback wins
+    over an EOS in the same block (finish reason becomes ``abort``).
     """
 
     inputs: Dict[str, Any]
     params: SamplingParams = GREEDY
     id: Optional[int] = None
+    on_token: Optional[Callable[[int], None]] = None
 
 
 @dataclasses.dataclass
@@ -129,6 +137,23 @@ class RequestOutput:
         dt = self.stats.total_s
         return self.num_generated / dt if dt > 0 else float("inf")
 
+    @property
+    def ttft_ms(self) -> float:
+        """Time to first token (ms): submit -> prefill token delivered."""
+        return self.stats.ttft_s * 1e3
+
+    @property
+    def tpot_ms(self) -> float:
+        """Per-output-token latency (ms) after the first token.
+
+        The post-first-token span over the decode steps the request took
+        (``new_tokens - 1``; a one-token request contributes its whole
+        span). Same definition ``latency_percentiles`` aggregates, so a
+        single streamed request and a benchmark row read the same way.
+        """
+        return ((self.stats.total_s - self.stats.ttft_s)
+                / max(self.num_generated - 1, 1)) * 1e3
+
 
 def latency_percentiles(outputs: Sequence["RequestOutput"]) -> Dict[str, float]:
     """p50/p95 TTFT and per-output-token latency (ms) over completions.
@@ -142,12 +167,11 @@ def latency_percentiles(outputs: Sequence["RequestOutput"]) -> Dict[str, float]:
     """
     import numpy as np
 
-    ttft = [o.stats.ttft_s for o in outputs]
-    tpot = [(o.stats.total_s - o.stats.ttft_s) / max(o.num_generated - 1, 1)
-            for o in outputs]
+    ttft = [o.ttft_ms for o in outputs]
+    tpot = [o.tpot_ms for o in outputs]
 
     def pct(vals, q):
-        return float(np.percentile(vals, q)) * 1e3 if vals else 0.0
+        return float(np.percentile(vals, q)) if vals else 0.0
 
     return {"ttft_p50_ms": round(pct(ttft, 50), 3),
             "ttft_p95_ms": round(pct(ttft, 95), 3),

@@ -11,14 +11,22 @@ every serving caller used to re-spell by hand, and returns a
 
 Both return `RequestOutput` lists in input order; the scheduler-owned
 `pipe.engine` is exposed for request-level control (submit / step /
-run_until_drained / abort).
+run_until_drained / abort / stream). The streaming surface delivers
+tokens as each fused horizon block lands instead of drain-then-return:
+
+    for tok in pipe.translate_stream(src_row, "ita", sp):
+        print(tok)                         # token-at-a-time delivery
+
+and `deploy(..., sla=SLATarget(p95_ttft_ms=...))` attaches the
+percentile-feedback admission controller (serving.metrics) that tunes
+horizon + prefill batching to hold the target under load.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, Iterable, List, Optional, Sequence, Union
+from typing import Any, Iterable, Iterator, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +37,7 @@ from ..core import (QuantSpec, calibrate_act_scales, get_format,
 from ..data import LANG_CODES
 from ..models import Ctx, build_model
 from .engine import ServeEngine
+from .metrics import SLATarget
 from .params import Request, RequestOutput, SamplingParams
 from .spec_decode import build_draft_arm
 
@@ -131,6 +140,47 @@ class TranslationPipeline:
                    for i in range(src.shape[0])]
         return self.generate(prompts, params)
 
+    def generate_stream(self, prompt: Any,
+                        params: Optional[SamplingParams] = None
+                        ) -> Iterator[int]:
+        """Stream ONE prompt: yields token ids as each fused horizon
+        block lands on the host; the finished RequestOutput (tokens,
+        finish reason, ttft_ms/tpot_ms stats) is the generator's return
+        value (``StopIteration.value``). Other in-flight requests keep
+        being served while this one streams."""
+        if not isinstance(prompt, (dict, Request)):
+            if self.cfg.family in ("encdec", "audio"):
+                raise TypeError(
+                    "enc-dec prompts must be batch dicts with "
+                    "'src_tokens' and 'tgt_in'")
+            prompt = {"tokens": jnp.asarray(prompt, jnp.int32)[None]}
+        return self.engine.stream_request(prompt, params)
+
+    def translate_stream(self, src_tokens, tgt_lang: Union[str, int],
+                         params: Optional[SamplingParams] = None
+                         ) -> Iterator[int]:
+        """Streaming counterpart of translate() for ONE source row:
+        yields target token ids as they arrive (first token at
+        prefill), returns the RequestOutput as the generator's return
+        value. Batch sources should loop, or submit through
+        ``engine.submit(..., on_token=...)`` for interleaved streams."""
+        if self.cfg.family not in ("encdec", "audio"):
+            raise TypeError(
+                f"translate_stream() needs an enc-dec model, got family "
+                f"{self.cfg.family!r}; use generate_stream() instead")
+        code = LANG_CODES[tgt_lang] if isinstance(tgt_lang, str) else tgt_lang
+        src = jnp.asarray(src_tokens)
+        if src.ndim == 1:
+            src = src[None]
+        if src.shape[0] != 1:
+            raise ValueError(
+                f"translate_stream() streams one source row, got a batch "
+                f"of {src.shape[0]}; loop over rows (or submit them via "
+                "engine.submit(on_token=...) for interleaved streaming)")
+        prompt = {"src_tokens": src,
+                  "tgt_in": jnp.full((1, 1), code, jnp.int32)}
+        return self.engine.stream_request(prompt, params)
+
 
 def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
            slots: int = 4,
@@ -143,7 +193,8 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
            paged_attn_impl: Optional[str] = None,
            calib_batches: Optional[Iterable[dict]] = None,
            draft_spec: Union[str, QuantSpec, None] = None,
-           draft_lookahead: int = 4
+           draft_lookahead: int = 4, overlap: bool = True,
+           sla: Optional[SLATarget] = None
            ) -> TranslationPipeline:
     """Build a ready-to-serve TranslationPipeline in one call.
 
@@ -197,6 +248,17 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
                  fall back to target-only. ``calib_batches`` calibrates
                  both arms.
     draft_lookahead: tokens drafted per speculative verify round (K).
+    overlap:     double-buffer the decode loop (default on): horizon
+                 N+1 is dispatched on device while the host still walks
+                 horizon N's token block — same token streams, the host
+                 walk hidden behind device work. ``False`` restores the
+                 serial dispatch-then-sync order (horizon=1 and draft
+                 arms are always serial).
+    sla:         SLATarget latency objectives; attaches the
+                 percentile-feedback controller (serving.metrics) that
+                 auto-tunes the effective horizon and the paged
+                 prefill-group cap against measured p95 TTFT/TPOT over
+                 retired requests.
     """
     spec = resolve_spec(policy)
     cfg = get_config(arch_or_cfg) if isinstance(arch_or_cfg, str) \
@@ -209,8 +271,10 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
     # the spec owns deployment precision: its activation format wins
     # even over an explicit ctx, else a caller-supplied ctx would
     # silently downgrade w8a8 to bf16 activations (compute dtype and
-    # kernel routes remain the caller's)
-    ctx = dataclasses.replace(ctx, act_fmt=spec.act)
+    # kernel routes remain the caller's); the x<fmt> slot routes the
+    # attention QK/PV activation-activation matmuls the same way
+    ctx = dataclasses.replace(ctx, act_fmt=spec.act,
+                              attn_act_fmt=spec.attn)
     impls = {}
     if matmul_impl is not None:
         if matmul_impl not in _MATMUL_IMPLS:
@@ -235,15 +299,18 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
         calib_batches = list(calib_batches)
     if spec.weights != "f32":
         params = quantize_tree(params, spec.policy())
-    if spec.quantizes_act:
+    if spec.quantizes_act or spec.quantizes_attn:
         scales = {}
         if calib_batches is not None:
             # static PTQ deployment: observe the quantized model's
             # matmul activations eagerly, one absmax per site, and
-            # thread the per-site scale registry into the Ctx
+            # thread the per-site scale registry into the Ctx (attention
+            # QK/PV sites report through the same collector when the
+            # spec carries an x<fmt> slot)
+            fmt = spec.act if spec.quantizes_act else spec.attn
             scales = calibrate_act_scales(
                 model, params, ctx, calib_batches,
-                max_code=get_format(spec.act).max_code)
+                max_code=get_format(fmt).max_code)
         if scales:
             ctx = dataclasses.replace(
                 ctx, act_scales=tuple(sorted(scales.items())))
@@ -268,7 +335,7 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
                          kv_dtype=kv, ctx=ctx, paged=paged,
                          page_size=page_size, num_pages=num_pages,
                          max_src_len=max_src_len, horizon=horizon,
-                         draft=draft)
+                         draft=draft, overlap=overlap, sla=sla)
     name = policy if isinstance(policy, str) else str(spec)
     return TranslationPipeline(cfg, model, params, engine, ctx, name,
                                fp_bytes, spec,

@@ -49,7 +49,8 @@ _LEGACY = {
 
 GRAMMAR_CASES = ["w4a8kv8", "w8a8kv8g32", "wfp4a8", "wfp8e4m3afp8kvfp8",
                  "w4kv8", "w16", "wf32", "w8", "wnf4kv8dq", "wfp8kvfp8",
-                 "w8a8kv8", "w4a8kv8e16g32", "wfp8e5m2kv8"]
+                 "w8a8kv8", "w4a8kv8e16g32", "wfp8e5m2kv8",
+                 "w8a8kv8x8", "w4kv8xfp8", "w16x8", "w8a8kv8x8e16g32"]
 
 
 def _smoke_params():
@@ -84,6 +85,25 @@ def test_grammar_fields():
     assert QuantSpec.parse("w8a8").group == 0          # per-channel default
     assert QuantSpec.parse("w8").group == 64
     assert QuantSpec.parse("wnf4kv8dq").double_quant
+
+
+def test_x_slot_routes_attention_matmuls():
+    """x<fmt> is the attention QK/PV activation format: orthogonal to
+    the weight tree (act x act products never touch qmatmul), so it
+    composes with any weight format — including unquantized w16."""
+    s = QuantSpec.parse("w8a8kv8x8")
+    assert s.attn == "int8" and s.quantizes_attn
+    assert str(s) == "w8a8kv8x8"                       # canonical slot order
+    assert QuantSpec.parse("w4kv8xfp8").attn == "fp8"
+    assert QuantSpec.parse("w16x8").weights == "bf16"  # no weight tree needed
+    # default: attention stays bf16 and the token is never emitted
+    assert QuantSpec.parse("w8a8kv8").attn == "bf16"
+    assert not QuantSpec.parse("w8a8kv8").quantizes_attn
+    assert "x" not in str(QuantSpec.parse("w8a8kv8"))
+    with pytest.raises(ValueError, match="attention-matmul"):
+        QuantSpec(weights="int8", attn="int4")         # not an act format
+    with pytest.raises(ValueError):
+        QuantSpec.parse("w8x4")                        # rejected in-grammar
 
 
 def test_bad_specs_raise_with_choices():
@@ -262,6 +282,34 @@ def test_fp8_dense_paged_same_tokens():
                               SamplingParams(max_new_tokens=6))
         streams[paged] = [o.token_ids for o in outs]
     assert streams[False] == streams[True]
+
+
+# -- x<fmt> end to end ------------------------------------------------------
+
+def test_x8_attention_sites_calibrate_and_serve():
+    """w8a8kv8x8 end to end: calibration observes both QK/PV operands
+    per attention tower (the x slot routes through Ctx.attn_dot, not
+    the weight tree), a spec without the slot never touches those
+    sites, and the deployment serves."""
+    rc, params = _smoke_params()
+    pipe = deploy(rc, "w8a8kv8x8", params=params, slots=2, max_len=16,
+                  ctx=Ctx(compute_dtype=jnp.float32),
+                  calib_batches=_calib_batches(rc))
+    assert pipe.ctx.attn_act_fmt == "int8"
+    scales = dict(pipe.ctx.act_scales)
+    assert {"enc.attn.qk.a", "enc.attn.qk.b", "enc.attn.pv.a",
+            "enc.attn.pv.b", "dec.attn.qk.a", "dec.cross.pv.b"} \
+        <= set(scales), sorted(scales)
+    assert all(v > 0 for v in scales.values())
+    base = deploy(rc, "w8a8kv8", params=params, slots=2, max_len=16,
+                  ctx=Ctx(compute_dtype=jnp.float32),
+                  calib_batches=_calib_batches(rc))
+    assert not any(".qk." in s or ".pv." in s
+                   for s in dict(base.ctx.act_scales))
+    ds = SyntheticTranslation(rc.vocab_size, rc.enc_len, seed=0)
+    outs = pipe.translate(jnp.asarray(ds.sample(2)["src_tokens"]), "eng",
+                          SamplingParams(max_new_tokens=4))
+    assert len(outs) == 2 and all(o.token_ids for o in outs)
 
 
 def test_sweep_reports_resolved_spec_strings():

@@ -34,6 +34,13 @@ def _lm(name="gemma3-1b"):
 # legacy wrapper back-compat
 # ---------------------------------------------------------------------------
 
+# the single-shot wrappers are deprecated in favor of the streaming
+# pipeline surface; tests covering them opt out of the CI pinned leg's
+# -W error::DeprecationWarning (test marks outrank the command line)
+legacy = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@legacy
 def test_greedy_generate_deterministic():
     rc, model, params = _lm()
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, rc.vocab_size)
@@ -45,6 +52,7 @@ def test_greedy_generate_deterministic():
     assert out1.shape == (2, 5)
 
 
+@legacy
 def test_translate_api_shapes():
     rc = reduce_config(REGISTRY["nllb600m"])
     model = build_model(rc)
@@ -57,6 +65,7 @@ def test_translate_api_shapes():
     assert int(toks.min()) >= 0 and int(toks.max()) < rc.vocab_size
 
 
+@legacy
 def test_translate_overflow_raises():
     rc = reduce_config(REGISTRY["nllb600m"])
     model = build_model(rc)
@@ -69,6 +78,7 @@ def test_translate_overflow_raises():
                   max_len=8)
 
 
+@legacy
 def test_int8_kv_generation_tracks_bf16():
     rc, model, params = _lm("qwen2.5-14b")
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, rc.vocab_size)
@@ -81,6 +91,7 @@ def test_int8_kv_generation_tracks_bf16():
     assert int(g16[0, 0]) == int(g8[0, 0])
 
 
+@legacy
 def test_continuous_batching_matches_single_stream():
     rc, model, params = _lm()
     eng = ServeEngine(model, params, slots=3, max_len=24, ctx=CTX)
@@ -135,6 +146,7 @@ def test_submit_rejects_overflowing_request():
         eng.submit({"tokens": p}, SamplingParams(max_new_tokens=4))
 
 
+@legacy
 def test_eos_stops_generation_and_reports_reason():
     rc, model, params = _lm()
     p = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, rc.vocab_size)
@@ -303,6 +315,7 @@ def test_bucketed_prefill_matches_exact_prefill():
 # deploy() pipeline
 # ---------------------------------------------------------------------------
 
+@legacy
 def test_deploy_translate_pipeline():
     pipe = deploy("nllb600m", "int4", slots=2, max_len=16, smoke=True)
     assert pipe.compression > 2.0            # int4 shrinks the checkpoint

@@ -12,6 +12,7 @@ reduced config and asserts the paper's two headline properties:
 
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.configs import REGISTRY, reduce_config
 from repro.core import PRESETS, quantize_tree, tree_nbytes
@@ -44,6 +45,7 @@ def _trained_nllb(steps=60):
     return rc, model, state["params"], ds, first, last
 
 
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
 def test_full_pipeline_train_quantize_translate():
     rc, model, params, ds, first, last = _trained_nllb()
     assert last < 0.9 * first, (first, last)
