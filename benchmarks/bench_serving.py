@@ -41,6 +41,20 @@ arrivals, reporting the measured p95s next to the targets, whether the
 final observation window held them, how often the controller retuned,
 and the horizon/prefill-cap it settled on.
 
+``--faults`` adds one serve_{policy}_faults chaos row per policy: the
+same burst is served twice on identically-configured tight-pool paged
+engines — once fault-free (the reference), once under a fixed-seed
+``FaultPlan`` injecting page-pool exhaustion (forcing preemption +
+resume), NaN logits (forcing a slot error), and deadline-clock skew
+against one deadline-carrying request. The row reports the engine's
+fault counters plus ``survivor_diffs`` (surviving requests whose token
+streams differ from the reference — the fault-isolation claim) and
+``prefix_violations`` (failed requests whose partial tokens are not a
+prefix of their reference stream). Tripwires red the run unless
+survivor_diffs == 0, every planned fault class actually fired
+(preemptions, slot errors, deadline expirations all > 0), and the page
+allocator's invariant holds after the drain.
+
 ``--spec-decode SPEC`` additionally measures each policy with a
 speculative draft arm (the same checkpoint quantized at SPEC drafts
 ``LOOKAHEAD`` tokens per verify round; greedy output is unchanged).
@@ -57,12 +71,13 @@ consumed by CI's bench-smoke job):
   serve_{policy}_paged_rate{r}   Poisson continuous-arrival throughput
   serve_{policy}_{mode}_specdec  speculative-decoding arm (--spec-decode)
   serve_{policy}_sla             SLA-admission arm (--sla-ttft-ms/...)
+  serve_{policy}_faults          fault-injection chaos arm (--faults)
 Every serving row also records per-request latency percentiles
 (p50/p95 TTFT and per-output-token time, from RequestStats via the
 latency_percentiles helper the eval suite shares).
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json P]
-        [--horizon K] [--rate R] [--impl xla|pallas]
+        [--horizon K] [--rate R] [--impl xla|pallas] [--faults]
         [--spec-decode w4a8kv8] [--sla-ttft-ms T --sla-tpot-ms T]
 """
 
@@ -76,10 +91,12 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs import get_config, reduce_config
 from repro.core import resolve_spec
 from repro.data import SyntheticTranslation
-from repro.serving import (IMPL_CHOICES, SamplingParams, SLATarget, deploy,
-                           impl_routes, latency_percentiles, pages_needed)
+from repro.serving import (IMPL_CHOICES, FaultPlan, SamplingParams,
+                           SLATarget, deploy, impl_routes,
+                           latency_percentiles, pages_needed)
 
 from .common import csv_row
 
@@ -141,6 +158,98 @@ def serve_rate(eng, reqs, gen, rate, seed=0):
     return sum(o.num_generated for o in outs), dt, eng.occupancy, outs
 
 
+FAULT_SLOTS = 4
+FAULT_PAGES = 12    # == FAULT_SLOTS full chains: zero slack once stolen
+
+
+def _fault_plan():
+    """The fixed chaos schedule the --faults arm injects (one instance
+    per engine — plans are stateful). Exhaustion at round 1 grabs the
+    pool's whole slack before the first wave's chains finish growing —
+    at any horizon — and holds it long enough that growth must preempt
+    (the round-6 steal stresses the second admission wave the same
+    way); the NaN poisons slot 0 at decode dispatch 1 (slot 0 holds the
+    oldest in-flight request, which preemption never victimizes, so the
+    slot is guaranteed live and the poison guaranteed to register as a
+    slot error), and the round-4 clock skew expires the one
+    deadline-carrying request. All coordinates are explicit, so the
+    fault counts CI tripwires on are guaranteed, not probabilistic."""
+    return FaultPlan(seed=0,
+                     exhaust_at=[(1, 6, 4), (6, 6, 3)],
+                     nan_at=[(1, 0, 0)],
+                     skew_at=[(4, 60_000.0)])
+
+
+def serve_faults(pol, reqs, gen, horizon, impl):
+    """Serve one burst twice — fault-free, then under _fault_plan() on
+    an identical engine — and compare streams request-by-request.
+    Returns (row dict, tripwire list)."""
+    sp = SamplingParams(max_new_tokens=gen)
+    # the last request carries a deadline; the round-4 skew expires it
+    dl_sp = SamplingParams(max_new_tokens=gen, deadline_ms=500.0)
+
+    def burst(plan):
+        pipe = deploy("nllb600m", pol, slots=FAULT_SLOTS, max_len=MAX_LEN,
+                      smoke=True, paged=True, page_size=PAGE,
+                      num_pages=FAULT_PAGES, horizon=horizon, faults=plan,
+                      **impl_routes(impl))
+        ids = []
+        for i, r in enumerate(reqs):
+            p = dl_sp if (plan is not None and i == len(reqs) - 1) else sp
+            ids.append(pipe.engine.submit(r, p))
+        t0 = time.perf_counter()
+        outs = {o.request_id: o for o in pipe.engine.run_until_drained()}
+        dt = time.perf_counter() - t0
+        if plan is not None:
+            plan.release_all(pipe.engine)
+        pipe.engine.allocator.check()
+        return [outs[i] for i in ids], dt, pipe.engine
+
+    ref, _, _ = burst(None)
+    plan = _fault_plan()
+    outs, dt, eng = burst(plan)
+
+    survivor_diffs = prefix_violations = 0
+    for o, r in zip(outs, ref):
+        if o.finish_reason in ("eos", "length"):
+            survivor_diffs += int(o.token_ids != r.token_ids)
+        else:
+            prefix_violations += int(
+                o.token_ids != r.token_ids[:len(o.token_ids)])
+    m = eng.metrics()
+    toks = sum(o.num_generated for o in outs)
+    name = f"serve_{pol}_faults"
+    row = {
+        "tok_s": round(toks / dt, 1),
+        "requests": len(reqs),
+        "horizon": horizon,
+        "faults_injected": len(plan.events),
+        "preemptions": m.preemptions,
+        "resumed": m.resumed_requests,
+        "deadline_expirations": m.deadline_expirations,
+        "slot_errors": m.slot_errors,
+        "admission_rejections": m.admission_rejections,
+        "survivor_diffs": survivor_diffs,
+        "prefix_violations": prefix_violations,
+        "pages_in_use_after_drain": eng.allocator.pages_in_use,
+    }
+    tripped = []
+    if survivor_diffs:
+        tripped.append(f"{name}: {survivor_diffs} surviving requests "
+                       "diverged from the fault-free reference")
+    if prefix_violations:
+        tripped.append(f"{name}: {prefix_violations} failed requests' "
+                       "partial tokens are not a reference prefix")
+    for counter in ("preemptions", "slot_errors", "deadline_expirations"):
+        if not row[counter]:
+            tripped.append(f"{name}: planned fault class never fired "
+                           f"({counter} == 0)")
+    if eng.allocator.pages_in_use:
+        tripped.append(f"{name}: {eng.allocator.pages_in_use} pages leaked "
+                       "after drain")
+    return name, dt, toks, row, tripped
+
+
 def _deploy(pol, paged, slots, smoke, horizon=1, impl="xla", draft=None,
             sla=None):
     # paged engine: same page pool as the dense engine's KV capacity,
@@ -175,7 +284,8 @@ def run(smoke: bool = False, json_path: str | None = None,
         spec_decode: str | None = None,
         rate: int | None = None,
         sla_ttft_ms: float | None = None,
-        sla_tpot_ms: float | None = None):
+        sla_tpot_ms: float | None = None,
+        faults: bool = False):
     if policies is None:
         policies = list(POLICIES[:2] if smoke else POLICIES)
     for pol in policies:                 # fail on typos before any build
@@ -317,6 +427,16 @@ def run(smoke: bool = False, json_path: str | None = None,
                 "overlap_rounds": m.overlap_rounds,
                 **latency_percentiles(outs)})
 
+        if faults:
+            # chaos arm: fault-injected burst vs fault-free reference on
+            # identical engines — stream equivalence is the product here,
+            # so no warmup pass (timing is reported but not compared)
+            fault_cfg = reduce_config(get_config("nllb600m"))
+            fname, fdt, ftoks, frow, ftripped = serve_faults(
+                pol, _requests(fault_cfg, n_req), GEN, horizon, impl)
+            emit(fname, fdt * 1e6 / max(ftoks, 1), frow)
+            tripped.extend(ftripped)
+
         if sla is not None:
             # SLA-admission arm: same Poisson traffic, the engine's own
             # controller retunes horizon/prefill admission against the
@@ -356,7 +476,8 @@ def run(smoke: bool = False, json_path: str | None = None,
                        "horizon": horizon, "impl": impl,
                        "rate": rate, "sla_ttft_ms": sla_ttft_ms,
                        "sla_tpot_ms": sla_tpot_ms,
-                       "spec_decode": spec_decode, "rows": rows},
+                       "spec_decode": spec_decode, "faults": faults,
+                       "rows": rows},
                       f, indent=2)
     if tripped:
         raise RuntimeError("serving tripwire: " + "; ".join(tripped))
@@ -395,13 +516,19 @@ def main():
                          "target reds the run")
     ap.add_argument("--sla-tpot-ms", type=float, default=None, metavar="T",
                     help="p95 per-output-token target (see --sla-ttft-ms)")
+    ap.add_argument("--faults", action="store_true",
+                    help="add serve_*_faults chaos rows: the burst is "
+                         "re-served under a fixed-seed FaultPlan (page "
+                         "exhaustion, NaN logits, clock skew) and the "
+                         "run reds unless survivors match the fault-free "
+                         "reference and every fault class fired")
     args = ap.parse_args()
     pols = ([p.strip() for p in args.policies.split(",") if p.strip()]
             if args.policies else None)
     run(smoke=args.smoke, json_path=args.json, horizon=args.horizon,
         impl=args.impl, policies=pols, spec_decode=args.spec_decode,
         rate=args.rate, sla_ttft_ms=args.sla_ttft_ms,
-        sla_tpot_ms=args.sla_tpot_ms)
+        sla_tpot_ms=args.sla_tpot_ms, faults=args.faults)
 
 
 if __name__ == "__main__":

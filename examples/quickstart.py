@@ -4,8 +4,10 @@ Train a reduced NLLB-600M on the synthetic many-to-many translation task,
 post-training-quantize it to INT4 (the paper's deployment format),
 translate the same sources into two different languages with one model,
 stream a translation token-by-token as each fused horizon block lands,
-then redeploy with an FP4 speculative draft arm (same checkpoint, same
-tokens, fewer target-model forwards).
+redeploy with an FP4 speculative draft arm (same checkpoint, same
+tokens, fewer target-model forwards), then exercise the failure
+surface: bounded admission (EngineSaturated), per-request deadlines,
+and finish_reason on every output.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -17,7 +19,7 @@ from repro.configs import REGISTRY, reduce_config
 from repro.data import SyntheticTranslation
 from repro.models import Ctx, build_model
 from repro.optim import warmup_linear
-from repro.serving import SamplingParams, deploy
+from repro.serving import EngineSaturated, SamplingParams, deploy
 from repro.train import make_train_step
 
 ctx = Ctx(compute_dtype=jnp.float32)
@@ -82,3 +84,38 @@ m = spec_pipe.engine.metrics()
 print(f"draft {spec_pipe.draft_spec_str}: acceptance "
       f"{m.acceptance_rate:.2f} ({m.accepted_tokens}/"
       f"{m.drafted_tokens} drafted, {m.verify_calls} verify rounds)")
+
+# --- failure handling ---------------------------------------------------
+# Every RequestOutput carries a finish_reason ("eos", "length", "abort",
+# "deadline", "preempted_limit", "error"). deadline_ms gives a request
+# a wall-clock budget (it retires with its partial tokens), and
+# max_pending bounds the admission queue: past the limit submit()
+# raises the typed EngineSaturated instead of queueing without bound —
+# catch it, drain a round, and retry.
+tiny = deploy(cfg, "int4", slots=1, max_len=16, params=params, ctx=ctx,
+              max_pending=1)
+b = ds.sample(1)
+req = {"src_tokens": jnp.asarray(b["src_tokens"]),
+       "tgt_in": jnp.asarray(b["tgt_in"][:, :1])}
+sp = SamplingParams(max_new_tokens=6)
+outs = []                                        # step() returns finishers
+tiny.engine.submit(req, sp)                      # -> the one slot
+tiny.engine.submit(req, sp)                      # -> the one queue seat
+try:
+    tiny.engine.submit(req, sp)                  # queue full
+except EngineSaturated as exc:
+    print(f"\nbackpressure: EngineSaturated "
+          f"({exc.pending}/{exc.limit} pending)")
+    while tiny.engine.num_pending >= exc.limit:  # retry with backoff
+        outs += tiny.engine.step()
+    tiny.engine.submit(req, sp)
+# a microscopic deadline expires at the first round boundary: the
+# request still returns, finish_reason "deadline", tokens-so-far intact
+while tiny.engine.num_pending >= 1:                # free the queue seat
+    outs += tiny.engine.step()
+tiny.engine.submit(req, SamplingParams(max_new_tokens=6,
+                                       deadline_ms=0.001))
+outs += tiny.engine.run_until_drained()
+print("finish reasons:", sorted(o.finish_reason for o in outs))
+print(f"rejections absorbed: "
+      f"{tiny.engine.metrics().admission_rejections}")

@@ -8,6 +8,12 @@ scheduler dispatches horizon N+1 while the host walks horizon N;
 ``--sla-ttft-ms``/``--sla-tpot-ms`` attach the percentile-feedback
 admission controller).
 
+Failure handling is first-class: ``--max-pending`` bounds the queue
+(the submit loop retries with backoff on the typed EngineSaturated),
+``--deadline-ms`` gives every request a wall-clock budget, and the
+shutdown line reports the engine's fault counters (preemptions,
+deadline expirations, admission rejections, slot errors).
+
   PYTHONPATH=src python -m repro.launch.serve --arch nllb600m --smoke \
       --policy int4 --requests 6 --gen 8 --temperature 0.7 --top-p 0.9
 """
@@ -23,8 +29,8 @@ import jax.numpy as jnp
 from ..configs import REGISTRY
 from ..core import ALIASES, resolve_spec
 from ..data import SyntheticTranslation
-from ..serving import (IMPL_CHOICES, SamplingParams, SLATarget, deploy,
-                       impl_routes)
+from ..serving import (IMPL_CHOICES, EngineSaturated, SamplingParams,
+                       SLATarget, deploy, impl_routes)
 
 
 def main():
@@ -66,6 +72,14 @@ def main():
                          "against measured percentiles")
     ap.add_argument("--sla-tpot-ms", type=float, default=None, metavar="T",
                     help="p95 per-output-token target (see --sla-ttft-ms)")
+    ap.add_argument("--max-pending", type=int, default=None, metavar="N",
+                    help="bounded admission queue: submit() raises the "
+                         "typed EngineSaturated past N pending requests "
+                         "(the launcher retries with backoff)")
+    ap.add_argument("--deadline-ms", type=float, default=None, metavar="T",
+                    help="per-request wall-clock budget from submit; an "
+                         "expired request retires with finish_reason "
+                         "'deadline' and its partial tokens")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -86,6 +100,7 @@ def main():
                   horizon=args.horizon, draft_spec=args.draft_spec,
                   draft_lookahead=args.draft_lookahead,
                   overlap=not args.no_overlap, sla=sla,
+                  max_pending=args.max_pending,
                   **impl_routes(args.impl))
     print(f"model bytes {pipe.fp_bytes/2**20:.1f} MB -> "
           f"{pipe.quantized_bytes/2**20:.1f} MB "
@@ -105,7 +120,8 @@ def main():
     for i in range(args.requests):
         sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                             top_p=args.top_p, eos_id=args.eos_id,
-                            max_new_tokens=args.gen, seed=i)
+                            max_new_tokens=args.gen, seed=i,
+                            deadline_ms=args.deadline_ms)
         if ds is not None:
             b = ds.sample(1)
             req = {"src_tokens": jnp.asarray(b["src_tokens"]),
@@ -115,7 +131,19 @@ def main():
             plen = 4 + (i % 4)
             req = {"tokens": jax.random.randint(
                 jax.random.PRNGKey(i), (1, plen), 0, cfg.vocab_size)}
-        rid = pipe.engine.submit(req, sp)
+        # backpressure loop: a saturated queue is a typed signal, not a
+        # crash — drain one scheduler round and retry with backoff
+        backoff = 0.01
+        while True:
+            try:
+                rid = pipe.engine.submit(req, sp)
+                break
+            except EngineSaturated as exc:
+                print(f"saturated ({exc.pending}/{exc.limit} pending), "
+                      f"stepping + retrying in {backoff*1e3:.0f} ms")
+                pipe.engine.step()
+                time.sleep(backoff)
+                backoff = min(backoff * 2, 0.5)
         print(f"[req {rid}] queued (pending={pipe.engine.num_pending}, "
               f"active={pipe.engine.num_active})")
 
@@ -144,6 +172,12 @@ def main():
                  f"({m.accepted_tokens}/{m.drafted_tokens} drafted, "
                  f"{m.verify_calls} verify rounds)")
     print(line + ")")
+    # shutdown fault summary: zero across the board on a healthy run
+    print(f"faults: {m.preemptions} preemptions "
+          f"({m.resumed_requests} resumed), "
+          f"{m.deadline_expirations} deadline expirations, "
+          f"{m.admission_rejections} admission rejections, "
+          f"{m.slot_errors} slot errors")
     if pipe.engine.sla is not None:
         ctl = pipe.engine.sla
         held = ctl.holding()

@@ -11,16 +11,27 @@ EngineMetrics snapshot every benchmark reads. Speculative decoding
 deploys a second arm of the same checkpoint via
 `deploy(..., draft_spec=...)` (see spec_decode).
 
+Fault tolerance: requests carry `SamplingParams(deadline_ms=...,
+priority=...)` and retire with a `finish_reason` from FINISH_REASONS;
+`deploy(..., max_pending=N)` bounds admission (`submit` raises the
+typed EngineSaturated under saturation); on-demand paged engines
+preempt and transparently resume requests under page pressure; and
+`deploy(..., faults=FaultPlan(...))` injects deterministic allocator
+exhaustion / NaN logits / clock skew for chaos testing.
+
 `greedy_generate` / `translate` remain as deprecated single-shot
 wrappers for legacy callers.
 """
 
 from .engine import ServeEngine, greedy_generate, translate
+from .faults import FaultPlan
 from .metrics import EngineMetrics, SLATarget
 from .paged_cache import PageAllocator, pages_needed
-from .params import (GREEDY, Request, RequestOutput, RequestStats,
-                     SamplingParams, latency_percentiles)
+from .params import (FINISH_REASONS, GREEDY, EngineSaturated, Request,
+                     RequestOutput, RequestStats, SamplingParams,
+                     latency_percentiles)
 from .pipeline import IMPL_CHOICES, TranslationPipeline, deploy, impl_routes
+from .sampler import ERR_TOKEN
 from .spec_decode import DraftArm, accept_longest_prefix, build_draft_arm
 
 __all__ = ["ServeEngine", "greedy_generate", "translate", "SamplingParams",
@@ -28,4 +39,5 @@ __all__ = ["ServeEngine", "greedy_generate", "translate", "SamplingParams",
            "latency_percentiles", "TranslationPipeline", "deploy",
            "PageAllocator", "pages_needed", "impl_routes", "IMPL_CHOICES",
            "DraftArm", "accept_longest_prefix", "build_draft_arm",
-           "EngineMetrics", "SLATarget"]
+           "EngineMetrics", "SLATarget", "EngineSaturated", "FaultPlan",
+           "FINISH_REASONS", "ERR_TOKEN"]

@@ -52,8 +52,10 @@ threads the KV cache, per-slot current tokens, PRNG offsets, remaining
 token budgets, and an alive-mask; a slot that emits ``eos_id`` or
 exhausts ``max_new_tokens`` mid-horizon keeps decoding into masked
 positions (its ``len`` freezes, it emits pad) until the horizon ends.
-Paged caches are scan-safe because every request's full page budget is
-reserved at admission — block tables are static across the horizon.
+Paged caches are scan-safe because block tables are static across the
+horizon: chains either hold the full budget at admission (draft-armed
+engines) or are grown to cover the scan just before each dispatch
+(on-demand engines — see _grow_chains).
 
 What the knob trades: per-token host overhead (Python dispatch + one
 device->host transfer per generated token) against admission latency —
@@ -65,6 +67,39 @@ paged); ``horizon=K`` produces identical per-request token streams,
 finish reasons, and stats — only the sync granularity changes.
 ``engine.decode_syncs`` / ``engine.mean_tokens_per_sync`` report how
 much host traffic the fusion eliminated.
+
+Fault tolerance
+---------------
+Every failure mode resolves to a typed RequestOutput finish reason —
+nothing raises out of ``step()``/``stream()`` once a request is
+admitted (see serving/params.py for the reason vocabulary):
+
+  * **Deadlines** — ``SamplingParams.deadline_ms`` is checked at every
+    round boundary against a host-side clock (no extra device sync);
+    expired requests retire as ``deadline`` with their partial tokens
+    and free their pages immediately, queued or in-flight.
+  * **Backpressure** — ``max_pending`` bounds the admission queue;
+    ``submit`` raises the typed ``EngineSaturated`` instead of letting
+    an overload surface as an allocator error deep in a later step.
+  * **On-demand paging + preemption** — paged target-only engines
+    allocate prefill pages at admission and grow each chain just ahead
+    of every dispatched horizon (``on_demand``); on pool exhaustion
+    the lowest-priority / youngest request is preempted — tokens
+    stashed host-side, chain freed, request requeued at the head — and
+    later resumed by prefill-replay (teacher-forced prefill is
+    bit-exact vs incremental decode and the PRNG stream is
+    offset-indexed, so resumed streams are token-identical to an
+    uncontended run). ``preempt_limit`` consecutive evictions retire
+    the request as ``preempted_limit``. Draft-armed engines keep the
+    whole-budget reservation (two rollback-symmetric chains per
+    request make mid-decode growth a poor trade).
+  * **Poisoned requests** — non-finite logits sample the ERR_TOKEN
+    sentinel (see sampler.py); the host walk retires only that slot as
+    ``error`` while the fused batch keeps decoding.
+  * **Fault injection** — ``faults=FaultPlan(...)`` (serving/faults.py)
+    deterministically injects pool exhaustion, NaN logits, and clock
+    skew at chosen rounds/dispatches; counters land in EngineMetrics
+    (``preemptions``, ``deadline_expirations``, ...).
 
 Speculative decoding (``draft=DraftArm(...)``)
 ----------------------------------------------
@@ -118,9 +153,9 @@ from ..models.api import decode_block
 from ..models.layers import Ctx
 from .metrics import EngineMetrics, SLAController, SLATarget
 from .paged_cache import TRASH_PAGE, PageAllocator, paged_insert, pages_needed
-from .params import (GREEDY, Request, RequestOutput, RequestStats,
-                     SamplingParams)
-from .sampler import sample_tokens, sample_tokens_scan
+from .params import (GREEDY, EngineSaturated, Request, RequestOutput,
+                     RequestStats, SamplingParams)
+from .sampler import ERR_TOKEN, sample_tokens, sample_tokens_scan
 from .spec_decode import DraftArm, accept_longest_prefix
 
 __all__ = ["ServeEngine", "greedy_generate", "translate"]
@@ -138,6 +173,7 @@ class _Slot:
     tokens: list = dataclasses.field(default_factory=list)
     active: bool = False
     request: Optional[Request] = None
+    seq: int = -1       # admission order (preemption picks the youngest)
 
 
 class ServeEngine:
@@ -159,9 +195,16 @@ class ServeEngine:
                  num_pages: Optional[int] = None,
                  max_src_len: Optional[int] = None, horizon: int = 1,
                  draft: Optional[DraftArm] = None, overlap: bool = True,
-                 sla: Optional[SLATarget] = None):
+                 sla: Optional[SLATarget] = None,
+                 max_pending: Optional[int] = None,
+                 preempt_limit: int = 3, faults=None):
         if horizon < 1:
             raise ValueError(f"horizon must be >= 1, got {horizon}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        if preempt_limit < 0:
+            raise ValueError(
+                f"preempt_limit must be >= 0, got {preempt_limit}")
         self.model = model
         self.params = params
         self.ctx = ctx or Ctx()
@@ -254,6 +297,28 @@ class ServeEngine:
         self._dirty_slots: set = set()
         self.sla = (SLAController(sla, self.horizon, slots)
                     if sla is not None else None)
+        # -- fault tolerance ------------------------------------------
+        self.max_pending = max_pending    # bounded admission queue
+        self.preempt_limit = int(preempt_limit)
+        self.faults = faults              # FaultPlan (serving/faults.py)
+        if faults is not None:
+            faults.reset()                # one plan per engine, from 0
+        self._skew_s = 0.0                # fault-injected clock skew
+        # on-demand paging: target-only paged engines allocate prefill
+        # pages at admission and grow chains per dispatched horizon; a
+        # draft arm keeps the whole-budget reservation (two rollback-
+        # symmetric chains per request make mid-decode growth moot)
+        self.on_demand = self.paged and draft is None
+        self._admit_seq = 0               # victim ordering (youngest)
+        self._preempted: Dict[int, list] = {}       # rid -> stashed tokens
+        self._preempt_counts: Dict[int, int] = {}   # rid -> eviction count
+        self._disp_len: Dict[int, int] = {}  # slot -> dispatched positions
+        self._no_poison = jnp.full((slots,), -1, jnp.int32)
+        self._preemptions = 0
+        self._resumed = 0
+        self._deadline_expirations = 0
+        self._admission_rejections = 0
+        self._slot_errors = 0
 
         fam = model.cfg.family
         self._tkey = "tgt_in" if fam in ("encdec", "audio") else "tokens"
@@ -281,10 +346,15 @@ class ServeEngine:
 
         self._prefill_fn = jax.jit(_prefill)
 
-        def _step(p, cur, cache, temps, top_ks, top_ps, keys, offsets):
+        def _step(p, cur, cache, temps, top_ks, top_ps, keys, offsets,
+                  poison):
             cache, logits = model.decode_step(self.ctx, p, cur, cache)
-            nxt = sample_tokens(logits[:, -1], temps, top_ks, top_ps,
-                                keys, offsets)
+            lg = logits[:, -1]
+            # fault injection: slots the plan marked for this dispatch
+            # read NaN logits — the sampler's guard turns that into the
+            # ERR_TOKEN sentinel for that row only
+            lg = jnp.where((poison == 0)[:, None], jnp.float32("nan"), lg)
+            nxt = sample_tokens(lg, temps, top_ks, top_ps, keys, offsets)
             return cache, nxt
 
         self._step_fn = jax.jit(_step)
@@ -355,7 +425,16 @@ class ServeEngine:
         carrying it lands on the host — the first token fires during
         prefill admission, before submit() even returns on a dense
         engine. Callbacks run on the scheduler walk; keep them cheap.
+
+        With ``max_pending`` set, a full admission queue raises the
+        typed ``EngineSaturated`` (backpressure: retry after a step /
+        stream round drains the queue) instead of growing unboundedly
+        and failing later in the allocator.
         """
+        if self.max_pending is not None \
+                and len(self._queue) >= self.max_pending:
+            self._admission_rejections += 1
+            raise EngineSaturated(len(self._queue), self.max_pending)
         if not isinstance(request, Request):
             request = Request(inputs=dict(request), params=params or GREEDY)
         elif params is not None:
@@ -399,7 +478,7 @@ class ServeEngine:
             id=self._next_id)
         self._next_id += 1
         self._stats[request.id] = RequestStats(
-            arrival_s=time.perf_counter(), prompt_len=prompt_len)
+            arrival_s=self._now(), prompt_len=prompt_len)
         self._queue.append(request)
         if not self.paged:          # paged admission batches at step()
             self._admit_pending()
@@ -422,7 +501,7 @@ class ServeEngine:
         allow, so slots refill at horizon boundaries instead of waiting
         for a full drain."""
         K = self._effective_horizon(horizon)
-        self._admit_pending()
+        self._round_boundary()
         n_active = sum(s.active for s in self.slots)
         if self._speculate_now():
             self._spec_round()
@@ -434,9 +513,9 @@ class ServeEngine:
             # must not burn batched micro-steps every slot has already
             # retired out of, and bucketing keeps compiled scan lengths
             # bounded by log2(max_len), not one per distinct budget
-            _, _, block, Kd = self._dispatch_horizon(
+            _, _, block, Kd, seqs = self._dispatch_horizon(
                 min(K, self._bucket(self._max_rem())))
-            self._walk_block(block, Kd)
+            self._walk_block(block, Kd, seqs)
         return self._take_finished()
 
     def run_until_drained(self, max_steps: int = 1_000_000,
@@ -522,6 +601,62 @@ class ServeEngine:
         out, self._finished = self._finished, []
         return out
 
+    def _now(self) -> float:
+        """The engine clock: wall time plus any fault-injected skew
+        (FaultPlan deadline tests advance time without sleeping)."""
+        return time.perf_counter() + self._skew_s
+
+    def _round_boundary(self) -> None:
+        """Host-side work at every scheduler round boundary: tick the
+        fault plan (release/steal pages, skew the clock), expire
+        deadlines, then admit from the queue. Runs on no-op rounds too,
+        so transient faults clear and expired queued requests drain
+        even when nothing is decoding."""
+        if self.faults is not None:
+            self.faults.on_round(self)
+        self._expire_deadlines()
+        self._admit_pending()
+
+    def _deadline_passed(self, request: Request, now: float) -> bool:
+        dl = request.params.deadline_ms
+        if dl is None:
+            return False
+        return (now - self._stats[request.id].arrival_s) * 1e3 > dl
+
+    def _expire_deadlines(self) -> None:
+        """Retire every request (active or queued) whose deadline_ms
+        elapsed — a pure host-clock compare at round boundaries, no
+        extra device sync. Active slots free their pages through the
+        ordinary _retire path; their tokens are truncated at the last
+        synced position exactly like an abort."""
+        now = self._now()
+        for s in self.slots:
+            if s.active and self._deadline_passed(s.request, now):
+                self._retire(s, "deadline")
+        if self._queue:
+            keep = collections.deque()
+            for r in self._queue:
+                if self._deadline_passed(r, now):
+                    self._finished.append(self._finish_queued(r, "deadline"))
+                else:
+                    keep.append(r)
+            self._queue = keep
+
+    def _finish_queued(self, r: Request, reason: str) -> RequestOutput:
+        """Finish a request that is not (or no longer) in a slot —
+        queued at expiry/abort, possibly with tokens stashed from an
+        earlier preemption."""
+        st = self._stats.pop(r.id)
+        toks = self._preempted.pop(r.id, [])
+        self._preempt_counts.pop(r.id, None)
+        st.finished_s = self._now()
+        if st.first_token_s == 0.0:
+            st.first_token_s = st.finished_s
+        st.new_tokens = len(toks)
+        if reason == "deadline":
+            self._deadline_expirations += 1
+        return RequestOutput(r.id, r.inputs, list(toks), reason, st)
+
     def _effective_horizon(self, horizon: Optional[int]) -> int:
         """Resolve one round's horizon: explicit arg > SLA controller >
         engine default."""
@@ -555,7 +690,13 @@ class ServeEngine:
         """Deliver one token to a slot's request: append, count, fire
         the streaming callback, retire on EOS/budget. ``synced=False``
         marks the prefill-produced first token (it never crossed the
-        decode sync path)."""
+        decode sync path). The ERR_TOKEN sentinel (non-finite logits —
+        see sampler.py) is never delivered: it retires ONLY this slot
+        with finish_reason "error" and its partial tokens, while the
+        rest of the fused batch keeps decoding."""
+        if tok == ERR_TOKEN:
+            self._retire(s, "error")
+            return
         s.tokens.append(tok)
         if synced:
             self._synced_tokens += 1
@@ -568,13 +709,16 @@ class ServeEngine:
     def _token_step(self) -> None:
         """The legacy horizon=1 path: one fused decode+sample dispatch,
         one host sync per token."""
+        self._grow_chains(1)
         self._decode_steps += 1
         self._active_slot_steps += sum(s.active for s in self.slots)
         if self.paged:
             self._page_slot_steps += self.allocator.pages_in_use
         self.cache, nxt = self._step_fn(
             self.params, self.cur, self.cache, self._temps,
-            self._top_ks, self._top_ps, self._keys, self._offsets)
+            self._top_ks, self._top_ps, self._keys, self._offsets,
+            self._poison_arr(1))
+        self._note_dispatched(1)
         self.cur = nxt[:, None]
         self._offsets = self._offsets + 1
         self._decode_syncs += 1
@@ -598,7 +742,13 @@ class ServeEngine:
         the min (their in-flight micro-steps waste masked compute
         only). eos/sampling arrays are always host-rebuilt: stale
         values sit behind a zero alive mask.
+
+        On-demand paged engines first grow every active chain to cover
+        the K micro-steps (preempting victims on exhaustion — see
+        _grow_chains), so block tables are static across the scan
+        whichever allocation mode is live.
         """
+        self._grow_chains(K)
         self._decode_steps += K
         if self.paged:
             self._page_slot_steps += K * self.allocator.pages_in_use
@@ -617,23 +767,40 @@ class ServeEngine:
             alive = jnp.where(fresh, alive_h, jnp.minimum(alive_c, alive_h))
             rem = jnp.where(fresh, rem_h, rem_c)
         self._dirty_slots.clear()
+        # dispatch-time occupancy snapshot: which request generation
+        # each slot row of this block belongs to (see _walk_block)
+        seqs = tuple(s.seq if s.active else -1 for s in self.slots)
         self.cache, self.cur, self._offsets, alive_o, rem_o, block = fn(
             self.params, self.cur, self.cache, self._temps, self._top_ks,
-            self._top_ps, self._keys, self._offsets, alive, rem, eos)
-        return alive_o, rem_o, block, K
+            self._top_ps, self._keys, self._offsets, alive, rem, eos,
+            self._poison_arr(K))
+        self._note_dispatched(K)
+        return alive_o, rem_o, block, K, seqs
 
-    def _walk_block(self, block, K: int) -> None:
+    def _walk_block(self, block, K: int, seqs=None) -> None:
         """Sync one dispatched (K, slots) token block and walk it on
         the host: emit/stream/retire exactly as the serial horizon
         path. A block every slot already retired out of (possible for a
         dispatched-ahead horizon that an EOS invalidated) is dropped
-        without syncing."""
-        if not any(s.active for s in self.slots):
+        without syncing.
+
+        ``seqs`` is the per-slot admission-sequence snapshot taken when
+        the block was dispatched: a slot's rows are walked only if its
+        CURRENT occupant is the same request generation the block was
+        computed for. Between dispatch and walk the occupant can change
+        — retire on deadline, get aborted, or be preempted for pages,
+        with a new request (or the same one, resumed) admitted into the
+        freed slot — and without the gate the new occupant would swallow
+        the stale rows (pads after an in-scan retirement, or the dead
+        request's never-observed continuation after an abort)."""
+        eligible = [s for s in self.slots
+                    if s.active and (seqs is None or seqs[s.id] == s.seq)]
+        if not eligible:
             return
         self._decode_syncs += 1
         blk = np.asarray(block)             # one sync per horizon
-        for s in self.slots:
-            if not s.active:
+        for s in eligible:
+            if not s.active:    # retired by a groupmate's callback mid-walk
                 continue
             for t in range(K):              # walk until retirement
                 self._active_slot_steps += 1
@@ -674,7 +841,7 @@ class ServeEngine:
         rounds = 0
         try:
             while True:
-                self._admit_pending()
+                self._round_boundary()
                 if (pending is None and not self._queue
                         and not any(s.active for s in self.slots)):
                     return
@@ -682,7 +849,7 @@ class ServeEngine:
                 if rounds > max_rounds:
                     raise RuntimeError("run_until_drained did not converge")
                 if pending is not None:
-                    alive_d, rem_d, block, Kd = pending
+                    alive_d, rem_d, block, Kd, seqs = pending
                     pending = None
                     nk = self._ahead_horizon(
                         self._effective_horizon(horizon), Kd)
@@ -690,7 +857,7 @@ class ServeEngine:
                         pending = self._dispatch_horizon(
                             nk, carry=(alive_d, rem_d))
                         self._overlap_rounds += 1
-                    self._walk_block(block, Kd)
+                    self._walk_block(block, Kd, seqs)
                 elif any(s.active for s in self.slots):
                     K = self._effective_horizon(horizon)
                     if self._speculate_now():
@@ -701,16 +868,16 @@ class ServeEngine:
                         pending = self._dispatch_horizon(
                             min(K, self._bucket(self._max_rem())))
                         if not self.overlap:
-                            _, _, block, Kd = pending
+                            _, _, block, Kd, seqs = pending
                             pending = None
-                            self._walk_block(block, Kd)
+                            self._walk_block(block, Kd, seqs)
                 # else: queue blocked with nothing active — a no-op
                 # round; the round budget turns a livelock into the
                 # legacy non-convergence error
                 yield
         finally:
             if pending is not None:
-                self._walk_block(pending[2], pending[3])
+                self._walk_block(pending[2], pending[3], pending[4])
 
     def abort(self, request_id: int) -> Optional[RequestOutput]:
         """Cancel a queued or in-flight request. Returns its output
@@ -722,13 +889,17 @@ class ServeEngine:
         were never observed and are discarded); the page chain is freed
         exactly once, by the same _retire path every finish reason
         uses — a second abort of the same id returns None instead of
-        double-freeing."""
+        double-freeing. A queued request that was previously preempted
+        returns its stashed tokens; one still waiting in an admission
+        group's activation loop is found active (every group slot goes
+        live before any first-token callback fires — see
+        _admit_group), so callback-driven aborts of groupmates retire
+        them instead of leaving a dead slot to be served then thrown
+        away."""
         for i, r in enumerate(self._queue):
             if r.id == request_id:
                 del self._queue[i]
-                st = self._stats.pop(request_id)
-                st.finished_s = st.first_token_s = time.perf_counter()
-                return RequestOutput(request_id, r.inputs, [], "abort", st)
+                return self._finish_queued(r, "abort")
         for s in self.slots:
             if s.active and s.request.id == request_id:
                 self._retire(s, "abort")
@@ -765,6 +936,11 @@ class ServeEngine:
             drafted_tokens=self._drafted,
             accepted_tokens=self._accepted,
             rejected_tokens=self._rejected,
+            preemptions=self._preemptions,
+            resumed_requests=self._resumed,
+            deadline_expirations=self._deadline_expirations,
+            admission_rejections=self._admission_rejections,
+            slot_errors=self._slot_errors,
             mean_tokens_per_sync=self.mean_tokens_per_sync,
             occupancy=self.occupancy,
             page_utilization=self.page_utilization,
@@ -789,6 +965,39 @@ class ServeEngine:
         self._drafted = 0
         self._accepted = 0
         self._rejected = 0
+        self._preemptions = 0
+        self._resumed = 0
+        self._deadline_expirations = 0
+        self._admission_rejections = 0
+        self._slot_errors = 0
+
+    @property
+    def preemptions(self) -> int:
+        """Requests evicted from a slot for page pressure (each either
+        resumed later via prefill-replay or, past preempt_limit,
+        retired as 'preempted_limit')."""
+        return self._preemptions
+
+    @property
+    def resumed_requests(self) -> int:
+        """Preempted requests re-admitted via prefill-replay."""
+        return self._resumed
+
+    @property
+    def deadline_expirations(self) -> int:
+        """Requests retired because deadline_ms elapsed."""
+        return self._deadline_expirations
+
+    @property
+    def admission_rejections(self) -> int:
+        """submit() calls bounced with EngineSaturated (max_pending)."""
+        return self._admission_rejections
+
+    @property
+    def slot_errors(self) -> int:
+        """Slots failed by the non-finite-logits guard (finish_reason
+        'error') while their batch kept decoding."""
+        return self._slot_errors
 
     @property
     def overlap_rounds(self) -> int:
@@ -966,23 +1175,32 @@ class ServeEngine:
         strip_active = self._mask_active   # dense caches: key is transient
 
         def _horizon(p, cur, cache, temps, top_ks, top_ps, keys, offsets,
-                     alive, rem, eos_ids):
-            def body(carry, _):
+                     alive, rem, eos_ids, poison):
+            def body(carry, i):
                 cache, cur, offsets, alive, rem = carry
                 if set_active:
                     cache = dict(cache, active=alive)
                 cache, logits = model.decode_step(ctx, p, cur, cache)
                 if strip_active:
                     cache = {k: v for k, v in cache.items() if k != "active"}
-                tok = sample_tokens_scan(logits[:, -1], temps, top_ks,
+                lg = logits[:, -1]
+                # fault injection: slots scheduled for micro-step i read
+                # NaN logits; the sampler guard emits ERR_TOKEN for that
+                # row only, and the in-scan retirement below kills the
+                # slot exactly like the host walk will
+                lg = jnp.where((poison == i)[:, None], jnp.float32("nan"),
+                               lg)
+                tok = sample_tokens_scan(lg, temps, top_ks,
                                          top_ps, keys, offsets, alive)
                 rem = rem - alive
                 hit_eos = (alive > 0) & (eos_ids >= 0) & (tok == eos_ids)
-                alive = jnp.where(hit_eos | (rem <= 0), 0, alive)
+                alive = jnp.where(hit_eos | (rem <= 0) | (tok == ERR_TOKEN),
+                                  0, alive)
                 return (cache, tok[:, None], offsets + 1, alive, rem), tok
 
             (cache, cur, offsets, alive, rem), block = jax.lax.scan(
-                body, (cache, cur, offsets, alive, rem), None, length=K)
+                body, (cache, cur, offsets, alive, rem),
+                jnp.arange(K, dtype=jnp.int32))
             return cache, cur, offsets, alive, rem, block
 
         return jax.jit(_horizon)
@@ -1024,10 +1242,22 @@ class ServeEngine:
             cache, logits = decode_block(model, ctx, p, feed, cache)
             if strip_active:
                 cache = {k: v for k, v in cache.items() if k != "active"}
-            tgt = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+            lg32 = logits.astype(jnp.float32)
+            tgt = jnp.argmax(lg32, axis=-1)
             tgt = jnp.swapaxes(tgt, 0, 1).astype(block.dtype)   # (K, S)
             out, n_emit, acc, new_cur = accept_longest_prefix(
                 block, tgt, alive)
+            # poisoned-slot isolation on the verify path: a slot whose
+            # target logits went non-finite emits ONE ERR_TOKEN (the
+            # host walk retires it as "error") and accepts nothing;
+            # draft-side NaN needs no guard — a non-finite draft token
+            # simply diverges from the finite target argmax and
+            # acceptance stops there
+            bad = (alive > 0) & ~jnp.all(jnp.isfinite(lg32), axis=(1, 2))
+            n_emit = jnp.where(bad, 1, n_emit)
+            acc = jnp.where(bad, 0, acc)
+            out = jnp.where(bad[None, :] & (jnp.arange(K)[:, None] == 0),
+                            jnp.asarray(ERR_TOKEN, block.dtype), out)
             roll = jnp.where(alive > 0, K - n_emit, 0)
             return (_rollback(cache, roll), _rollback(dcache, roll),
                     out, n_emit, acc, new_cur[:, None])
@@ -1060,7 +1290,7 @@ class ServeEngine:
         self.draft_cache, _, _, _, _, block = dfn(
             draft.params, self.cur, self.draft_cache, self._z_f,
             self._z_i, self._o_f, self._z_keys, self._z_i, alive, rem,
-            self._no_eos)
+            self._no_eos, self._no_poison)
         self.cache, self.draft_cache, out, n_emit, acc, self.cur = vfn(
             self.params, self.cur, self.cache, self.draft_cache, block,
             alive)
@@ -1102,6 +1332,121 @@ class ServeEngine:
             return int(jnp.asarray(inputs["frames"]).shape[1])
         return None
 
+    # -- fault tolerance: injection, on-demand paging, preemption ------
+
+    def _poison_arr(self, K: int):
+        """Per-dispatch NaN-injection schedule from the fault plan:
+        entry s is the micro-step at which slot s's logits are forced
+        non-finite (-1 = never). Always traced, so a clean dispatch and
+        an injected one share the same executable."""
+        if self.faults is None:
+            return self._no_poison
+        arr = self.faults.poison(self.n_slots, K)
+        if arr is None:
+            return self._no_poison
+        return jnp.asarray(np.asarray(arr, np.int32))
+
+    def _pos_cap(self, request: Request) -> int:
+        """Most cache positions a request can ever occupy (original
+        prompt + its full token budget — a resumed request's replay
+        feed is always shorter than this)."""
+        return min(request.inputs[self._tkey].shape[1]
+                   + request.params.max_new_tokens, self.max_len)
+
+    def _note_dispatched(self, K: int) -> None:
+        """Advance each active slot's dispatched-positions bound by the
+        K micro-steps just launched (host upper bound on cache writes;
+        mid-scan retirement only makes it conservative)."""
+        if not self.on_demand:
+            return
+        for s in self.slots:
+            if s.active:
+                self._disp_len[s.id] = min(
+                    self._disp_len[s.id] + K, self._pos_cap(s.request))
+
+    def _grow_chains(self, K: int) -> None:
+        """On-demand page allocation at a dispatch boundary: extend
+        every active chain to cover the next K micro-steps, so block
+        tables stay static across the scan. On pool exhaustion the
+        lowest-priority / youngest request is preempted (possibly the
+        grower itself) instead of raising — MemoryError never escapes
+        the serving loop. Growth walks slots oldest/highest-priority
+        first, so victims are exactly the requests admission would
+        deprioritize."""
+        if not self.on_demand:
+            return
+        for s in sorted((t for t in self.slots if t.active),
+                        key=lambda t: (-t.request.params.priority, t.seq)):
+            if not s.active:    # preempted as a victim earlier in this pass
+                continue
+            r = s.request
+            want = min(self._disp_len[s.id] + K, self._pos_cap(r))
+            chain = self._chains[r.id]
+            while s.active:
+                need = pages_needed(want, self.page_size) - len(chain)
+                if need <= 0:
+                    break
+                got = self.allocator.try_alloc_chain(need)
+                if got is not None:
+                    start = len(chain)
+                    chain.extend(got)
+                    self.cache["block_tables"] = (
+                        self.cache["block_tables"]
+                        .at[s.id, start:start + len(got)]
+                        .set(jnp.asarray(got, jnp.int32)))
+                    break
+                victim = min((t for t in self.slots if t.active),
+                             key=lambda t: (t.request.params.priority,
+                                            -t.seq))
+                self._preempt(victim)
+
+    def _preempt(self, s: _Slot) -> None:
+        """Evict an in-flight request to relieve page pressure: stash
+        its emitted tokens host-side, free its chain, and requeue it at
+        the head for prefill-replay resume. The replay is provably
+        token-identical — teacher-forced prefill is bit-exact vs
+        incremental decode, and the per-token PRNG stream is
+        offset-indexed — so survivors and resumed victims match an
+        uncontended run token for token. Freeing mid-overlap is safe
+        for the same reason abort is: device ops execute in submission
+        order, so any stale in-flight writes to the freed pages land
+        before the pages' next owner writes them. Past
+        ``preempt_limit`` evictions the request retires as
+        "preempted_limit" with its partial tokens instead of thrashing
+        the pool forever."""
+        r = s.request
+        n = self._preempt_counts.get(r.id, 0) + 1
+        self._preemptions += 1
+        self._stats[r.id].preemptions = n
+        if n > self.preempt_limit:
+            self._retire(s, "preempted_limit")
+            return
+        self._preempt_counts[r.id] = n
+        self._preempted[r.id] = list(s.tokens)
+        s.active = False
+        s.request = None
+        s.tokens = []
+        self._disp_len.pop(s.id, None)
+        self._dirty_slots.add(s.id)
+        self.allocator.free_chain(self._chains.pop(r.id))
+        self.cache["block_tables"] = \
+            self.cache["block_tables"].at[s.id].set(TRASH_PAGE)
+        self.cache["active"] = self.cache["active"].at[s.id].set(0)
+        self.cache["len"] = self.cache["len"].at[s.id].set(0)
+        self._queue.appendleft(r)
+
+    def _feed_tokens(self, r: Request):
+        """Prefill feed for a request: its prompt, extended with all
+        but the last stashed token when resuming a preempted request
+        (the last stashed token becomes the pending decode token — the
+        exact slot state at eviction)."""
+        toks = r.inputs[self._tkey]
+        stash = self._preempted.get(r.id)
+        if stash and len(stash) > 1:
+            toks = jnp.concatenate(
+                [toks, jnp.asarray(stash[:-1], jnp.int32)[None]], axis=1)
+        return toks
+
     def _admit_pending(self):
         if not self.paged:
             while self._queue and self.free_slot() is not None:
@@ -1116,13 +1461,23 @@ class ServeEngine:
     # -- paged admission -----------------------------------------------
 
     def _arm_pages(self, request: Request) -> int:
-        """Pages one KV arm reserves at admission: the full
-        prompt+decode budget, so an admitted request can never die
-        mid-decode from page pressure (no preemption/swap path yet —
-        see ROADMAP)."""
+        """Pages one KV arm reserves at admission under whole-budget
+        reservation (draft-armed engines): the full prompt+decode
+        budget, so the request can never hit page pressure mid-decode.
+        On-demand engines instead admit with prefill pages only (see
+        _admit_pages) and grow per dispatch, preempting on exhaustion."""
         budget = (request.inputs[self._tkey].shape[1]
                   + request.params.max_new_tokens)
         return pages_needed(min(budget, self.max_len), self.page_size)
+
+    def _admit_pages(self, request: Request) -> int:
+        """Pages admission must allocate for one request right now:
+        just the prefill feed when on-demand (decode pages come later,
+        per dispatched horizon), the whole budget otherwise."""
+        if self.on_demand:
+            return pages_needed(self._feed_tokens(request).shape[1],
+                                self.page_size)
+        return self._request_pages(request)
 
     def _request_pages(self, request: Request) -> int:
         """Total page reservation across arms: a speculative engine
@@ -1132,8 +1487,9 @@ class ServeEngine:
         return self._arm_pages(request) * arms
 
     def _shape_key(self, request: Request):
-        """Padded-batch compile key: prompt bucket + any side-input shapes."""
-        key = [self._bucket(request.inputs[self._tkey].shape[1])]
+        """Padded-batch compile key: prefill-feed bucket (prompt, plus
+        replayed tokens for a resumed request) + side-input shapes."""
+        key = [self._bucket(self._feed_tokens(request).shape[1])]
         for k in ("src_tokens", "frames", "img_embeds"):
             if k in request.inputs:
                 key.append((k, tuple(request.inputs[k].shape[1:])))
@@ -1162,7 +1518,7 @@ class ServeEngine:
         for r in self._queue:
             if len(group) >= free or self._shape_key(r) != head_key:
                 break
-            pages = self._request_pages(r)
+            pages = self._admit_pages(r)
             if not self.allocator.can_alloc(need + pages):
                 break
             group.append(r)
@@ -1176,10 +1532,18 @@ class ServeEngine:
         return group
 
     def _admit_group(self, group: List[Request]):
-        """Admit a same-shape group under ONE jitted prefill+insert call."""
+        """Admit a same-shape group under ONE jitted prefill+insert
+        call. A resumed (previously preempted) request prefills its
+        prompt + already-emitted tokens (minus the last, which becomes
+        the pending decode token) — teacher-forced replay that rebuilds
+        the exact KV/PRNG state it was evicted with, so its remaining
+        stream is token-identical. Slot state for the WHOLE group goes
+        live before any first-token callback fires, so a callback
+        aborting a groupmate finds it admitted (and retirable) instead
+        of racing a half-built group."""
         n = len(group)
         free = [s.id for s in self.slots if not s.active][:n]
-        toks = [r.inputs[self._tkey] for r in group]
+        toks = [self._feed_tokens(r) for r in group]
         true_lens = [t.shape[1] for t in toks]
         pad_to = self._bucket(max(true_lens))
         inputs = {self._tkey: jnp.concatenate(
@@ -1191,7 +1555,9 @@ class ServeEngine:
         chains = []
         rows = np.zeros((n, self.max_pages), np.int32)  # 0 = trash page
         for i, r in enumerate(group):
-            chain = self.allocator.alloc_chain(self._arm_pages(r))
+            chain = self.allocator.alloc_chain(
+                pages_needed(true_lens[i], self.page_size)
+                if self.on_demand else self._arm_pages(r))
             chains.append(chain)
             rows[i, :len(chain)] = chain
         dchains = []
@@ -1219,25 +1585,49 @@ class ServeEngine:
         self.prefill_shapes.add(
             tuple(sorted((k, tuple(v.shape)) for k, v in inputs.items())))
         first = np.asarray(first)
-        now = time.perf_counter()
+        now = self._now()
+        admitted = []
         for i, (r, sid) in enumerate(zip(group, free)):
             s = self.slots[sid]
             sp = r.params
-            tok = int(first[i])
+            stash = self._preempted.pop(r.id, None)
+            if stash:
+                # resume: the replay prefill's sampled token is
+                # discarded — the pending decode token is the last one
+                # emitted before eviction, and the PRNG offset picks up
+                # at fold len(stash), exactly the pre-eviction state
+                tok = int(stash[-1])
+                self._resumed += 1
+            else:
+                tok = int(first[i])
             self.cur = self.cur.at[sid, 0].set(tok)
             self._temps = self._temps.at[sid].set(sp.temperature)
             self._top_ks = self._top_ks.at[sid].set(sp.top_k)
             self._top_ps = self._top_ps.at[sid].set(sp.top_p)
             self._keys = self._keys.at[sid].set(keys[i])
-            self._offsets = self._offsets.at[sid].set(1)
+            self._offsets = self._offsets.at[sid].set(
+                len(stash) if stash else 1)
             self._chains[r.id] = chains[i]
             if self.draft is not None:
                 self._draft_chains[r.id] = dchains[i]
             s.request = r
-            s.tokens = []
+            s.tokens = list(stash) if stash else []
             s.active = True
+            s.seq = self._admit_seq
+            self._admit_seq += 1
+            if self.on_demand:
+                self._disp_len[sid] = true_lens[i]
             self._last_admitted_slot = sid
             self._dirty_slots.add(sid)
+            admitted.append((s, r, tok, stash is not None))
+        # first-token delivery only after EVERY slot in the group is
+        # live (see docstring); resumed requests already streamed their
+        # stashed tokens before eviction and re-emit nothing
+        for s, r, tok, resumed in admitted:
+            if not s.active or s.request is not r:
+                continue    # a groupmate's callback aborted it already
+            if resumed:
+                continue
             self._stats[r.id].first_token_s = now
             self._emit(s, tok, synced=False)
 
@@ -1279,9 +1669,11 @@ class ServeEngine:
         s.request = request
         s.tokens = []                   # prefill produced the first token
         s.active = True
+        s.seq = self._admit_seq
+        self._admit_seq += 1
         self._last_admitted_slot = slot
         self._dirty_slots.add(slot)
-        self._stats[request.id].first_token_s = time.perf_counter()
+        self._stats[request.id].first_token_s = self._now()
         self._emit(s, tok, synced=False)
 
     def _maybe_retire(self, s: _Slot):
@@ -1294,15 +1686,24 @@ class ServeEngine:
     def _retire(self, s: _Slot, reason: str):
         rid = s.request.id
         st = self._stats.pop(rid)
-        st.finished_s = time.perf_counter()
+        st.finished_s = self._now()
         st.new_tokens = len(s.tokens)
         out = RequestOutput(
             rid, s.request.inputs, list(s.tokens), reason, st, slot=s.id)
         self._finished.append(out)
-        if self.sla is not None and reason != "abort":
-            # aborts carry caller-truncated timings; feeding them to the
-            # percentile window would reward cancelling slow requests
+        if reason == "deadline":
+            self._deadline_expirations += 1
+        elif reason == "error":
+            self._slot_errors += 1
+        if self.sla is not None and reason in ("eos", "length"):
+            # only clean completions feed the percentile window: aborts
+            # carry caller-truncated timings, and fault-path timings
+            # (deadline / preempted_limit / error) would reward
+            # load-shedding with a "better" p95
             self.sla.observe(out)
+        self._preempted.pop(rid, None)
+        self._preempt_counts.pop(rid, None)
+        self._disp_len.pop(s.id, None)
         s.active = False
         s.request = None
         if self.paged:

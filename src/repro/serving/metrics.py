@@ -58,6 +58,12 @@ class EngineMetrics:
     drafted_tokens: int
     accepted_tokens: int
     rejected_tokens: int
+    # fault-tolerance counters
+    preemptions: int             # requests evicted for page pressure
+    resumed_requests: int        # preempted requests re-admitted (replay)
+    deadline_expirations: int    # requests retired past deadline_ms
+    admission_rejections: int    # submits bounced with EngineSaturated
+    slot_errors: int             # slots failed by the NaN/Inf logits guard
     # derived ratios (0.0 when the denominator counter is still zero)
     mean_tokens_per_sync: float
     occupancy: float             # active slot-steps / dispatched slot-steps

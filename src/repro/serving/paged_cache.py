@@ -101,6 +101,17 @@ class PageAllocator:
         self._in_use.update(chain)
         return chain
 
+    def try_alloc_chain(self, n: int) -> "List[int] | None":
+        """``alloc_chain`` that returns ``None`` on shortage instead of
+        raising — the engine's on-demand growth path turns a shortage
+        into victim preemption, never into a MemoryError escaping the
+        serving loop."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > self.num_free:
+            return None
+        return self.alloc_chain(n)
+
     def free_chain(self, chain: Sequence[int]) -> None:
         """Return a request's pages to the free list (chain order kept)."""
         chain = list(chain)

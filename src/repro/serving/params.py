@@ -4,7 +4,25 @@ These are the load-bearing abstraction of the serving stack (the vLLM
 convention adapted to the paper's quantized-NMT deployment): every
 inference call in the repo is a `Request` carrying its own frozen
 `SamplingParams`, and every completion is a `RequestOutput` with an
-explicit finish reason (`eos` | `length` | `abort`) and timing stats.
+explicit finish reason and timing stats. Finish reasons cover the
+fault-tolerant paths too — a request always comes back with a typed
+outcome instead of an exception escaping the serving loop:
+
+  * ``eos`` / ``length``    — normal completion.
+  * ``abort``               — cancelled by the caller.
+  * ``deadline``            — ``deadline_ms`` elapsed before completion
+    (partial tokens are returned).
+  * ``preempted_limit``     — preempted for pages more than the
+    engine's ``preempt_limit`` times; retired with partial tokens
+    rather than thrashing the pool forever.
+  * ``error``               — the model produced non-finite logits for
+    this request (sampler NaN/Inf guard); only the offending slot
+    fails, with its partial tokens, while the fused batch continues.
+
+``EngineSaturated`` is the typed admission rejection raised by
+``submit`` when the engine's bounded pending queue (``max_pending``) is
+full — callers retry with backoff instead of seeing an allocator error
+from deep inside the engine.
 
 Sampling semantics:
   * ``temperature == 0.0``  -> greedy argmax (the default).
@@ -25,9 +43,26 @@ import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 __all__ = ["SamplingParams", "GREEDY", "Request", "RequestOutput",
-           "RequestStats", "FINISH_REASONS", "latency_percentiles"]
+           "RequestStats", "FINISH_REASONS", "EngineSaturated",
+           "latency_percentiles"]
 
-FINISH_REASONS = ("eos", "length", "abort")
+FINISH_REASONS = ("eos", "length", "abort", "deadline", "preempted_limit",
+                  "error")
+
+
+class EngineSaturated(RuntimeError):
+    """Typed backpressure signal: the engine's bounded pending queue is
+    full. Carries ``pending`` (queue depth at rejection) and ``limit``
+    (the engine's ``max_pending``) so callers can implement
+    retry-with-backoff without parsing the message."""
+
+    def __init__(self, pending: int, limit: int):
+        self.pending = pending
+        self.limit = limit
+        super().__init__(
+            f"engine saturated: {pending} requests pending >= "
+            f"max_pending={limit}; retry after draining (engine.step() / "
+            f"stream()) or deploy with a larger max_pending")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +75,14 @@ class SamplingParams:
     eos_id: Optional[int] = None  # None = never stop on a token id
     max_new_tokens: int = 16      # includes the prefill-sampled first token
     seed: int = 0                 # per-request PRNG stream seed
+    deadline_ms: Optional[float] = None  # wall-clock budget from submit;
+    #                               checked at horizon boundaries (None = no
+    #                               deadline); an expired request retires
+    #                               with finish_reason "deadline" and
+    #                               whatever tokens it has
+    priority: int = 0             # preemption victim ordering: on page-pool
+    #                               exhaustion the lowest-priority (then
+    #                               youngest) request is evicted first
 
     def __post_init__(self):
         if self.temperature < 0.0:
@@ -51,6 +94,9 @@ class SamplingParams:
         if self.max_new_tokens < 1:
             raise ValueError(
                 f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be positive, got {self.deadline_ms}")
 
     @property
     def greedy(self) -> bool:
@@ -97,6 +143,11 @@ class RequestStats:
     verify pass accepted, and how many it threw away (all zero on a
     target-only engine). ``accepted + rejected == drafted`` for every
     completed verify round the request participated in.
+
+    ``preemptions`` counts how many times the request was evicted from
+    its slot for page pressure and later resumed via prefill-replay —
+    the token stream is unaffected (resume is provably identical), only
+    latency pays.
     """
 
     arrival_s: float = 0.0
@@ -107,6 +158,7 @@ class RequestStats:
     drafted: int = 0
     accepted: int = 0
     rejected: int = 0
+    preemptions: int = 0
 
     @property
     def ttft_s(self) -> float:

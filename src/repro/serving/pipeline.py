@@ -194,7 +194,9 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
            calib_batches: Optional[Iterable[dict]] = None,
            draft_spec: Union[str, QuantSpec, None] = None,
            draft_lookahead: int = 4, overlap: bool = True,
-           sla: Optional[SLATarget] = None
+           sla: Optional[SLATarget] = None,
+           max_pending: Optional[int] = None, preempt_limit: int = 3,
+           faults=None
            ) -> TranslationPipeline:
     """Build a ready-to-serve TranslationPipeline in one call.
 
@@ -259,6 +261,23 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
                  auto-tunes the effective horizon and the paged
                  prefill-group cap against measured p95 TTFT/TPOT over
                  retired requests.
+    max_pending: bounded admission — ``submit()`` raises the typed
+                 ``EngineSaturated`` (with .pending/.limit) once this
+                 many requests are queued, instead of buffering
+                 unboundedly; callers retry with backoff after draining.
+                 None (default) keeps the unbounded queue.
+    preempt_limit: on-demand paged engines (paged, no draft arm) admit
+                 with only the *prompt's* pages and grow chains as
+                 decode advances; on pool exhaustion the lowest-priority
+                 youngest request is preempted (pages freed, tokens
+                 stashed host-side) and later resumed by prefill replay
+                 with identical output. A request preempted more than
+                 ``preempt_limit`` times retires with
+                 ``finish_reason='preempted_limit'``.
+    faults:      a serving.faults.FaultPlan — deterministic injection of
+                 allocator exhaustion, NaN logits, and deadline-clock
+                 skew at seeded round/dispatch coordinates (chaos tests,
+                 ``bench_serving --faults``). None disables injection.
     """
     spec = resolve_spec(policy)
     cfg = get_config(arch_or_cfg) if isinstance(arch_or_cfg, str) \
@@ -335,7 +354,9 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
                          kv_dtype=kv, ctx=ctx, paged=paged,
                          page_size=page_size, num_pages=num_pages,
                          max_src_len=max_src_len, horizon=horizon,
-                         draft=draft, overlap=overlap, sla=sla)
+                         draft=draft, overlap=overlap, sla=sla,
+                         max_pending=max_pending,
+                         preempt_limit=preempt_limit, faults=faults)
     name = policy if isinstance(policy, str) else str(spec)
     return TranslationPipeline(cfg, model, params, engine, ctx, name,
                                fp_bytes, spec,

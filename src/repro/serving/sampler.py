@@ -19,6 +19,14 @@ sampling, plus an ``alive`` mask so slots retired mid-horizon (EOS /
 budget) emit ``pad_id`` instead of a live draw. The PRNG stream is
 offset-indexed either way, so fused and per-token decode produce the
 same tokens for the same request.
+
+Poisoned-request isolation: a slot whose logits contain NaN/Inf (an
+overflowed sub-octet arm, a numerically fragile quant format) samples
+the ``ERR_TOKEN`` sentinel instead of garbage. The guard is per-row —
+the other slots in the fused batch sample normally — and the engine
+retires the offending slot with ``finish_reason='error'`` when the
+sentinel reaches the host walk, so one poisoned request never takes
+down a batch or escapes ``step()`` as an exception.
 """
 
 from __future__ import annotations
@@ -26,9 +34,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["sample_tokens", "sample_tokens_scan"]
+__all__ = ["sample_tokens", "sample_tokens_scan", "ERR_TOKEN"]
 
 _NEG = jnp.float32(-1e30)   # mask value: exp() underflows to exactly 0
+
+# sentinel "token" emitted for a slot whose logits are non-finite; never a
+# valid vocab id, never equal to a pad (0) or any eos_id, so the host walk
+# can detect it unambiguously in a synced block
+ERR_TOKEN = -2
 
 
 def _sample_row(logits, temp, top_k, top_p, key, offset):
@@ -58,21 +71,25 @@ def sample_tokens(logits, temps, top_ks, top_ps, keys, offsets):
     """Batched next-token sampling across slots.
 
     logits (S, V) f32, temps/top_ps (S,) f32, top_ks/offsets (S,) i32,
-    keys (S, 2) u32 -> tokens (S,) i32.
+    keys (S, 2) u32 -> tokens (S,) i32. Rows with any non-finite logit
+    return ``ERR_TOKEN`` (see module docstring) instead of a draw.
     """
-    return jax.vmap(_sample_row)(logits.astype(jnp.float32), temps, top_ks,
-                                 top_ps, keys, offsets)
+    lg = logits.astype(jnp.float32)
+    toks = jax.vmap(_sample_row)(lg, temps, top_ks, top_ps, keys, offsets)
+    ok = jnp.all(jnp.isfinite(lg), axis=-1)
+    return jnp.where(ok, toks, jnp.int32(ERR_TOKEN))
 
 
 def sample_tokens_scan(logits, temps, top_ks, top_ps, keys, offsets, alive,
                        pad_id: int = 0):
     """Scan-body form of ``sample_tokens`` for horizon-fused decode.
 
-    Same sampling semantics, plus an ``alive`` (S,) i32 mask: slots that
-    retired earlier in the horizon (EOS or exhausted ``max_new_tokens``
-    budget) emit ``pad_id`` — the host-side walk of the emitted token
-    block stops at each slot's retirement point, so pads are never read
-    as generated tokens.
+    Same sampling semantics (including the non-finite-logits ERR_TOKEN
+    guard), plus an ``alive`` (S,) i32 mask: slots that retired earlier
+    in the horizon (EOS or exhausted ``max_new_tokens`` budget) emit
+    ``pad_id`` — the host-side walk of the emitted token block stops at
+    each slot's retirement point, so pads are never read as generated
+    tokens (a dead slot's poisoned logits are masked, not flagged).
     """
     toks = sample_tokens(logits, temps, top_ks, top_ps, keys, offsets)
     return jnp.where(alive > 0, toks, jnp.int32(pad_id))

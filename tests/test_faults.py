@@ -1,0 +1,425 @@
+"""Fault-tolerant serving: deadlines, backpressure, preemption, NaN
+isolation, and the deterministic fault-injection harness.
+
+The contract under test: no injected fault ever raises out of step() /
+run_until_drained() — every request comes back with a typed
+finish_reason — and fault handling never corrupts a neighbour:
+survivors of a faulted run are token-for-token identical to a
+fault-free run (resumed preemption victims included, via bit-exact
+teacher-forced prefill replay and offset-indexed per-request PRNG
+streams), every non-survivor's partial tokens are a prefix of its
+fault-free stream, and the page allocator's invariants hold after
+every drain.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, reduce_config
+from repro.models import Ctx, build_model
+from repro.serving import (EngineSaturated, FaultPlan, SamplingParams,
+                           ServeEngine, pages_needed)
+
+CTX = Ctx(compute_dtype=jnp.float32)
+
+P1 = np.array([[5, 6, 7, 8, 9]], np.int32)
+P2 = np.array([[3, 4, 5, 6, 2]], np.int32)
+P3 = np.array([[9, 8, 7, 6, 5]], np.int32)
+P4 = np.array([[2, 3, 9, 1, 4]], np.int32)
+PROMPTS = (P1, P2, P3, P4)
+
+GREEDY8 = SamplingParams(max_new_tokens=8, eos_id=-1)
+SAMPLED8 = SamplingParams(temperature=0.8, top_p=0.9, max_new_tokens=8,
+                          seed=7, eos_id=-1)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    rc = reduce_config(REGISTRY["gemma3-1b"])
+    model = build_model(rc)
+    params = model.init(jax.random.PRNGKey(0))
+    return rc, model, params
+
+
+def _engine(lm, **kw):
+    _, model, params = lm
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 32)
+    if kw.pop("paged", False):
+        kw.update(paged=True, page_size=4)
+        kw.setdefault("num_pages", 8)
+    return ServeEngine(model, params, ctx=CTX, **kw)
+
+
+def _serve(eng, prompts, sps):
+    ids = [eng.submit({"tokens": p}, sp) for p, sp in zip(prompts, sps)]
+    outs = {o.request_id: o for o in eng.run_until_drained()}
+    return [outs[i] for i in ids]
+
+
+def _reference(lm, prompts, sps, **kw):
+    """Fault-free, uncontended run: the stream every survivor of a
+    faulted run must reproduce exactly."""
+    return _serve(_engine(lm, **kw), prompts, sps)
+
+
+def _assert_prefix(got, ref):
+    assert got.token_ids == ref.token_ids[:len(got.token_ids)], \
+        f"{got.token_ids} is not a prefix of {ref.token_ids}"
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: validation + determinism
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="exhaust_prob"):
+        FaultPlan(exhaust_prob=1.5)
+    with pytest.raises(ValueError, match="hold"):
+        FaultPlan(exhaust_hold=0)
+    with pytest.raises(ValueError, match="hold"):
+        FaultPlan(exhaust_at=[(2, 4, 0)])   # a forever-hold would wedge
+
+
+def test_fault_plan_same_seed_same_events_same_streams(lm):
+    """Two plans with the same seed driving identical engines produce
+    identical event logs and identical outputs — the determinism every
+    chaos test stands on."""
+    def run():
+        plan = FaultPlan(seed=42, exhaust_prob=0.5, exhaust_pages=3,
+                         exhaust_hold=2, nan_prob=0.3, skew_prob=0.2,
+                         skew_ms=10.0)
+        eng = _engine(lm, paged=True, horizon=4, faults=plan)
+        outs = _serve(eng, (P1, P2, P3), (GREEDY8, SAMPLED8, GREEDY8))
+        plan.release_all(eng)
+        eng.allocator.check()
+        return plan.events, [(o.token_ids, o.finish_reason) for o in outs]
+
+    ev_a, outs_a = run()
+    ev_b, outs_b = run()
+    assert ev_a == ev_b
+    assert outs_a == outs_b
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+def test_deadline_expires_active_and_queued(lm):
+    """Clock skew at round 2 pushes both an in-flight and a
+    still-queued request past their deadlines: the active one retires
+    with its partial tokens (a prefix of its fault-free stream), the
+    queued one with none, and an undeadlined neighbour is untouched.
+    The deadline is far beyond real wall time (JIT compiles take
+    seconds) so only the injected 600 s skew can expire it."""
+    ref = _reference(lm, (P1,), (GREEDY8,), slots=1)[0]
+    dl = SamplingParams(max_new_tokens=8, eos_id=-1, deadline_ms=60_000.0)
+    eng = _engine(lm, slots=1, faults=FaultPlan(skew_at=[(2, 600_000.0)]))
+    outs = _serve(eng, (P1, P2, P3), (dl, dl, GREEDY8))
+    assert [o.finish_reason for o in outs] == ["deadline", "deadline",
+                                              "length"]
+    assert len(outs[0].token_ids) >= 1          # partial tokens kept
+    _assert_prefix(outs[0], ref)
+    assert outs[1].token_ids == []              # expired while queued
+    assert eng.metrics().deadline_expirations == 2
+
+
+# ---------------------------------------------------------------------------
+# bounded admission / backpressure
+# ---------------------------------------------------------------------------
+
+def test_engine_saturated_is_typed_and_retryable(lm):
+    eng = _engine(lm, slots=1, max_pending=1)
+    eng.submit({"tokens": P1}, GREEDY8)          # -> the one slot
+    eng.submit({"tokens": P2}, GREEDY8)          # -> the one queue seat
+    with pytest.raises(EngineSaturated) as ei:
+        eng.submit({"tokens": P3}, GREEDY8)
+    assert ei.value.pending == 1 and ei.value.limit == 1
+    assert eng.metrics().admission_rejections == 1
+    while eng.num_pending >= 1:                  # drain, then retry
+        eng.step()
+    rid = eng.submit({"tokens": P3}, GREEDY8)
+    outs = {o.request_id: o for o in eng.run_until_drained()}
+    assert outs[rid].finish_reason == "length"
+    with pytest.raises(ValueError, match="max_pending"):
+        _engine(lm, max_pending=0)
+
+
+def test_on_demand_admission_beats_whole_budget_reservation(lm):
+    """Whole-budget reservation would need 4 pages per request (prompt
+    5 + 8 new tokens at page_size 4), so a 4-page pool could only ever
+    run one at a time. On-demand admission reserves just the prefill
+    pages and both requests decode concurrently."""
+    assert 2 * pages_needed(P1.shape[1] + 8, 4) > 4     # old math blocks
+    eng = _engine(lm, paged=True, num_pages=4)
+    ref = _reference(lm, (P1, P2), (GREEDY8, SAMPLED8), paged=True,
+                     num_pages=16)
+    ids = [eng.submit({"tokens": P1}, GREEDY8),
+           eng.submit({"tokens": P2}, SAMPLED8)]
+    eng.step()
+    assert eng.num_active == 2                   # admitted side by side
+    outs = {o.request_id: o for o in eng.run_until_drained()}
+    for i, r in zip(ids, ref):
+        assert outs[i].token_ids == r.token_ids
+    assert eng.allocator.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# preemption + recompute-on-resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K", [1, 4])
+@pytest.mark.parametrize("sp", [GREEDY8, SAMPLED8],
+                         ids=["greedy", "sampled"])
+def test_preemption_resume_streams_identical(lm, K, sp):
+    """A 5-page pool cannot hold two full 4-page chains: the younger
+    request is evicted mid-decode and resumed by prefill replay. Its
+    stream — and the survivor's — must match an uncontended run token
+    for token, greedy and sampled, per-token and fused dispatch."""
+    ref = _reference(lm, (P1, P2), (sp, sp), paged=True, num_pages=16,
+                     horizon=K)
+    # a generous preempt_limit: the victim re-admits (and re-evicts)
+    # until the survivor's chain frees — thrash-retirement is
+    # test_preempt_limit_retires_with_partial_prefix's subject
+    eng = _engine(lm, paged=True, num_pages=5, horizon=K,
+                  preempt_limit=16)
+    outs = _serve(eng, (P1, P2), (sp, sp))
+    m = eng.metrics()
+    assert m.preemptions >= 1 and m.resumed_requests >= 1
+    for o, r in zip(outs, ref):
+        assert o.token_ids == r.token_ids, \
+            f"K={K}: {o.token_ids} != {r.token_ids}"
+        assert o.finish_reason == "length"
+    assert eng.allocator.pages_in_use == 0
+    eng.allocator.check()
+
+
+def test_preemption_victims_ordered_by_priority_then_age(lm):
+    """Page pressure evicts the lowest-priority request even when it is
+    the oldest; the high-priority neighbour is never touched. Both
+    still finish with their uncontended streams."""
+    lo = SamplingParams(max_new_tokens=8, eos_id=-1, priority=0)
+    hi = SamplingParams(max_new_tokens=8, eos_id=-1, priority=1)
+    ref = _reference(lm, (P1, P2), (lo, hi), paged=True, num_pages=16)
+    eng = _engine(lm, paged=True, num_pages=5, preempt_limit=16)
+    outs = _serve(eng, (P1, P2), (lo, hi))
+    assert outs[0].stats.preemptions >= 1        # old but low priority
+    assert outs[1].stats.preemptions == 0        # high priority: immune
+    for o, r in zip(outs, ref):
+        assert o.token_ids == r.token_ids
+    assert eng.allocator.pages_in_use == 0
+
+
+def test_preempt_limit_retires_with_partial_prefix(lm):
+    """preempt_limit=0: the first eviction retires the victim as
+    'preempted_limit' with its partial tokens (a prefix of its
+    uncontended stream) instead of thrashing the pool."""
+    ref = _reference(lm, (P1, P2), (GREEDY8, GREEDY8), paged=True,
+                     num_pages=16)
+    eng = _engine(lm, paged=True, num_pages=5, preempt_limit=0)
+    outs = _serve(eng, (P1, P2), (GREEDY8, GREEDY8))
+    reasons = sorted(o.finish_reason for o in outs)
+    assert reasons == ["length", "preempted_limit"]
+    for o, r in zip(outs, ref):
+        if o.finish_reason == "length":
+            assert o.token_ids == r.token_ids
+        else:
+            assert 1 <= len(o.token_ids) < len(r.token_ids)
+            _assert_prefix(o, r)
+    assert eng.metrics().resumed_requests == 0
+    assert eng.allocator.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# poisoned-request isolation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K", [1, 16])
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_nan_logits_fail_only_the_offending_slot(lm, K, paged):
+    """Forced-NaN logits on one slot retire ONLY that request
+    (finish_reason 'error', partial tokens a prefix of its clean
+    stream); the groupmate sharing the fused batch is bit-identical to
+    a fault-free run, dense and paged, per-token and fused."""
+    kw = dict(paged=True, num_pages=16) if paged else {}
+    ref = _reference(lm, (P1, P2), (GREEDY8, SAMPLED8), horizon=K, **kw)
+    plan = FaultPlan(nan_at=[(0, 1, 2)])     # dispatch 0, slot 1
+    eng = _engine(lm, horizon=K, faults=plan, **kw)
+    outs = _serve(eng, (P1, P2), (GREEDY8, SAMPLED8))
+    assert outs[0].finish_reason == "length"
+    assert outs[0].token_ids == ref[0].token_ids   # survivor untouched
+    assert outs[1].finish_reason == "error"
+    assert 1 <= len(outs[1].token_ids) < len(ref[1].token_ids)
+    _assert_prefix(outs[1], ref[1])
+    assert eng.metrics().slot_errors == 1
+    if paged:
+        assert eng.allocator.pages_in_use == 0
+        eng.allocator.check()
+
+
+# ---------------------------------------------------------------------------
+# scheduler regressions
+# ---------------------------------------------------------------------------
+
+def test_abort_groupmate_from_first_token_callback(lm):
+    """Regression: aborting a request that is still inside the pending
+    prefill admission group (from a groupmate's first-token callback)
+    must retire it — every group slot goes live before any callback
+    fires — not leave a dead slot to be decoded and thrown away."""
+    eng = _engine(lm, paged=True)
+    state = {}
+
+    def cb(tok):
+        if "aborted" not in state:
+            state["aborted"] = eng.abort(state["victim"])
+
+    ref = _reference(lm, (P1,), (GREEDY8,), paged=True)[0]
+    rid = eng.submit({"tokens": P1}, GREEDY8, on_token=cb)
+    state["victim"] = eng.submit({"tokens": P2}, GREEDY8)
+    outs = {o.request_id: o for o in eng.run_until_drained()}
+    assert state["aborted"].finish_reason == "abort"
+    assert state["victim"] not in outs           # abort returned it
+    assert outs[rid].token_ids == ref.token_ids  # survivor unaffected
+    assert eng.allocator.pages_in_use == 0
+    eng.allocator.check()
+
+
+def test_overlapped_block_not_swallowed_by_new_occupant(lm):
+    """Regression (stale-block seq gate): with asymmetric budgets a
+    short request retires in-scan and its slot is refilled while the
+    overlapped block dispatched against the OLD occupancy is still in
+    flight; the new occupant must not swallow that block's rows."""
+    long_sp = SamplingParams(max_new_tokens=12, eos_id=-1)
+    short_sp = SamplingParams(max_new_tokens=3, eos_id=-1)
+    prompts = (P1, P2[:, :4], P3)
+    sps = (long_sp, short_sp, long_sp)
+    ref = _reference(lm, prompts, sps, slots=3, horizon=4)
+    got = _serve(_engine(lm, slots=2, horizon=4), prompts, sps)
+    for g, r in zip(got, ref):
+        assert g.token_ids == r.token_ids
+        assert g.finish_reason == r.finish_reason
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_fault_counters_reported_and_reset(lm):
+    plan = FaultPlan(nan_at=[(0, 1, 0)], skew_at=[(2, 600_000.0)],
+                     exhaust_at=[(1, 3, 4)])
+    dl = SamplingParams(max_new_tokens=8, eos_id=-1, deadline_ms=60_000.0)
+    # paged admission is deferred to the next step(), so every submit
+    # queues first: the fourth hits the max_pending=3 bound
+    eng = _engine(lm, paged=True, num_pages=5, max_pending=3,
+                  faults=plan)
+    eng.submit({"tokens": P1}, GREEDY8)
+    eng.submit({"tokens": P2}, GREEDY8)
+    eng.submit({"tokens": P3}, dl)
+    with pytest.raises(EngineSaturated):
+        eng.submit({"tokens": P4}, GREEDY8)
+    eng.run_until_drained()
+    m = eng.metrics()
+    assert m.preemptions >= 1
+    assert m.deadline_expirations == 1
+    assert m.admission_rejections == 1
+    assert m.slot_errors == 1
+    eng.reset_metrics()
+    m = eng.metrics()
+    assert (m.preemptions, m.resumed_requests, m.deadline_expirations,
+            m.admission_rejections, m.slot_errors) == (0, 0, 0, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# chaos: every fault class in one run, dense and paged, K=1 and K=16
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K", [1, 16])
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_chaos_equivalence_gate(lm, K, paged):
+    """The PR's acceptance gate: allocator exhaustion + forced NaN +
+    deadline expiry injected into ONE run. Survivors and resumed
+    preemption victims are token-for-token identical to the fault-free
+    engine, every casualty's tokens are a prefix of its fault-free
+    stream, no fault raises out of the serving loop, and the page pool
+    drains clean."""
+    kw = dict(paged=True, num_pages=8) if paged else {}
+    sps = [GREEDY8, SAMPLED8, GREEDY8,
+           SamplingParams(max_new_tokens=8, eos_id=-1,
+                          deadline_ms=60_000.0)]
+    ref_eng = _engine(lm, horizon=K, **kw)
+    ref = _serve(ref_eng, PROMPTS, sps)
+    assert ref_eng.metrics().preemptions == 0    # pool adequate unfaulted
+
+    plan = FaultPlan(exhaust_at=[(0, 4, 8)],     # shrink the pool early,
+                                                 # hold past the decode
+                     nan_at=[(0, 0, 2)],         # poison slot 0's logits
+                     skew_at=[(1, 600_000.0)])   # expire the deadline
+    eng = _engine(lm, horizon=K, faults=plan, preempt_limit=16, **kw)
+    outs = _serve(eng, PROMPTS, sps)             # must not raise
+
+    by_reason = {o.request_id: o.finish_reason for o in outs}
+    assert by_reason[outs[0].request_id] == "error"       # poisoned
+    assert by_reason[outs[3].request_id] == "deadline"    # expired
+    for o, r in zip(outs, ref):
+        if o.finish_reason in ("eos", "length"):
+            assert o.token_ids == r.token_ids, \
+                f"survivor diverged: {o.token_ids} != {r.token_ids}"
+        else:
+            _assert_prefix(o, r)
+    m = eng.metrics()
+    assert m.slot_errors == 1 and m.deadline_expirations == 1
+    if paged:
+        assert m.preemptions >= 1                # the steal forced evictions
+        assert m.resumed_requests >= 1
+        plan.release_all(eng)
+        assert eng.allocator.pages_in_use == 0
+        eng.allocator.check()
+
+
+def _check_random_plan(lm, ref, seed):
+    """One random-plan trial of the chaos property: survivors
+    byte-identical to the fault-free run, casualties prefixes, and the
+    allocator invariant-clean after drain + release."""
+    plan = FaultPlan(seed=seed, exhaust_prob=0.5, exhaust_pages=4,
+                     exhaust_hold=2, nan_prob=0.25, skew_prob=0.2,
+                     skew_ms=25.0)
+    eng = _engine(lm, paged=True, num_pages=8, horizon=4, faults=plan)
+    outs = _serve(eng, (P1, P2, P3), (GREEDY8, SAMPLED8, GREEDY8))
+    for o, r in zip(outs, ref):
+        if o.finish_reason in ("eos", "length"):
+            assert o.token_ids == r.token_ids
+        else:
+            _assert_prefix(o, r)
+    plan.release_all(eng)
+    assert eng.allocator.pages_in_use == 0
+    eng.allocator.check()
+
+
+@pytest.fixture(scope="module")
+def chaos_ref(lm):
+    return _reference(lm, (P1, P2, P3), (GREEDY8, SAMPLED8, GREEDY8),
+                      paged=True, num_pages=16, horizon=4)
+
+
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+def test_chaos_property_fixed_seeds(lm, chaos_ref, seed):
+    """Fixed-seed arm of the chaos property — always runs, so the
+    property is exercised even where hypothesis is unavailable."""
+    _check_random_plan(lm, chaos_ref, seed)
+
+
+def test_chaos_property_random_plans(lm, chaos_ref):
+    """Property: under ANY seeded random FaultPlan, survivors are
+    byte-identical to the fault-free run, casualties are prefixes, and
+    the allocator's invariants hold after drain + release."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=5, deadline=None)
+    @hyp.given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def check(seed):
+        _check_random_plan(lm, chaos_ref, seed)
+
+    check()
