@@ -65,6 +65,21 @@ arm must need FEWER target-model forwards than the target-only run of
 the same burst (``verify_calls`` below the baseline's decode steps;
 run at --horizon 1 for an exact dispatch-level comparison).
 
+``--trace`` adds one serve_{policy}_traced observability row per
+policy: the same burst is served twice on identically-configured paged
+engines — untraced reference, then with
+``deploy(..., trace=TraceConfig())`` — and tripwires red the run
+unless the tracer behaved as a pure observer: traced token streams and
+``decode_syncs`` exactly equal the reference's, the trace carries one
+CLOSED request span per submitted request (no warmup pass, so the
+counts line up), the span/phase stack passes ``Tracer.check()`` with
+zero ring drops, the four round-phase timers (admit / dispatch / sync
+/ walk) sum to more than zero and at most the measured wall clock, and
+the export parses as Chrome/Perfetto trace_event JSON.
+``--trace-out`` / ``--metrics-out`` (each implies ``--trace``) write
+the traced arm's Perfetto JSON and Prometheus text exposition as CI
+artifacts.
+
 Rows (CSV on stdout; ``--json PATH`` additionally writes the artifact
 consumed by CI's bench-smoke job):
   serve_{policy}_{dense|paged}   burst throughput + occupancy + kv MB
@@ -72,12 +87,14 @@ consumed by CI's bench-smoke job):
   serve_{policy}_{mode}_specdec  speculative-decoding arm (--spec-decode)
   serve_{policy}_sla             SLA-admission arm (--sla-ttft-ms/...)
   serve_{policy}_faults          fault-injection chaos arm (--faults)
+  serve_{policy}_traced          observability arm (--trace)
 Every serving row also records per-request latency percentiles
 (p50/p95 TTFT and per-output-token time, from RequestStats via the
 latency_percentiles helper the eval suite shares).
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke] [--json P]
         [--horizon K] [--rate R] [--impl xla|pallas] [--faults]
+        [--trace] [--trace-out P] [--metrics-out P]
         [--spec-decode w4a8kv8] [--sla-ttft-ms T --sla-tpot-ms T]
 """
 
@@ -94,8 +111,9 @@ import numpy as np
 from repro.configs import get_config, reduce_config
 from repro.core import resolve_spec
 from repro.data import SyntheticTranslation
+from repro.obs import PHASES
 from repro.serving import (IMPL_CHOICES, FaultPlan, SamplingParams,
-                           SLATarget, deploy, impl_routes,
+                           SLATarget, TraceConfig, deploy, impl_routes,
                            latency_percentiles, pages_needed)
 
 from .common import csv_row
@@ -250,8 +268,95 @@ def serve_faults(pol, reqs, gen, horizon, impl):
     return name, dt, toks, row, tripped
 
 
+def serve_traced(pol, reqs, gen, horizon, impl,
+                 trace_out=None, metrics_out=None):
+    """Serve one burst twice on identically-configured paged engines —
+    untraced reference, then with ``deploy(..., trace=TraceConfig())``
+    — and hold the tracer to its observer contract. No warmup pass:
+    every request lands in a fresh engine, so the trace must carry
+    exactly one closed, stack-discipline-clean request span per
+    request with zero ring drops; and the traced engine's token
+    streams and ``decode_syncs`` must equal the untraced reference's
+    exactly (tracing must not add host syncs or change scheduling).
+    Returns (name, dt, toks, row, tripwires)."""
+    def burst(trace):
+        pipe = _deploy(pol, True, SLOTS, smoke=True, horizon=horizon,
+                       impl=impl, trace=trace)
+        toks, dt, _, outs = serve_burst(pipe.engine, reqs, gen)
+        return toks, dt, sorted(outs, key=lambda o: o.request_id), pipe
+
+    _, _, ref, ref_pipe = burst(None)
+    toks, dt, outs, pipe = burst(TraceConfig())
+
+    tr = pipe.tracer
+    problems = tr.check()
+    spans = tr.request_spans()
+    closed = sum(1 for s in spans.values() if s["closed"])
+    m = pipe.engine.metrics()
+    phase_ms = {p: getattr(m, f"phase_{p}_ms") for p in PHASES}
+    phase_sum = sum(phase_ms.values())
+    wall_ms = dt * 1e3
+    streams_match = all(o.token_ids == r.token_ids
+                        for o, r in zip(outs, ref))
+    syncs, ref_syncs = pipe.engine.decode_syncs, ref_pipe.engine.decode_syncs
+
+    name = f"serve_{pol}_traced"
+    row = {
+        "tok_s": round(toks / dt, 1),
+        "requests": len(reqs),
+        "horizon": horizon,
+        "events": len(tr),
+        "dropped": tr.dropped,
+        "spans": len(spans),
+        "spans_closed": closed,
+        "check_problems": len(problems),
+        "streams_match": int(streams_match),
+        "decode_syncs": syncs,
+        "decode_syncs_ref": ref_syncs,
+        **{f"phase_{p}_ms": round(v, 3) for p, v in phase_ms.items()},
+        "phase_sum_ms": round(phase_sum, 3),
+        "wall_ms": round(wall_ms, 3),
+        **latency_percentiles(outs),
+    }
+    tripped = []
+    if not streams_match:
+        tripped.append(f"{name}: traced token streams diverged from the "
+                       "untraced reference — the tracer is not an observer")
+    if syncs != ref_syncs:
+        tripped.append(f"{name}: traced decode_syncs {syncs} != untraced "
+                       f"{ref_syncs} — tracing added host syncs")
+    if len(spans) != len(reqs):
+        tripped.append(f"{name}: {len(spans)} request spans != "
+                       f"{len(reqs)} requests")
+    if closed != len(spans):
+        tripped.append(f"{name}: {len(spans) - closed} request spans "
+                       "never closed")
+    if problems:
+        tripped.append(f"{name}: trace discipline: "
+                       + "; ".join(problems[:3]))
+    if tr.dropped:
+        tripped.append(f"{name}: ring buffer dropped {tr.dropped} events "
+                       "on a burst this small")
+    if not 0.0 < phase_sum <= wall_ms * 1.05:
+        tripped.append(f"{name}: phase sum {phase_sum:.1f} ms outside "
+                       f"(0, {wall_ms:.1f} * 1.05] ms wall — phase timers "
+                       "are not measuring disjoint slices of the run")
+    try:
+        chrome = json.loads(json.dumps(tr.to_chrome()))
+        if not isinstance(chrome.get("traceEvents"), list):
+            raise ValueError("no traceEvents list")
+    except (TypeError, ValueError) as exc:
+        tripped.append(f"{name}: trace is not valid Chrome JSON ({exc})")
+    if trace_out:
+        tr.dump_json(trace_out)
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            f.write(pipe.engine.prometheus())
+    return name, dt, toks, row, tripped
+
+
 def _deploy(pol, paged, slots, smoke, horizon=1, impl="xla", draft=None,
-            sla=None):
+            sla=None, trace=None):
     # paged engine: same page pool as the dense engine's KV capacity,
     # spread over twice the slots — memory buys concurrency, not padding
     impls = impl_routes(impl)
@@ -259,6 +364,8 @@ def _deploy(pol, paged, slots, smoke, horizon=1, impl="xla", draft=None,
         impls.update(draft_spec=draft, draft_lookahead=LOOKAHEAD)
     if sla is not None:
         impls.update(sla=sla)
+    if trace is not None:
+        impls.update(trace=trace)
     if paged:
         pages = slots * pages_needed(MAX_LEN, PAGE)
         return deploy("nllb600m", pol, slots=2 * slots, max_len=MAX_LEN,
@@ -285,7 +392,11 @@ def run(smoke: bool = False, json_path: str | None = None,
         rate: int | None = None,
         sla_ttft_ms: float | None = None,
         sla_tpot_ms: float | None = None,
-        faults: bool = False):
+        faults: bool = False,
+        trace: bool = False,
+        trace_out: str | None = None,
+        metrics_out: str | None = None):
+    trace = trace or bool(trace_out) or bool(metrics_out)
     if policies is None:
         policies = list(POLICIES[:2] if smoke else POLICIES)
     for pol in policies:                 # fail on typos before any build
@@ -437,6 +548,18 @@ def run(smoke: bool = False, json_path: str | None = None,
             emit(fname, fdt * 1e6 / max(ftoks, 1), frow)
             tripped.extend(ftripped)
 
+        if trace:
+            # observability arm: traced burst vs untraced reference on
+            # identical engines — observer equivalence is the product,
+            # so no warmup pass (span count must equal request count);
+            # trace/metrics artifacts come from the LAST traced policy
+            trace_cfg = reduce_config(get_config("nllb600m"))
+            tname, tdt, ttoks, trow, ttripped = serve_traced(
+                pol, _requests(trace_cfg, n_req), GEN, horizon, impl,
+                trace_out=trace_out, metrics_out=metrics_out)
+            emit(tname, tdt * 1e6 / max(ttoks, 1), trow)
+            tripped.extend(ttripped)
+
         if sla is not None:
             # SLA-admission arm: same Poisson traffic, the engine's own
             # controller retunes horizon/prefill admission against the
@@ -477,7 +600,7 @@ def run(smoke: bool = False, json_path: str | None = None,
                        "rate": rate, "sla_ttft_ms": sla_ttft_ms,
                        "sla_tpot_ms": sla_tpot_ms,
                        "spec_decode": spec_decode, "faults": faults,
-                       "rows": rows},
+                       "trace": trace, "rows": rows},
                       f, indent=2)
     if tripped:
         raise RuntimeError("serving tripwire: " + "; ".join(tripped))
@@ -522,13 +645,29 @@ def main():
                          "exhaustion, NaN logits, clock skew) and the "
                          "run reds unless survivors match the fault-free "
                          "reference and every fault class fired")
+    ap.add_argument("--trace", action="store_true",
+                    help="add serve_*_traced observability rows: the "
+                         "burst is re-served with lifecycle tracing on "
+                         "and the run reds unless the trace carries one "
+                         "closed span per request, phase times sum to "
+                         "at most the wall clock, and the traced token "
+                         "streams + decode_syncs exactly match an "
+                         "untraced reference")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write the traced arm's Chrome/Perfetto "
+                         "trace_event JSON here (implies --trace)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the traced arm's Prometheus text "
+                         "exposition here (implies --trace)")
     args = ap.parse_args()
     pols = ([p.strip() for p in args.policies.split(",") if p.strip()]
             if args.policies else None)
     run(smoke=args.smoke, json_path=args.json, horizon=args.horizon,
         impl=args.impl, policies=pols, spec_decode=args.spec_decode,
         rate=args.rate, sla_ttft_ms=args.sla_ttft_ms,
-        sla_tpot_ms=args.sla_tpot_ms, faults=args.faults)
+        sla_tpot_ms=args.sla_tpot_ms, faults=args.faults,
+        trace=args.trace, trace_out=args.trace_out,
+        metrics_out=args.metrics_out)
 
 
 if __name__ == "__main__":

@@ -5,9 +5,11 @@ post-training-quantize it to INT4 (the paper's deployment format),
 translate the same sources into two different languages with one model,
 stream a translation token-by-token as each fused horizon block lands,
 redeploy with an FP4 speculative draft arm (same checkpoint, same
-tokens, fewer target-model forwards), then exercise the failure
-surface: bounded admission (EngineSaturated), per-request deadlines,
-and finish_reason on every output.
+tokens, fewer target-model forwards), observe a traced deployment
+(lifecycle spans, round-phase timing, Perfetto + Prometheus exports),
+then exercise the failure surface: bounded admission
+(EngineSaturated), per-request deadlines, and finish_reason on every
+output.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -19,7 +21,8 @@ from repro.configs import REGISTRY, reduce_config
 from repro.data import SyntheticTranslation
 from repro.models import Ctx, build_model
 from repro.optim import warmup_linear
-from repro.serving import EngineSaturated, SamplingParams, deploy
+from repro.serving import (EngineSaturated, SamplingParams, TraceConfig,
+                           deploy)
 from repro.train import make_train_step
 
 ctx = Ctx(compute_dtype=jnp.float32)
@@ -84,6 +87,31 @@ m = spec_pipe.engine.metrics()
 print(f"draft {spec_pipe.draft_spec_str}: acceptance "
       f"{m.acceptance_rate:.2f} ({m.accepted_tokens}/"
       f"{m.drafted_tokens} drafted, {m.verify_calls} verify rounds)")
+
+# --- observing a deployment --------------------------------------------
+# deploy(..., trace=TraceConfig()) wires a lifecycle tracer into the
+# engine: every request becomes a span (queued -> prefill ->
+# decode-round* -> retired) and every scheduler round records where its
+# time went (admit / dispatch / sync / walk). Tracing is a pure
+# observer — token streams and host-sync counts are identical to an
+# untraced engine (CI asserts this), so it is safe to leave on while
+# debugging latency. The trace exports as Chrome/Perfetto JSON (open
+# chrome://tracing or https://ui.perfetto.dev) and the metrics snapshot
+# + always-on TTFT/TPOT histograms render as Prometheus text.
+obs_pipe = deploy(cfg, "int4", slots=2, max_len=16, params=params,
+                  ctx=ctx, trace=TraceConfig())
+obs_pipe.translate(src, "ita", SamplingParams(max_new_tokens=6))
+m = obs_pipe.engine.metrics()
+print(f"\nttft p50/p95 {m.ttft_p50_ms:.1f}/{m.ttft_p95_ms:.1f} ms | "
+      f"phases: admit {m.phase_admit_ms:.0f} ms, "
+      f"dispatch {m.phase_dispatch_ms:.0f} ms, "
+      f"sync {m.phase_sync_ms:.1f} ms, walk {m.phase_walk_ms:.1f} ms")
+obs_pipe.tracer.dump_json("quickstart_trace.json")
+print(f"perfetto trace: {len(obs_pipe.tracer)} events "
+      "-> quickstart_trace.json")
+prom = obs_pipe.engine.prometheus()              # scrape-ready text
+print("prometheus:", [ln for ln in prom.splitlines()
+                      if ln.startswith("repro_serving_decode_syncs ")][0])
 
 # --- failure handling ---------------------------------------------------
 # Every RequestOutput carries a finish_reason ("eos", "length", "abort",

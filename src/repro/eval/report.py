@@ -30,8 +30,12 @@ __all__ = ["SCHEMA_VERSION", "make_report", "dump", "load", "save",
 # v4: every sweep row carries format-level "ttft_p95_ms"/"tpot_p95_ms"
 # columns (worst direction over the pair grid — the numbers an
 # SLATarget is written against; None for pre-v4 runs).
+# v5: every sweep row carries a "round_phases" column — the serving
+# engine's scheduler round-phase wall-time totals
+# ({admit,dispatch,sync,walk}_ms from the obs tracer) for the grid
+# that produced the row; None for untraced (and all pre-v5) runs.
 # Older reports are upgraded on load, one version at a time.
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 
 def _git_rev() -> Optional[str]:
@@ -130,7 +134,21 @@ def _upgrade_v3(report: Dict[str, Any]) -> Dict[str, Any]:
     return {**report, "schema": 4, "rows": rows}
 
 
-_UPGRADES = {1: _upgrade_v1, 2: _upgrade_v2, 3: _upgrade_v3}
+def _upgrade_v4(report: Dict[str, Any]) -> Dict[str, Any]:
+    """Schema 4 -> 5: sweep rows gain the "round_phases" column — the
+    scheduler's per-phase wall-time totals from the obs tracer. Pre-v5
+    runs were never traced, so the value is None: exactly what an
+    untraced v5 run records."""
+    rows = []
+    for row in report.get("rows", []):
+        row = dict(row)
+        if "round_phases" not in row:
+            row["round_phases"] = None
+        rows.append(row)
+    return {**report, "schema": 5, "rows": rows}
+
+
+_UPGRADES = {1: _upgrade_v1, 2: _upgrade_v2, 3: _upgrade_v3, 4: _upgrade_v4}
 
 
 def load(text: str) -> Dict[str, Any]:

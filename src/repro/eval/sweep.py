@@ -21,7 +21,8 @@ import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from ..core import resolve_spec
-from ..serving import deploy
+from ..obs import PHASES
+from ..serving import TraceConfig, deploy
 from .suite import PairScore, evaluate_pairs, summarize
 
 __all__ = ["FormatRow", "quant_sweep", "ANCHOR"]
@@ -48,6 +49,10 @@ class FormatRow:
     # the numbers an SLATarget for this format is written against
     ttft_p95_ms: Optional[float]
     tpot_p95_ms: Optional[float]
+    # scheduler round-phase wall-time totals for the whole grid
+    # ({admit,dispatch,sync,walk}_ms, schema v5) — where this format's
+    # serving time went; None when the sweep ran untraced
+    round_phases: Optional[Dict[str, float]]
     bleu_delta: Optional[float]        # vs the anchor row (None = anchor
     chrf_delta: Optional[float]        # itself, or anchor not in sweep)
     calibrated: bool                   # per-site static act scales set?
@@ -66,7 +71,7 @@ def quant_sweep(arch_or_cfg, formats: Sequence[str], *, params: Any,
                 max_new_tokens: Optional[int] = None,
                 calib_batches_fn=None,
                 deploy_kwargs: Optional[Dict[str, Any]] = None,
-                log=print) -> List[FormatRow]:
+                trace: bool = False, log=print) -> List[FormatRow]:
     """Evaluate one checkpoint across precision presets.
 
     params:     trained parameter tree (pre-quantization); each format
@@ -88,6 +93,11 @@ def quant_sweep(arch_or_cfg, formats: Sequence[str], *, params: Any,
                 its acceptance_rate column)... (deploy() itself derives
                 each format's activation route from the spec, so one
                 ctx serves the whole sweep).
+    trace:      deploy each format's engine with lifecycle tracing on
+                and record its scheduler round-phase totals in the
+                row's ``round_phases`` column (schema v5) — token
+                streams and scores are unchanged (tracing is a pure
+                observer); untraced sweeps record None.
     """
     resolved = [resolve_spec(f) for f in formats]   # fail fast on typos
     dk = dict(deploy_kwargs or {})
@@ -97,12 +107,19 @@ def quant_sweep(arch_or_cfg, formats: Sequence[str], *, params: Any,
         calib = None
         if calib_batches_fn is not None and spec.quantizes_act:
             calib = calib_batches_fn()
+        if trace:
+            dk["trace"] = TraceConfig()   # fresh Tracer per engine
         pipe = deploy(arch_or_cfg, fmt, params=params,
                       calib_batches=calib, **dk)
         scores = evaluate_pairs(pipe, pair_list, n_sent=n_sent, seed=seed,
                                 max_new_tokens=max_new_tokens,
                                 languages=languages)
         agg = summarize(scores)
+        phases = None
+        if trace:
+            m = pipe.engine.metrics()
+            phases = {f"{p}_ms": round(getattr(m, f"phase_{p}_ms"), 3)
+                      for p in PHASES}
         row = FormatRow(
             fmt=fmt, spec=pipe.spec_str, model_bytes=pipe.quantized_bytes,
             fp_bytes=pipe.fp_bytes,
@@ -116,6 +133,7 @@ def quant_sweep(arch_or_cfg, formats: Sequence[str], *, params: Any,
             if scores else None,
             tpot_p95_ms=round(max(s.tpot_p95_ms for s in scores), 3)
             if scores else None,
+            round_phases=phases,
             bleu_delta=None, chrf_delta=None,
             calibrated=pipe.ctx.act_scales is not None,
             pair_scores=tuple(scores))

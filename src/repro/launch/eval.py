@@ -128,6 +128,11 @@ def main(argv=None):
                     help="serve the grid with serial dispatch-then-walk "
                          "rounds (default: overlapped scheduler; grids "
                          "are token-identical either way)")
+    ap.add_argument("--trace", action="store_true",
+                    help="serve the grid with lifecycle tracing on: each "
+                         "report row gains its round_phases column — "
+                         "where serving time went, per scheduler phase "
+                         "(grids are token-identical either way)")
     ap.add_argument("--impl", choices=IMPL_CHOICES, default="xla")
     ap.add_argument("--calib-batches", type=int, default=4,
                     help="calibration batches for act-quantizing presets "
@@ -204,7 +209,7 @@ def main(argv=None):
         cfg, formats, params=params, pair_list=pair_list, languages=langs,
         n_sent=args.n_sent, seed=args.seed,
         calib_batches_fn=calib_batches_fn if args.calib_batches else None,
-        deploy_kwargs=deploy_kwargs)
+        deploy_kwargs=deploy_kwargs, trace=args.trace)
     dt = time.perf_counter() - t0
 
     report = make_report(
@@ -220,6 +225,7 @@ def main(argv=None):
                 "draft_spec": args.draft_spec,
                 "draft_lookahead": args.draft_lookahead,
                 "impl": args.impl, "calib_batches": args.calib_batches,
+                "trace": args.trace,
                 "smoke": args.smoke, "wall_s": round(dt, 1)})
     print()
     print(render_markdown(report))

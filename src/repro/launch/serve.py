@@ -12,7 +12,15 @@ Failure handling is first-class: ``--max-pending`` bounds the queue
 (the submit loop retries with backoff on the typed EngineSaturated),
 ``--deadline-ms`` gives every request a wall-clock budget, and the
 shutdown line reports the engine's fault counters (preemptions,
-deadline expirations, admission rejections, slot errors).
+deadline expirations, admission rejections, slot errors). Every
+shutdown number is read from ONE frozen ``engine.metrics()`` snapshot,
+so the printed summary cannot drift from what benchmarks record.
+
+Observability: ``--trace-out FILE`` serves with lifecycle + round-phase
+tracing enabled and dumps Chrome/Perfetto ``trace_event`` JSON at
+shutdown (open in chrome://tracing or ui.perfetto.dev);
+``--metrics-out FILE`` writes the Prometheus text exposition of the
+final metrics snapshot + latency histograms.
 
   PYTHONPATH=src python -m repro.launch.serve --arch nllb600m --smoke \
       --policy int4 --requests 6 --gen 8 --temperature 0.7 --top-p 0.9
@@ -30,7 +38,7 @@ from ..configs import REGISTRY
 from ..core import ALIASES, resolve_spec
 from ..data import SyntheticTranslation
 from ..serving import (IMPL_CHOICES, EngineSaturated, SamplingParams,
-                       SLATarget, deploy, impl_routes)
+                       SLATarget, TraceConfig, deploy, impl_routes)
 
 
 def main():
@@ -80,6 +88,13 @@ def main():
                     help="per-request wall-clock budget from submit; an "
                          "expired request retires with finish_reason "
                          "'deadline' and its partial tokens")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="enable lifecycle/round-phase tracing and dump "
+                         "Chrome/Perfetto trace_event JSON here at "
+                         "shutdown (open in chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the final metrics snapshot + latency "
+                         "histograms as Prometheus text exposition")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -101,6 +116,7 @@ def main():
                   draft_lookahead=args.draft_lookahead,
                   overlap=not args.no_overlap, sla=sla,
                   max_pending=args.max_pending,
+                  trace=TraceConfig() if args.trace_out else None,
                   **impl_routes(args.impl))
     print(f"model bytes {pipe.fp_bytes/2**20:.1f} MB -> "
           f"{pipe.quantized_bytes/2**20:.1f} MB "
@@ -172,12 +188,27 @@ def main():
                  f"({m.accepted_tokens}/{m.drafted_tokens} drafted, "
                  f"{m.verify_calls} verify rounds)")
     print(line + ")")
+    # latency summary from the SAME frozen snapshot (histogram-backed
+    # nearest-rank percentiles over bucket upper edges)
+    print(f"latency: ttft p50/p95 {m.ttft_p50_ms:.1f}/{m.ttft_p95_ms:.1f} "
+          f"ms, tpot p50/p95 {m.tpot_p50_ms:.2f}/{m.tpot_p95_ms:.2f} ms")
     # shutdown fault summary: zero across the board on a healthy run
     print(f"faults: {m.preemptions} preemptions "
           f"({m.resumed_requests} resumed), "
           f"{m.deadline_expirations} deadline expirations, "
           f"{m.admission_rejections} admission rejections, "
           f"{m.slot_errors} slot errors")
+    if args.trace_out:
+        print(f"phases: admit {m.phase_admit_ms:.1f} ms, dispatch "
+              f"{m.phase_dispatch_ms:.1f} ms, sync {m.phase_sync_ms:.1f} "
+              f"ms, walk {m.phase_walk_ms:.1f} ms")
+        pipe.tracer.dump_json(args.trace_out)
+        print(f"trace: {len(pipe.tracer)} events "
+              f"({pipe.tracer.dropped} dropped) -> {args.trace_out}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(pipe.engine.prometheus())
+        print(f"metrics: prometheus text -> {args.metrics_out}")
     if pipe.engine.sla is not None:
         ctl = pipe.engine.sla
         held = ctl.holding()

@@ -1,0 +1,31 @@
+"""Observability: host-side tracing + metrics export for serving.
+
+The paper's headline numbers (66 tok/s, 4.2x speedup) are whole-run
+averages over an opaque pipeline; this package is the layer that breaks
+such numbers down — *where does a round spend its time, and what did
+each request live through?* Two modules:
+
+* ``obs.trace`` — a low-overhead ring-buffered structured tracer
+  (``Tracer`` / ``TraceConfig``). The serving engine emits per-request
+  lifecycle spans (queued -> prefill -> decode-round* -> retired, plus
+  preempted/resumed/verify/fault events) and per-round scheduler phase
+  spans (admit / dispatch / sync / walk), all stamped from the engine's
+  own clock so fault-injected skew shows up in traces. Exports
+  Chrome/Perfetto ``trace_event`` JSON (open in chrome://tracing or
+  ui.perfetto.dev).
+* ``obs.metrics`` — the single nearest-rank ``percentile`` definition
+  (shared by ``serving.latency_percentiles`` and the SLA controller), a
+  fixed log-bucket ``Histogram`` with merge, and a Prometheus
+  text-exposition renderer over an ``EngineMetrics`` snapshot plus
+  histograms.
+
+This package imports nothing from ``repro.serving`` (serving imports
+it), so it can also observe future subsystems (mesh replicas, the
+background pump) without a cycle.
+"""
+
+from .metrics import Histogram, percentile, render_prometheus
+from .trace import PHASES, SCHED_TID, TraceConfig, TraceEvent, Tracer
+
+__all__ = ["Histogram", "percentile", "render_prometheus", "PHASES",
+           "SCHED_TID", "TraceConfig", "TraceEvent", "Tracer"]

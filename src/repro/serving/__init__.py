@@ -19,10 +19,17 @@ preempt and transparently resume requests under page pressure; and
 `deploy(..., faults=FaultPlan(...))` injects deterministic allocator
 exhaustion / NaN logits / clock skew for chaos testing.
 
+Observability: `deploy(..., trace=TraceConfig())` wires an `obs.Tracer`
+into the engine — per-request lifecycle spans and scheduler round-phase
+timing, exportable as Chrome/Perfetto JSON (`pipe.tracer.dump_json`);
+`engine.prometheus()` renders the metrics snapshot + ttft/tpot/phase
+histograms as Prometheus text (see `repro.obs`).
+
 `greedy_generate` / `translate` remain as deprecated single-shot
 wrappers for legacy callers.
 """
 
+from ..obs import TraceConfig, Tracer
 from .engine import ServeEngine, greedy_generate, translate
 from .faults import FaultPlan
 from .metrics import EngineMetrics, SLATarget
@@ -40,4 +47,4 @@ __all__ = ["ServeEngine", "greedy_generate", "translate", "SamplingParams",
            "PageAllocator", "pages_needed", "impl_routes", "IMPL_CHOICES",
            "DraftArm", "accept_longest_prefix", "build_draft_arm",
            "EngineMetrics", "SLATarget", "EngineSaturated", "FaultPlan",
-           "FINISH_REASONS", "ERR_TOKEN"]
+           "FINISH_REASONS", "ERR_TOKEN", "TraceConfig", "Tracer"]

@@ -151,6 +151,8 @@ import numpy as np
 
 from ..models.api import decode_block
 from ..models.layers import Ctx
+from ..obs import PHASES, SCHED_TID, Histogram, TraceConfig, Tracer
+from ..obs.metrics import render_prometheus
 from .metrics import EngineMetrics, SLAController, SLATarget
 from .paged_cache import TRASH_PAGE, PageAllocator, paged_insert, pages_needed
 from .params import (GREEDY, EngineSaturated, Request, RequestOutput,
@@ -197,7 +199,7 @@ class ServeEngine:
                  draft: Optional[DraftArm] = None, overlap: bool = True,
                  sla: Optional[SLATarget] = None,
                  max_pending: Optional[int] = None,
-                 preempt_limit: int = 3, faults=None):
+                 preempt_limit: int = 3, faults=None, trace=None):
         if horizon < 1:
             raise ValueError(f"horizon must be >= 1, got {horizon}")
         if max_pending is not None and max_pending < 1:
@@ -297,6 +299,24 @@ class ServeEngine:
         self._dirty_slots: set = set()
         self.sla = (SLAController(sla, self.horizon, slots)
                     if sla is not None else None)
+        # -- observability --------------------------------------------
+        # trace is a Tracer, a TraceConfig (builds one), or None. Every
+        # emission in the hot paths sits behind `if self.trace is not
+        # None`, so the disabled path adds no allocations, clock reads,
+        # or device syncs to the round loop.
+        if isinstance(trace, TraceConfig):
+            trace = Tracer(trace)
+        self.trace: Optional[Tracer] = trace
+        self._round_no = 0
+        # ttft/tpot histograms record once per retirement — never in
+        # the round loop — so latency percentiles in metrics() are free
+        # and exist even when tracing is off. Phase timing fills only
+        # under tracing (it needs extra perf_counter reads per phase).
+        self._ttft_hist = Histogram()
+        self._tpot_hist = Histogram()
+        self._phase_ms: Dict[str, float] = dict.fromkeys(PHASES, 0.0)
+        self._phase_hist: Dict[str, Histogram] = {p: Histogram()
+                                                  for p in PHASES}
         # -- fault tolerance ------------------------------------------
         self.max_pending = max_pending    # bounded admission queue
         self.preempt_limit = int(preempt_limit)
@@ -477,8 +497,16 @@ class ServeEngine:
             request, inputs={**request.inputs, self._tkey: toks},
             id=self._next_id)
         self._next_id += 1
+        arrival = self._now()
         self._stats[request.id] = RequestStats(
-            arrival_s=self._now(), prompt_len=prompt_len)
+            arrival_s=arrival, prompt_len=prompt_len)
+        if self.trace is not None:
+            tid = request.id + 1
+            self.trace.name_track(tid, f"req {request.id}")
+            self.trace.begin(tid, "request", arrival, rid=request.id,
+                             prompt_len=prompt_len,
+                             max_new_tokens=request.params.max_new_tokens)
+            self.trace.begin(tid, "queued", arrival)
         self._queue.append(request)
         if not self.paged:          # paged admission batches at step()
             self._admit_pending()
@@ -501,6 +529,8 @@ class ServeEngine:
         allow, so slots refill at horizon boundaries instead of waiting
         for a full drain."""
         K = self._effective_horizon(horizon)
+        if self.trace is not None:
+            self._round_begin()
         self._round_boundary()
         n_active = sum(s.active for s in self.slots)
         if self._speculate_now():
@@ -516,6 +546,8 @@ class ServeEngine:
             _, _, block, Kd, seqs = self._dispatch_horizon(
                 min(K, self._bucket(self._max_rem())))
             self._walk_block(block, Kd, seqs)
+        if self.trace is not None:
+            self._round_end()
         return self._take_finished()
 
     def run_until_drained(self, max_steps: int = 1_000_000,
@@ -606,16 +638,39 @@ class ServeEngine:
         (FaultPlan deadline tests advance time without sleeping)."""
         return time.perf_counter() + self._skew_s
 
+    def _phase_done(self, phase: str, t0: float, **args) -> None:
+        """Close one scheduler phase (tracing enabled only): accumulate
+        its wall duration and emit the complete event. Durations come
+        from raw perf_counter deltas so a fault-injected skew jump
+        inside a phase (faults tick during "admit") cannot inflate it;
+        the event timestamp is anchored on the engine clock so the
+        trace timeline still shows the skew."""
+        dur = time.perf_counter() - t0
+        self._phase_ms[phase] += dur * 1e3
+        self._phase_hist[phase].record(dur * 1e3)
+        self.trace.complete(SCHED_TID, phase, self._now() - dur, dur, **args)
+
+    def _round_begin(self) -> None:
+        self._round_no += 1
+        self.trace.begin(SCHED_TID, "round", self._now(), n=self._round_no)
+
+    def _round_end(self) -> None:
+        self.trace.end(SCHED_TID, "round", self._now())
+
     def _round_boundary(self) -> None:
         """Host-side work at every scheduler round boundary: tick the
         fault plan (release/steal pages, skew the clock), expire
         deadlines, then admit from the queue. Runs on no-op rounds too,
         so transient faults clear and expired queued requests drain
         even when nothing is decoding."""
+        tr = self.trace
+        t0 = time.perf_counter() if tr is not None else 0.0
         if self.faults is not None:
             self.faults.on_round(self)
         self._expire_deadlines()
         self._admit_pending()
+        if tr is not None:
+            self._phase_done("admit", t0)
 
     def _deadline_passed(self, request: Request, now: float) -> bool:
         dl = request.params.deadline_ms
@@ -655,6 +710,14 @@ class ServeEngine:
         st.new_tokens = len(toks)
         if reason == "deadline":
             self._deadline_expirations += 1
+        if self.trace is not None:
+            tid = r.id + 1
+            self.trace.end(tid, "queued", st.finished_s)
+            if reason == "deadline":
+                self.trace.instant(tid, "deadline", st.finished_s)
+            self.trace.instant(tid, "retired", st.finished_s,
+                               reason=reason, tokens=st.new_tokens)
+            self.trace.end(tid, "request", st.finished_s)
         return RequestOutput(r.id, r.inputs, list(toks), reason, st)
 
     def _effective_horizon(self, horizon: Optional[int]) -> int:
@@ -709,6 +772,8 @@ class ServeEngine:
     def _token_step(self) -> None:
         """The legacy horizon=1 path: one fused decode+sample dispatch,
         one host sync per token."""
+        tr = self.trace
+        t0 = time.perf_counter() if tr is not None else 0.0
         self._grow_chains(1)
         self._decode_steps += 1
         self._active_slot_steps += sum(s.active for s in self.slots)
@@ -721,11 +786,22 @@ class ServeEngine:
         self._note_dispatched(1)
         self.cur = nxt[:, None]
         self._offsets = self._offsets + 1
+        if tr is not None:
+            self._phase_done("dispatch", t0, K=1)
+            t0 = time.perf_counter()
         self._decode_syncs += 1
         nxt_host = np.asarray(nxt)          # one sync per token
+        if tr is not None:
+            self._phase_done("sync", t0, K=1)
+            t0 = time.perf_counter()
         for s in self.slots:
             if s.active:
+                if tr is not None:
+                    tr.instant(s.request.id + 1, "decode-round",
+                               self._now(), planned=1)
                 self._emit(s, int(nxt_host[s.id]))
+        if tr is not None:
+            self._phase_done("walk", t0)
 
     def _dispatch_horizon(self, K: int, carry=None):
         """Dispatch one K-step fused horizon WITHOUT syncing its block.
@@ -748,6 +824,8 @@ class ServeEngine:
         _grow_chains), so block tables are static across the scan
         whichever allocation mode is live.
         """
+        tr = self.trace
+        t0 = time.perf_counter() if tr is not None else 0.0
         self._grow_chains(K)
         self._decode_steps += K
         if self.paged:
@@ -775,6 +853,8 @@ class ServeEngine:
             self._top_ps, self._keys, self._offsets, alive, rem, eos,
             self._poison_arr(K))
         self._note_dispatched(K)
+        if tr is not None:
+            self._phase_done("dispatch", t0, K=K)
         return alive_o, rem_o, block, K, seqs
 
     def _walk_block(self, block, K: int, seqs=None) -> None:
@@ -797,16 +877,26 @@ class ServeEngine:
                     if s.active and (seqs is None or seqs[s.id] == s.seq)]
         if not eligible:
             return
+        tr = self.trace
+        t0 = time.perf_counter() if tr is not None else 0.0
         self._decode_syncs += 1
         blk = np.asarray(block)             # one sync per horizon
+        if tr is not None:
+            self._phase_done("sync", t0, K=K)
+            t0 = time.perf_counter()
         for s in eligible:
             if not s.active:    # retired by a groupmate's callback mid-walk
                 continue
+            if tr is not None:
+                tr.instant(s.request.id + 1, "decode-round", self._now(),
+                           planned=K)
             for t in range(K):              # walk until retirement
                 self._active_slot_steps += 1
                 self._emit(s, int(blk[t, s.id]))
                 if not s.active:
                     break
+        if tr is not None:
+            self._phase_done("walk", t0)
 
     def _ahead_horizon(self, K_cfg: int, Kd: int) -> int:
         """Length of the next scan to dispatch before walking the
@@ -841,12 +931,19 @@ class ServeEngine:
         rounds = 0
         try:
             while True:
+                tr = self.trace
+                if tr is not None:
+                    self._round_begin()
                 self._round_boundary()
                 if (pending is None and not self._queue
                         and not any(s.active for s in self.slots)):
+                    if tr is not None:
+                        self._round_end()
                     return
                 rounds += 1
                 if rounds > max_rounds:
+                    if tr is not None:
+                        self._round_end()
                     raise RuntimeError("run_until_drained did not converge")
                 if pending is not None:
                     alive_d, rem_d, block, Kd, seqs = pending
@@ -874,6 +971,8 @@ class ServeEngine:
                 # else: queue blocked with nothing active — a no-op
                 # round; the round budget turns a livelock into the
                 # legacy non-convergence error
+                if tr is not None:
+                    self._round_end()
                 yield
         finally:
             if pending is not None:
@@ -946,8 +1045,26 @@ class ServeEngine:
             page_utilization=self.page_utilization,
             acceptance_rate=self.acceptance_rate,
             mean_accepted_per_verify=self.mean_accepted_per_verify,
+            ttft_p50_ms=round(self._ttft_hist.percentile(50.0), 4),
+            ttft_p95_ms=round(self._ttft_hist.percentile(95.0), 4),
+            tpot_p50_ms=round(self._tpot_hist.percentile(50.0), 4),
+            tpot_p95_ms=round(self._tpot_hist.percentile(95.0), 4),
+            phase_admit_ms=round(self._phase_ms["admit"], 4),
+            phase_dispatch_ms=round(self._phase_ms["dispatch"], 4),
+            phase_sync_ms=round(self._phase_ms["sync"], 4),
+            phase_walk_ms=round(self._phase_ms["walk"], 4),
             kv_cache_bytes=self.kv_cache_bytes,
             prefill_compiles=self.prefill_compiles)
+
+    def prometheus(self) -> str:
+        """Prometheus text exposition of the current metrics()
+        snapshot plus the latency and round-phase histograms (bucket
+        series are only non-empty where the engine recorded: ttft/tpot
+        always, phases on traced engines)."""
+        hists = {"ttft_ms": self._ttft_hist, "tpot_ms": self._tpot_hist}
+        for p in PHASES:
+            hists[f"round_phase_{p}_ms"] = self._phase_hist[p]
+        return render_prometheus(self.metrics(), hists)
 
     def reset_metrics(self) -> None:
         """Zero every EngineMetrics counter (occupancy/page-utilization/
@@ -970,6 +1087,11 @@ class ServeEngine:
         self._deadline_expirations = 0
         self._admission_rejections = 0
         self._slot_errors = 0
+        self._ttft_hist.reset()
+        self._tpot_hist.reset()
+        self._phase_ms = dict.fromkeys(PHASES, 0.0)
+        for h in self._phase_hist.values():
+            h.reset()
 
     @property
     def preemptions(self) -> int:
@@ -1270,6 +1392,8 @@ class ServeEngine:
         emit the longest matching prefix + the target's token at the
         first divergence (1..K tokens per live slot)."""
         draft = self.draft
+        tr = self.trace
+        t0 = time.perf_counter() if tr is not None else 0.0
         max_rem = max(s.request.params.max_new_tokens - len(s.tokens)
                       for s in self.slots if s.active)
         K = max(1, min(draft.lookahead, self._bucket(max_rem)))
@@ -1295,10 +1419,16 @@ class ServeEngine:
             self.params, self.cur, self.cache, self.draft_cache, block,
             alive)
         self._verify_calls += 1
+        if tr is not None:
+            self._phase_done("dispatch", t0, K=K, spec=1)
+            t0 = time.perf_counter()
         self._decode_syncs += 1
         blk = np.asarray(out)               # one sync per round
         n_emit = np.asarray(n_emit)
         acc = np.asarray(acc)
+        if tr is not None:
+            self._phase_done("sync", t0, K=K)
+            t0 = time.perf_counter()
         for s in self.slots:
             if not s.active:
                 continue
@@ -1310,11 +1440,17 @@ class ServeEngine:
             self._drafted += K
             self._accepted += a
             self._rejected += K - a
+            if tr is not None:
+                tr.instant(s.request.id + 1, "verify", self._now(),
+                           drafted=K, accepted=a,
+                           emitted=int(n_emit[s.id]))
             for t in range(int(n_emit[s.id])):
                 self._active_slot_steps += 1
                 self._emit(s, int(blk[t, s.id]))
                 if not s.active:
                     break
+        if tr is not None:
+            self._phase_done("walk", t0)
 
     def _bucket(self, n: int) -> int:
         """Smallest power-of-two >= n, capped at max_len."""
@@ -1344,6 +1480,11 @@ class ServeEngine:
         arr = self.faults.poison(self.n_slots, K)
         if arr is None:
             return self._no_poison
+        if self.trace is not None:
+            sched = np.asarray(arr, np.int32)
+            self.trace.instant(
+                SCHED_TID, "fault:nan", self._now(),
+                slots=[int(i) for i in np.nonzero(sched >= 0)[0]])
         return jnp.asarray(np.asarray(arr, np.int32))
 
     def _pos_cap(self, request: Request) -> int:
@@ -1418,9 +1559,14 @@ class ServeEngine:
         n = self._preempt_counts.get(r.id, 0) + 1
         self._preemptions += 1
         self._stats[r.id].preemptions = n
+        if self.trace is not None:
+            self.trace.instant(r.id + 1, "preempted", self._now(),
+                               count=n, tokens=len(s.tokens))
         if n > self.preempt_limit:
             self._retire(s, "preempted_limit")
             return
+        if self.trace is not None:
+            self.trace.begin(r.id + 1, "queued", self._now())
         self._preempt_counts[r.id] = n
         self._preempted[r.id] = list(s.tokens)
         s.active = False
@@ -1543,6 +1689,12 @@ class ServeEngine:
         of racing a half-built group."""
         n = len(group)
         free = [s.id for s in self.slots if not s.active][:n]
+        tr = self.trace
+        if tr is not None:
+            t_adm = self._now()
+            for r in group:
+                tr.end(r.id + 1, "queued", t_adm)
+            p0 = time.perf_counter()
         toks = [self._feed_tokens(r) for r in group]
         true_lens = [t.shape[1] for t in toks]
         pad_to = self._bucket(max(true_lens))
@@ -1586,6 +1738,13 @@ class ServeEngine:
             tuple(sorted((k, tuple(v.shape)) for k, v in inputs.items())))
         first = np.asarray(first)
         now = self._now()
+        if tr is not None:
+            # one batched prefill covers the group; each member gets the
+            # same complete event on its own track
+            p_dur = time.perf_counter() - p0
+            for r in group:
+                tr.complete(r.id + 1, "prefill", now - p_dur, p_dur,
+                            group=n)
         admitted = []
         for i, (r, sid) in enumerate(zip(group, free)):
             s = self.slots[sid]
@@ -1598,6 +1757,9 @@ class ServeEngine:
                 # at fold len(stash), exactly the pre-eviction state
                 tok = int(stash[-1])
                 self._resumed += 1
+                if tr is not None:
+                    tr.instant(r.id + 1, "resumed", now,
+                               replayed=len(stash))
             else:
                 tok = int(first[i])
             self.cur = self.cur.at[sid, 0].set(tok)
@@ -1637,6 +1799,10 @@ class ServeEngine:
         slot = self.free_slot()
         s = self.slots[slot]
         sp = request.params
+        tr = self.trace
+        if tr is not None:
+            tr.end(request.id + 1, "queued", self._now())
+            p0 = time.perf_counter()
         inputs = dict(request.inputs)
         toks = inputs[self._tkey]
         true_len = toks.shape[1]
@@ -1660,6 +1826,10 @@ class ServeEngine:
             self.draft_cache = self._splice(
                 self.draft_cache, self._pad_cross(done), slot)
         tok = int(tok)
+        if tr is not None:
+            p_dur = time.perf_counter() - p0
+            tr.complete(request.id + 1, "prefill", self._now() - p_dur,
+                        p_dur)
         self.cur = self.cur.at[slot, 0].set(tok)
         self._temps = self._temps.at[slot].set(sp.temperature)
         self._top_ks = self._top_ks.at[slot].set(sp.top_k)
@@ -1691,6 +1861,17 @@ class ServeEngine:
         out = RequestOutput(
             rid, s.request.inputs, list(s.tokens), reason, st, slot=s.id)
         self._finished.append(out)
+        # every served retirement feeds the latency histograms (queued
+        # requests that never reached a slot don't — see _finish_queued)
+        self._ttft_hist.record(out.ttft_ms)
+        self._tpot_hist.record(out.tpot_ms)
+        if self.trace is not None:
+            tid = rid + 1
+            if reason in ("deadline", "error"):
+                self.trace.instant(tid, reason, st.finished_s)
+            self.trace.instant(tid, "retired", st.finished_s,
+                               reason=reason, tokens=st.new_tokens)
+            self.trace.end(tid, "request", st.finished_s)
         if reason == "deadline":
             self._deadline_expirations += 1
         elif reason == "error":

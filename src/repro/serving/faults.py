@@ -116,9 +116,13 @@ class FaultPlan:
 
     def on_round(self, engine) -> None:
         """Tick one scheduler round: release expired holds, then apply
-        this round's exhaustion / clock-skew events."""
+        this round's exhaustion / clock-skew events. On a traced engine
+        every injection additionally lands as an instant on the
+        scheduler track, so a trace shows faults at the round they
+        fired."""
         r = self._round
         self._round += 1
+        tr = getattr(engine, "trace", None)
         paged = bool(getattr(engine, "paged", False))
         if paged and self._holds:
             keep = []
@@ -126,6 +130,9 @@ class FaultPlan:
                 if rel <= r:
                     engine.allocator.free_chain(chain)
                     self.events.append(("release", r, len(chain)))
+                    if tr is not None:
+                        tr.instant(0, "fault:release", engine._now(),
+                                   round=r, pages=len(chain))
                 else:
                     keep.append((rel, chain))
             self._holds = keep
@@ -143,6 +150,9 @@ class FaultPlan:
             if k:
                 self._holds.append((r + hold, engine.allocator.alloc_chain(k)))
                 self.events.append(("exhaust", r, k, hold))
+                if tr is not None:
+                    tr.instant(0, "fault:exhaust", engine._now(),
+                               round=r, pages=k, hold=hold)
         ms = 0.0
         for rr, m in self.skew_at:
             if rr == r:
@@ -152,6 +162,10 @@ class FaultPlan:
         if ms:
             engine._skew_s += ms / 1e3
             self.events.append(("skew", r, ms))
+            if tr is not None:
+                # stamped AFTER the jump: the instant lands where the
+                # skewed clock resumed, making the jump visible
+                tr.instant(0, "fault:skew", engine._now(), round=r, ms=ms)
 
     def poison(self, n_slots: int, K: int):
         """NaN-injection schedule for one decode dispatch: an (S,) i32

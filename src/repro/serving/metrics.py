@@ -33,6 +33,8 @@ from __future__ import annotations
 import dataclasses
 from typing import ClassVar, Dict, List, Optional, Tuple
 
+from ..obs.metrics import percentile
+
 __all__ = ["EngineMetrics", "SLATarget", "SLAController"]
 
 
@@ -70,6 +72,20 @@ class EngineMetrics:
     page_utilization: float
     acceptance_rate: float
     mean_accepted_per_verify: float
+    # latency percentiles over retirements since the last reset (from
+    # the engine's always-on obs.Histogram accumulators; 0.0 before the
+    # first retirement — bucket upper edges, nearest rank)
+    ttft_p50_ms: float
+    ttft_p95_ms: float
+    tpot_p50_ms: float
+    tpot_p95_ms: float
+    # scheduler round-phase totals (ms); populated only on a traced
+    # engine — phase timing needs the tracer's extra clock reads, and
+    # the untraced round loop must stay zero-cost
+    phase_admit_ms: float
+    phase_dispatch_ms: float
+    phase_sync_ms: float
+    phase_walk_ms: float
     # gauges — live engine state, not resettable accumulation
     kv_cache_bytes: int
     prefill_compiles: int
@@ -158,10 +174,10 @@ class SLAController:
         return self._retune()
 
     def _p95(self, idx: int) -> float:
-        vals = sorted(w[idx] for w in self._window)
-        # nearest-rank p95 — no numpy needed for a <= window-sized list
-        rank = max(0, int(round(0.95 * (len(vals) - 1))))
-        return vals[rank]
+        # the repo-wide nearest-rank definition (obs.metrics.percentile
+        # was lifted from this controller, so consolidating onto it
+        # changed no admission decisions)
+        return percentile((w[idx] for w in self._window), 95.0)
 
     def _retune(self) -> bool:
         ttft, tpot = self._p95(0), self._p95(1)

@@ -216,16 +216,17 @@ def latency_percentiles(outputs: Sequence["RequestOutput"]) -> Dict[str, float]:
     Per-output-token time divides the post-first-token span by the
     number of decode steps the request took (``new_tokens - 1``; a
     one-token request contributes its whole span).
+
+    Percentiles are the repo-wide nearest-rank definition
+    (``obs.metrics.percentile`` — also what the SLA controller and
+    ``EngineMetrics``' histogram fields use), so the same sample can
+    never read as "held" in one surface and "violated" in another.
     """
-    import numpy as np
+    from ..obs.metrics import percentile
 
     ttft = [o.ttft_ms for o in outputs]
     tpot = [o.tpot_ms for o in outputs]
-
-    def pct(vals, q):
-        return float(np.percentile(vals, q)) if vals else 0.0
-
-    return {"ttft_p50_ms": round(pct(ttft, 50), 3),
-            "ttft_p95_ms": round(pct(ttft, 95), 3),
-            "tpot_p50_ms": round(pct(tpot, 50), 3),
-            "tpot_p95_ms": round(pct(tpot, 95), 3)}
+    return {"ttft_p50_ms": round(percentile(ttft, 50), 3),
+            "ttft_p95_ms": round(percentile(ttft, 95), 3),
+            "tpot_p50_ms": round(percentile(tpot, 50), 3),
+            "tpot_p95_ms": round(percentile(tpot, 95), 3)}

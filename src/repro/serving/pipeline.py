@@ -36,6 +36,7 @@ from ..core import (QuantSpec, calibrate_act_scales, get_format,
                     quantize_tree, resolve_spec, tree_nbytes)
 from ..data import LANG_CODES
 from ..models import Ctx, build_model
+from ..obs import TraceConfig, Tracer
 from .engine import ServeEngine
 from .metrics import SLATarget
 from .params import Request, RequestOutput, SamplingParams
@@ -90,6 +91,12 @@ class TranslationPipeline:
         """Canonical spelling of the speculative draft spec (None on a
         target-only deployment)."""
         return str(self.draft_spec) if self.draft_spec is not None else None
+
+    @property
+    def tracer(self) -> Optional[Tracer]:
+        """The engine's Tracer when deployed with ``trace=...`` (None
+        otherwise) — dump with ``pipe.tracer.dump_json(path)``."""
+        return self.engine.trace
 
     @property
     def quantized_bytes(self) -> int:
@@ -196,7 +203,7 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
            draft_lookahead: int = 4, overlap: bool = True,
            sla: Optional[SLATarget] = None,
            max_pending: Optional[int] = None, preempt_limit: int = 3,
-           faults=None
+           faults=None, trace: Union[Tracer, TraceConfig, None] = None
            ) -> TranslationPipeline:
     """Build a ready-to-serve TranslationPipeline in one call.
 
@@ -278,6 +285,12 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
                  allocator exhaustion, NaN logits, and deadline-clock
                  skew at seeded round/dispatch coordinates (chaos tests,
                  ``bench_serving --faults``). None disables injection.
+    trace:       an ``obs.TraceConfig`` (or a ready ``Tracer``) enables
+                 per-request lifecycle + scheduler round-phase tracing;
+                 read it back via ``pipe.tracer`` (Perfetto export:
+                 ``pipe.tracer.dump_json(path)``). None (default) keeps
+                 the round loop observation-free: no events, no extra
+                 clock reads, identical token streams and sync counts.
     """
     spec = resolve_spec(policy)
     cfg = get_config(arch_or_cfg) if isinstance(arch_or_cfg, str) \
@@ -356,7 +369,8 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
                          max_src_len=max_src_len, horizon=horizon,
                          draft=draft, overlap=overlap, sla=sla,
                          max_pending=max_pending,
-                         preempt_limit=preempt_limit, faults=faults)
+                         preempt_limit=preempt_limit, faults=faults,
+                         trace=trace)
     name = policy if isinstance(policy, str) else str(spec)
     return TranslationPipeline(cfg, model, params, engine, ctx, name,
                                fp_bytes, spec,

@@ -1,0 +1,417 @@
+"""Observability: lifecycle tracing, round-phase timing, metrics export.
+
+The contract under test: the tracer is a pure OBSERVER — a traced
+engine emits token-for-token the same streams with exactly the same
+host-sync count as an untraced one, across every scheduling mode
+(dense/paged, fused horizons, overlap on/off, speculative drafts,
+injected faults) — while the trace itself is well-formed: one closed
+request span per request, stack-discipline-clean nesting
+(``Tracer.check()``), non-decreasing span stamps even under injected
+clock skew, and a valid Chrome/Perfetto export. The metrics side pins
+the repo-wide nearest-rank percentile (one definition shared by
+``latency_percentiles``, the SLA controller, and the histogram-backed
+``EngineMetrics`` columns) and the Prometheus text rendering.
+"""
+
+import dataclasses
+import json
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, reduce_config
+from repro.eval import report as report_mod
+from repro.models import Ctx, build_model
+from repro.obs import (PHASES, SCHED_TID, Histogram, TraceConfig, Tracer,
+                       percentile, render_prometheus)
+from repro.serving import (EngineMetrics, FaultPlan, SamplingParams,
+                           ServeEngine, SLATarget, deploy,
+                           latency_percentiles)
+from repro.serving.metrics import SLAController
+
+CTX = Ctx(compute_dtype=jnp.float32)
+
+P1 = np.array([[5, 6, 7, 8, 9]], np.int32)
+P2 = np.array([[3, 4, 5, 6, 2]], np.int32)
+P3 = np.array([[9, 8, 7, 6, 5]], np.int32)
+
+GREEDY8 = SamplingParams(max_new_tokens=8, eos_id=-1)
+SAMPLED6 = SamplingParams(temperature=0.8, top_p=0.9, max_new_tokens=6,
+                          seed=7, eos_id=-1)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    rc = reduce_config(REGISTRY["gemma3-1b"])
+    model = build_model(rc)
+    params = model.init(jax.random.PRNGKey(0))
+    return rc, model, params
+
+
+def _engine(lm, **kw):
+    _, model, params = lm
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 32)
+    if kw.pop("paged", False):
+        kw.update(paged=True, page_size=4)
+        kw.setdefault("num_pages", 8)
+    return ServeEngine(model, params, ctx=CTX, **kw)
+
+
+def _serve(eng, prompts, sps):
+    ids = [eng.submit({"tokens": p}, sp) for p, sp in zip(prompts, sps)]
+    outs = {o.request_id: o for o in eng.run_until_drained()}
+    return [outs[i] for i in ids]
+
+
+# ---------------------------------------------------------------------------
+# percentile: the one repo-wide nearest-rank definition
+# ---------------------------------------------------------------------------
+
+def test_percentile_hand_computed_pins():
+    vals = list(range(1, 11))                      # 1..10
+    assert percentile(vals, 0) == 1
+    assert percentile(vals, 50) == 5               # rank round(.5*9)=4
+    assert percentile(vals, 95) == 10              # rank round(.95*9)=9
+    assert percentile(vals, 100) == 10
+    assert percentile([42.0], 95) == 42.0
+    assert percentile(reversed(vals), 50) == 5     # order-insensitive
+    assert percentile([], 95) == 0.0               # empty -> 0, not a raise
+
+
+def test_percentile_rejects_out_of_range_q():
+    with pytest.raises(ValueError):
+        percentile([1.0], -1)
+    with pytest.raises(ValueError):
+        percentile([1.0], 100.5)
+
+
+def test_latency_percentiles_uses_nearest_rank():
+    outs = [types.SimpleNamespace(ttft_ms=float(i), tpot_ms=float(10 * i))
+            for i in range(1, 11)]
+    lat = latency_percentiles(outs)
+    assert lat == {"ttft_p50_ms": 5.0, "ttft_p95_ms": 10.0,
+                   "tpot_p50_ms": 50.0, "tpot_p95_ms": 100.0}
+
+
+def test_sla_controller_p95_matches_shared_percentile():
+    """The controller's admission decisions ride on the same definition
+    the latency columns report — the consolidation invariant."""
+    ctl = SLAController(SLATarget(p95_ttft_ms=100.0, window=10),
+                        horizon=4, slots=4)
+    ctl._window = [(float(i), float(2 * i)) for i in range(1, 11)]
+    assert ctl._p95(0) == percentile(range(1, 11), 95) == 10.0
+    assert ctl._p95(1) == percentile(range(2, 21, 2), 95) == 20.0
+
+
+# ---------------------------------------------------------------------------
+# Histogram
+# ---------------------------------------------------------------------------
+
+def test_histogram_record_mean_percentile():
+    h = Histogram(lo=1.0, growth=2.0, n_buckets=8)
+    for v in (0.5, 1.5, 3.0, 3.0, 100.0):
+        h.record(v)
+    assert h.count == 5
+    assert h.total == pytest.approx(108.0)
+    assert h.mean == pytest.approx(108.0 / 5)
+    # percentile reports the covering bucket's UPPER edge
+    assert h.percentile(50.0) == 4.0               # 3.0 falls in (2, 4]
+    assert h.percentile(0.0) == 1.0                # 0.5 lands in (0, 1]
+    assert Histogram().percentile(95.0) == 0.0     # empty histogram
+
+
+def test_histogram_overflow_clamps_to_top_edge():
+    h = Histogram(lo=1.0, growth=2.0, n_buckets=4)
+    h.record(1e9)                                   # beyond every bound
+    assert h.count == 1
+    assert h.overflow == 1
+    assert h.percentile(95.0) == h.bounds[-1] == 8.0
+
+
+def test_histogram_merge_and_reset():
+    a, b = Histogram(), Histogram()
+    a.record(1.0), a.record(2.0)
+    b.record(4.0)
+    assert a.merge(b) is a
+    assert (a.count, a.total) == (3, 7.0)
+    with pytest.raises(ValueError, match="config"):
+        a.merge(Histogram(lo=0.5))
+    a.reset()
+    assert (a.count, a.total) == (0, 0.0)
+    assert a.percentile(95.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Prometheus rendering
+# ---------------------------------------------------------------------------
+
+class _Snap:
+    GAUGES = ("kv_bytes",)
+
+    def as_dict(self):
+        return {"requests": 3, "kv_bytes": 4096, "occupancy": 0.5}
+
+
+def test_render_prometheus_types_and_buckets():
+    h = Histogram(lo=1.0, growth=2.0, n_buckets=3)
+    for v in (0.5, 1.5, 99.0):
+        h.record(v)
+    text = render_prometheus(_Snap(), {"ttft_ms": h}, prefix="x")
+    lines = text.splitlines()
+    assert "# TYPE x_requests counter" in lines      # int -> counter
+    assert "# TYPE x_kv_bytes gauge" in lines        # declared gauge
+    assert "# TYPE x_occupancy gauge" in lines       # float -> gauge
+    assert "# TYPE x_ttft_ms histogram" in lines
+    # cumulative buckets, terminated by +Inf == count
+    assert 'x_ttft_ms_bucket{le="1"} 1' in lines
+    assert 'x_ttft_ms_bucket{le="2"} 2' in lines
+    assert 'x_ttft_ms_bucket{le="+Inf"} 3' in lines
+    assert "x_ttft_ms_count 3" in lines
+    assert any(ln.startswith("x_ttft_ms_sum ") for ln in lines)
+
+
+# ---------------------------------------------------------------------------
+# Tracer primitives
+# ---------------------------------------------------------------------------
+
+def test_tracer_balanced_spans_pass_check(tmp_path):
+    tr = Tracer(TraceConfig())
+    tr.name_track(1, "req 0")
+    tr.begin(SCHED_TID, "round", 1.0)
+    tr.complete(SCHED_TID, "dispatch", 1.0, 0.5, K=4)
+    tr.begin(1, "request", 1.1)
+    tr.instant(1, "decode-round", 1.2, planned=4)
+    tr.end(1, "request", 1.9)
+    tr.end(SCHED_TID, "round", 2.0)
+    assert tr.check() == []
+    chrome = tr.to_chrome()
+    assert chrome["displayTimeUnit"] == "ms"
+    phs = [e["ph"] for e in chrome["traceEvents"]]
+    assert {"B", "E", "X", "i", "M"} <= set(phs)
+    p = tmp_path / "trace.json"
+    tr.dump_json(str(p))
+    assert json.loads(p.read_text())["traceEvents"]
+
+
+def test_tracer_check_flags_discipline_violations():
+    tr = Tracer(TraceConfig())
+    tr.begin(0, "round", 1.0)
+    assert any("never closed" in p for p in tr.check())
+    tr.end(0, "other-name", 2.0)                   # closes the wrong name
+    assert any("closes" in p for p in tr.check())
+    tr2 = Tracer(TraceConfig())
+    tr2.end(0, "round", 1.0)                       # end with no begin
+    assert any("without open span" in p for p in tr2.check())
+
+
+def test_tracer_ring_drops_oldest_and_counts():
+    tr = Tracer(TraceConfig(capacity=16))
+    for i in range(20):
+        tr.instant(0, f"e{i}", float(i))
+    assert len(tr) == 16
+    assert tr.dropped == 4
+    names = [e.name for e in tr.events]
+    assert names[0] == "e4" and names[-1] == "e19"
+
+
+def test_tracer_clamps_span_stamps_against_backward_clock():
+    """Negative skew must not produce end < begin (Perfetto rejects
+    it); instants keep their raw stamp so the jump stays visible."""
+    tr = Tracer(TraceConfig())
+    tr.instant(0, "fault:skew", 3.0, ms=-7000)     # instants keep raw ts
+    tr.begin(0, "round", 10.0)
+    tr.end(0, "round", 5.0)                        # clock went backward
+    assert tr.check() == []
+    by_ph = {e.ph: e for e in tr.events}
+    assert by_ph["E"].ts_us == by_ph["B"].ts_us == pytest.approx(10.0 * 1e6)
+    assert by_ph["i"].ts_us == pytest.approx(3.0 * 1e6)
+
+
+# ---------------------------------------------------------------------------
+# traced == untraced: streams, syncs, and scheduling are untouched
+# ---------------------------------------------------------------------------
+
+def _run_mode(lm, trace, **kw):
+    eng = _engine(lm, trace=TraceConfig() if trace else None, **kw)
+    outs = _serve(eng, (P1, P2, P3), (GREEDY8, SAMPLED6, GREEDY8))
+    return outs, eng
+
+
+@pytest.mark.parametrize("kw", [
+    dict(horizon=1),                               # dense, per-token
+    dict(horizon=16),                              # dense, fused
+    dict(horizon=16, paged=True),                  # paged, fused
+    dict(horizon=4, overlap=False),                # serial rounds
+], ids=["dense-h1", "dense-h16", "paged-h16", "no-overlap"])
+def test_traced_equals_untraced(lm, kw):
+    base, ref_eng = _run_mode(lm, False, **kw)
+    outs, eng = _run_mode(lm, True, **kw)
+    for b, g in zip(base, outs):
+        assert g.token_ids == b.token_ids
+        assert g.finish_reason == b.finish_reason
+    assert eng.decode_syncs == ref_eng.decode_syncs
+    assert eng.metrics().overlap_rounds == ref_eng.metrics().overlap_rounds
+    assert eng.trace.check() == []
+    spans = eng.trace.request_spans()
+    assert len(spans) == 3 and all(s["closed"] for s in spans.values())
+
+
+def test_traced_equals_untraced_draft_arm():
+    def run(trace):
+        pipe = deploy("gemma3-1b", "int8", slots=2, max_len=32, smoke=True,
+                      paged=True, page_size=4, horizon=4,
+                      draft_spec="wfp4a8",
+                      trace=TraceConfig() if trace else None)
+        outs = _serve(pipe.engine, (P1, P2), (GREEDY8, GREEDY8))
+        return outs, pipe.engine
+
+    base, ref_eng = run(False)
+    outs, eng = run(True)
+    assert [o.token_ids for o in outs] == [o.token_ids for o in base]
+    assert eng.decode_syncs == ref_eng.decode_syncs
+    assert eng.trace.check() == []
+    # every verify round left its instant, stamped with the draft ledger
+    verifies = [e for e in eng.trace.events if e.name == "verify"]
+    assert verifies and all(
+        e.args["drafted"] >= e.args["accepted"] >= 0 for e in verifies)
+
+
+def test_traced_faulted_run_keeps_monotonic_spans(lm):
+    """Injected clock skew jumps the engine clock mid-run: the trace
+    records the fault instants on the scheduler track and every span's
+    B/E stamps stay non-decreasing (floor-clamped), so the export is
+    still loadable."""
+    def run(trace):
+        plan = FaultPlan(skew_at=[(2, 600_000.0)])
+        eng = _engine(lm, slots=1,
+                      trace=TraceConfig() if trace else None, faults=plan)
+        dl = SamplingParams(max_new_tokens=8, eos_id=-1,
+                            deadline_ms=60_000.0)
+        return _serve(eng, (P1, P2), (dl, GREEDY8)), eng
+
+    base, _ = run(False)
+    outs, eng = run(True)
+    assert [(o.token_ids, o.finish_reason) for o in outs] \
+        == [(o.token_ids, o.finish_reason) for o in base]
+    assert outs[0].finish_reason == "deadline"
+    tr = eng.trace
+    assert tr.check() == []
+    assert any(e.name == "fault:skew" for e in tr.events)
+    # the expired request's span closed with the deadline marker inside
+    spans = tr.request_spans()
+    assert spans[0]["closed"] and spans[0]["reason"] == "deadline"
+    assert "deadline" in spans[0]["events"]
+    # per-track B/E stamps never run backward, skew notwithstanding
+    last = {}
+    for e in tr.events:
+        if e.ph in ("B", "E"):
+            assert e.ts_us >= last.get(e.tid, 0.0)
+            last[e.tid] = e.ts_us
+
+
+def test_lifecycle_event_order_and_phase_totals(lm):
+    eng = _engine(lm, paged=True, horizon=4, trace=TraceConfig())
+    _serve(eng, (P1, P2), (GREEDY8, SAMPLED6))
+    spans = eng.trace.request_spans()
+    for rid, span in spans.items():
+        names = span["events"]                     # child names, in order
+        assert names[0] == "queued"
+        assert names[1] == "prefill"
+        assert names[-1] == "retired"
+        assert "decode-round" in names
+        assert span["end_us"] >= span["begin_us"]
+    # the scheduler track carries round spans with phase X events inside
+    sched = [e for e in eng.trace.events if e.tid == SCHED_TID]
+    assert any(e.ph == "B" and e.name == "round" for e in sched)
+    assert {e.name for e in sched if e.ph == "X"} <= set(PHASES)
+    m = eng.metrics()
+    for p in PHASES:
+        assert getattr(m, f"phase_{p}_ms") >= 0.0
+    assert m.phase_admit_ms > 0 and m.phase_dispatch_ms > 0
+    # histogram-backed latency columns populate on retirement
+    assert m.ttft_p95_ms > 0 and m.tpot_p95_ms > 0
+    assert m.ttft_p50_ms <= m.ttft_p95_ms
+
+
+def test_untraced_engine_reports_zero_phase_time(lm):
+    """The zero-cost path: an untraced engine accumulates no phase
+    time at all (the timers never run), while the always-on latency
+    histograms still feed the ttft/tpot columns."""
+    eng = _engine(lm, horizon=4)
+    _serve(eng, (P1,), (GREEDY8,))
+    assert eng.trace is None
+    m = eng.metrics()
+    assert all(getattr(m, f"phase_{p}_ms") == 0.0 for p in PHASES)
+    assert m.ttft_p95_ms > 0 and m.tpot_p95_ms > 0
+
+
+def test_engine_prometheus_export(lm):
+    eng = _engine(lm, horizon=4, trace=TraceConfig())
+    _serve(eng, (P1,), (GREEDY8,))
+    text = eng.prometheus()
+    assert "# TYPE repro_serving_decode_syncs counter" in text
+    assert "# TYPE repro_serving_ttft_ms histogram" in text
+    assert 'repro_serving_ttft_ms_bucket{le="+Inf"} 1' in text
+    for p in PHASES:
+        assert f"repro_serving_round_phase_{p}_ms_count" in text
+
+
+def test_trace_config_validates_capacity():
+    with pytest.raises(ValueError, match="capacity"):
+        TraceConfig(capacity=4)
+
+
+def test_metrics_snapshot_carries_histogram_fields():
+    names = {f.name for f in dataclasses.fields(EngineMetrics)}
+    assert {"ttft_p50_ms", "ttft_p95_ms", "tpot_p50_ms", "tpot_p95_ms",
+            "phase_admit_ms", "phase_dispatch_ms", "phase_sync_ms",
+            "phase_walk_ms"} <= names
+
+
+# ---------------------------------------------------------------------------
+# report schema v5: round_phases rides the sweep rows
+# ---------------------------------------------------------------------------
+
+def test_report_v4_upgrades_to_v5_and_round_trips():
+    v4 = {"schema": 4, "kind": "repro.eval", "arch": "x", "git_rev": None,
+          "config": {}, "rows": [
+              {"fmt": "int8", "spec": "w8", "ttft_p95_ms": 9.0,
+               "tpot_p95_ms": 2.0, "pair_scores": []}]}
+    loaded = report_mod.load(json.dumps(v4))
+    assert loaded["schema"] == report_mod.SCHEMA_VERSION == 5
+    assert loaded["rows"][0]["round_phases"] is None   # untraced sentinel
+    assert loaded["rows"][0]["ttft_p95_ms"] == 9.0     # payload preserved
+    assert report_mod.load(report_mod.dump(loaded)) == loaded
+
+
+def test_report_with_round_phases_round_trips():
+    r = report_mod.make_report(arch="x", rows=[{
+        "fmt": "int8", "spec": "w8", "mean_bleu": 1.0,
+        "round_phases": {"admit_ms": 1.5, "dispatch_ms": 2.5,
+                         "sync_ms": 0.1, "walk_ms": 0.4},
+        "pair_scores": []}])
+    assert report_mod.load(report_mod.dump(r)) == r
+
+
+def test_quant_sweep_traced_records_round_phases():
+    from repro.eval import quant_sweep
+    rc = reduce_config(REGISTRY["nllb600m"])
+    params = build_model(rc).init(jax.random.PRNGKey(0))
+    rows = quant_sweep(
+        rc, ["int8"], params=params, pair_list=[("hin", "eng")],
+        languages=["hin", "eng"], n_sent=2,
+        deploy_kwargs={"slots": 2, "max_len": 16, "ctx": CTX},
+        trace=True, log=lambda *_: None)
+    rp = rows[0].round_phases
+    assert rp is not None
+    assert set(rp) == {f"{p}_ms" for p in PHASES}
+    assert rp["admit_ms"] > 0 and rp["dispatch_ms"] > 0
+    # the traced column survives the report round-trip
+    rep = report_mod.make_report(arch=rc.name,
+                                 rows=[r.as_row() for r in rows])
+    assert report_mod.load(report_mod.dump(rep)) == rep
+    assert rep["rows"][0]["round_phases"] == rp

@@ -27,7 +27,8 @@ from repro.configs import REGISTRY, reduce_config
 from repro.eval import report as report_mod
 from repro.models import Ctx, build_model
 from repro.serving import (EngineMetrics, SamplingParams, ServeEngine,
-                           SLATarget, deploy, greedy_generate, translate)
+                           SLATarget, TraceConfig, deploy, greedy_generate,
+                           translate)
 from repro.serving.metrics import SLAController
 
 CTX = Ctx(compute_dtype=jnp.float32)
@@ -291,6 +292,30 @@ def test_reset_metrics_zeroes_every_non_gauge_field():
     assert m.kv_cache_bytes > 0
 
 
+def test_reset_metrics_zeroes_traced_histograms():
+    """The introspective test above guarantees the EngineMetrics fields
+    zero; this pins the backing accumulators actually RECORDING under
+    tracing first — a reset test over fields that never moved proves
+    nothing."""
+    rc, model, params = _lm()
+    eng = ServeEngine(model, params, slots=1, max_len=16, ctx=CTX,
+                      horizon=4, trace=TraceConfig())
+    eng.submit({"tokens": _prompts(rc, 1)[0]},
+               SamplingParams(max_new_tokens=9))
+    eng.run_until_drained()
+    m = eng.metrics()
+    assert m.ttft_p50_ms > 0 and m.ttft_p95_ms > 0
+    assert m.tpot_p50_ms > 0 and m.tpot_p95_ms > 0
+    assert m.phase_admit_ms > 0 and m.phase_dispatch_ms > 0
+    assert m.phase_walk_ms > 0
+    eng.reset_metrics()
+    m = eng.metrics()
+    for name in ("ttft_p50_ms", "ttft_p95_ms", "tpot_p50_ms",
+                 "tpot_p95_ms", "phase_admit_ms", "phase_dispatch_ms",
+                 "phase_sync_ms", "phase_walk_ms"):
+        assert getattr(m, name) == 0.0, f"{name} survived reset_metrics()"
+
+
 # ---------------------------------------------------------------------------
 # SLA-aware admission
 # ---------------------------------------------------------------------------
@@ -390,7 +415,7 @@ def test_legacy_wrappers_warn_deprecation():
 
 
 # ---------------------------------------------------------------------------
-# report schema v4
+# report schema v4 latency roll-up (upgrade chains to current)
 # ---------------------------------------------------------------------------
 
 def _v3_report():
@@ -405,9 +430,9 @@ def _v3_report():
                 {"fmt": "bf16", "spec": "w16", "pair_scores": []}]}
 
 
-def test_report_v3_upgrades_to_v4():
+def test_report_v3_upgrades_to_current():
     loaded = report_mod.load(json.dumps(_v3_report()))
-    assert loaded["schema"] == report_mod.SCHEMA_VERSION == 4
+    assert loaded["schema"] == report_mod.SCHEMA_VERSION == 5
     row = loaded["rows"][0]
     # worst direction over the pair grid — what an SLATarget is set on
     assert row["ttft_p95_ms"] == 20.0
@@ -415,4 +440,6 @@ def test_report_v3_upgrades_to_v4():
     # no per-pair latency recorded -> explicit None, not a KeyError
     assert loaded["rows"][1]["ttft_p95_ms"] is None
     assert loaded["rows"][1]["tpot_p95_ms"] is None
+    # v4 -> v5: pre-trace rows gain the untraced sentinel
+    assert all(r["round_phases"] is None for r in loaded["rows"])
     assert report_mod.load(report_mod.dump(loaded)) == loaded
