@@ -7,9 +7,9 @@ stream a translation token-by-token as each fused horizon block lands,
 redeploy with an FP4 speculative draft arm (same checkpoint, same
 tokens, fewer target-model forwards), observe a traced deployment
 (lifecycle spans, round-phase timing, Perfetto + Prometheus exports),
-then exercise the failure surface: bounded admission
-(EngineSaturated), per-request deadlines, and finish_reason on every
-output.
+exercise the failure surface: bounded admission (EngineSaturated),
+per-request deadlines, and finish_reason on every output — and finally
+scale the same checkpoint out over replicas with ``repro.cluster``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -147,3 +147,29 @@ outs += tiny.engine.run_until_drained()
 print("finish reasons:", sorted(o.finish_reason for o in outs))
 print(f"rejections absorbed: "
       f"{tiny.engine.metrics().admission_rejections}")
+
+# --- scaling out a deployment ------------------------------------------
+# Two composable layers (repro.cluster), both preserving token-for-token
+# parity with a lone engine:
+#   * tensor parallel — deploy(..., mesh=tp_mesh(K)) shards one
+#     engine's weights and KV storage over K devices (GSPMD);
+#   * data parallel — deploy_replicas(...) runs N independent replicas
+#     behind a least-outstanding-work ReplicaRouter; requests spread by
+#     priority-aware load, saturated replicas fail over, and metrics
+#     merge (counters sum, percentiles from Histogram.merge).
+# Everything is CPU-testable: force 8 host devices with
+#   XLA_FLAGS=--xla_force_host_platform_device_count=8
+# before importing jax, then mesh widths and replica counts behave as
+# they would on real accelerators. On the CLI the same stack is
+#   python -m repro.launch.serve --arch nllb600m --mesh dp2,tp2 \
+#       --metrics-port 9100     # live GET /metrics while serving
+from repro.cluster import deploy_replicas
+
+cluster = deploy_replicas(cfg, "int4", replicas=2, params=params,
+                          slots=2, max_len=16, ctx=ctx)
+outs = cluster.translate(src, "ita", SamplingParams(max_new_tokens=6))
+print(f"\ncluster (dp2): {[o.token_ids for o in outs]}")
+cm = cluster.engine.metrics()                    # merged across replicas
+print(f"cluster ttft p95 {cm.ttft_p95_ms:.1f} ms over "
+      f"{[e.metrics().synced_tokens for e in cluster.engine.replicas]} "
+      "tokens/replica")

@@ -1,0 +1,125 @@
+"""Cluster serving: tensor-parallel engines + data-parallel routing.
+
+Two composable scale-out layers over the single serving engine:
+
+* **Tensor parallel** — ``deploy(..., mesh=tp_mesh(K))`` shards one
+  engine's params and KV storage over K devices (GSPMD; see
+  ``parallel.sharding`` and the ``mesh=`` docs on ``serving.deploy``).
+* **Data parallel** — :class:`ReplicaRouter` load-balances requests
+  over N independent engine replicas; :func:`deploy_replicas` builds
+  the whole stack (N replicas x K-way tensor parallel on disjoint
+  device groups) behind the ordinary ``TranslationPipeline`` surface.
+
+Both layers hold the engine's standing invariant: routed and sharded
+token streams are token-for-token identical to a single-device engine
+serving the same requests. Everything is CPU-testable via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .router import ReplicaRouter
+
+__all__ = ["ReplicaRouter", "deploy_replicas", "parse_mesh_spec",
+           "tp_mesh"]
+
+
+def parse_mesh_spec(spec: str) -> Tuple[int, int]:
+    """Parse the CLI mesh convention ``"dp2,tp2"`` -> ``(dp, tp)``.
+
+    Comma-separated ``dp<N>`` / ``tp<N>`` factors in either order;
+    omitted factors default to 1 (``"tp4"`` -> (1, 4); ``"dp2"`` ->
+    (2, 1)). dp is the replica count, tp the per-replica mesh width.
+    """
+    dp = tp = 1
+    seen = set()
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        m = re.fullmatch(r"(dp|tp)(\d+)", part)
+        if m is None:
+            raise ValueError(
+                f"bad mesh factor {part!r} in {spec!r}; expected "
+                "comma-separated dp<N>/tp<N>, e.g. 'dp2,tp2'")
+        axis, n = m.group(1), int(m.group(2))
+        if axis in seen:
+            raise ValueError(f"duplicate {axis!r} factor in {spec!r}")
+        seen.add(axis)
+        if n < 1:
+            raise ValueError(f"mesh factor {part!r} must be >= 1")
+        if axis == "dp":
+            dp = n
+        else:
+            tp = n
+    return dp, tp
+
+
+def tp_mesh(tp: int, devices: Optional[Sequence] = None):
+    """A ``("model",)``-axis Mesh over ``tp`` devices (the serving
+    engine's tensor-parallel domain). Defaults to the first ``tp`` of
+    ``jax.devices()`` — force 8 host devices on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    import jax
+    from jax.sharding import Mesh
+
+    devs = list(devices) if devices is not None else jax.devices()
+    if len(devs) < tp:
+        raise ValueError(
+            f"tensor parallelism tp={tp} needs {tp} devices, have "
+            f"{len(devs)} (on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={tp})")
+    return Mesh(np.asarray(devs[:tp]), ("model",))
+
+
+def deploy_replicas(arch_or_cfg, policy="int4", *, replicas: int = 2,
+                    tp: int = 1, devices: Optional[Sequence] = None,
+                    **deploy_kwargs):
+    """Deploy ``replicas`` independent engines behind a ReplicaRouter.
+
+    Each replica is a full ``serving.deploy`` of the same config/policy
+    (pass ``params=`` to share one checkpoint; otherwise ``init_seed``
+    makes every replica initialize identically). Device placement:
+
+    * ``tp > 1`` — replica ``i`` gets its own ``("model",)`` mesh over
+      devices ``[i*tp, (i+1)*tp)``: disjoint tensor-parallel groups.
+    * ``tp == 1`` with at least ``replicas`` devices — each replica is
+      pinned to its own device via a width-1 mesh, so replicas execute
+      concurrently instead of queueing on the default device.
+    * otherwise — no mesh (all replicas on the default device; routing
+      and backpressure still apply, only device concurrency is lost).
+
+    Returns a ``TranslationPipeline`` whose ``engine`` is the router —
+    ``translate``/``generate`` fan over replicas transparently
+    (``translate_stream`` needs a single-engine pipeline). The
+    per-replica engines stay reachable via ``pipe.engine.replicas``.
+    """
+    import jax
+    from jax.sharding import Mesh
+
+    from ..serving import deploy
+
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
+    devs = list(devices) if devices is not None else jax.devices()
+    if tp > 1:
+        need = replicas * tp
+        if len(devs) < need:
+            raise ValueError(
+                f"dp{replicas},tp{tp} needs {need} devices, have "
+                f"{len(devs)} (on CPU set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={need})")
+        meshes = [Mesh(np.asarray(devs[i * tp:(i + 1) * tp]), ("model",))
+                  for i in range(replicas)]
+    elif replicas > 1 and len(devs) >= replicas:
+        meshes = [Mesh(np.asarray(devs[i:i + 1]), ("model",))
+                  for i in range(replicas)]
+    else:
+        meshes = [None] * replicas
+    pipes = [deploy(arch_or_cfg, policy, mesh=m, **deploy_kwargs)
+             for m in meshes]
+    router = ReplicaRouter([p.engine for p in pipes])
+    return dataclasses.replace(pipes[0], engine=router)

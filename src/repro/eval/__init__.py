@@ -22,12 +22,14 @@ CLI: ``python -m repro.launch.eval --smoke --json out.json``.
 from .metrics import (BleuScore, BleuStat, ChrFStat, CorpusStat,
                       corpus_bleu, corpus_chrf, exact_match, token_accuracy)
 from .report import load, make_report, render_markdown, save
-from .suite import (PairScore, assert_spec_decode_equivalence,
-                    decode_token_grid, evaluate_pairs, summarize)
+from .suite import (PairScore, assert_serving_equivalence,
+                    assert_spec_decode_equivalence, decode_token_grid,
+                    evaluate_pairs, summarize)
 from .sweep import FormatRow, quant_sweep
 
 __all__ = ["BleuScore", "BleuStat", "ChrFStat", "CorpusStat", "corpus_bleu",
            "corpus_chrf", "exact_match", "token_accuracy", "PairScore",
            "evaluate_pairs", "summarize", "FormatRow", "quant_sweep",
            "make_report", "render_markdown", "save", "load",
-           "decode_token_grid", "assert_spec_decode_equivalence"]
+           "decode_token_grid", "assert_spec_decode_equivalence",
+           "assert_serving_equivalence"]

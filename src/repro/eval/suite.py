@@ -20,6 +20,10 @@ benchmarks/bench_serving.py). Speculative deployments
 `assert_spec_decode_equivalence` gates the subsystem's core invariant:
 the greedy spec-decode grid must equal the target-only grid
 token-for-token, whatever the draft spec, cache layout, or horizon.
+`assert_serving_equivalence` is the same gate generalized to any two
+deployments of one checkpoint — a tensor-parallel mesh engine or a
+ReplicaRouter cluster (``repro.cluster``) must reproduce the
+single-device grid exactly.
 """
 
 from __future__ import annotations
@@ -35,7 +39,8 @@ from ..serving import SamplingParams, latency_percentiles
 from .metrics import CorpusStat
 
 __all__ = ["PairScore", "evaluate_pairs", "summarize",
-           "decode_token_grid", "assert_spec_decode_equivalence"]
+           "decode_token_grid", "assert_spec_decode_equivalence",
+           "assert_serving_equivalence"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,3 +230,23 @@ def assert_spec_decode_equivalence(spec_pipe, target_pipe,
                 f"speculative decode diverged from target-only on "
                 f"{pair[0]}->{pair[1]} (draft "
                 f"{spec_pipe.draft_spec_str}): {got[pair]} != {ref}")
+
+
+def assert_serving_equivalence(pipe, ref_pipe,
+                               pair_list: Optional[
+                                   Sequence[Tuple[str, str]]] = None,
+                               label: str = "deployment",
+                               **grid_kwargs) -> None:
+    """Gate the cluster invariant: ``pipe`` (a tensor-parallel mesh
+    engine, a ReplicaRouter deployment — any serving stack over the
+    same checkpoint) must serve the identical greedy grid as
+    ``ref_pipe``, token-for-token with finish reasons. Raises
+    AssertionError naming ``label`` and the first diverging pair;
+    ``grid_kwargs`` forward to decode_token_grid."""
+    want = decode_token_grid(ref_pipe, pair_list, **grid_kwargs)
+    got = decode_token_grid(pipe, pair_list, **grid_kwargs)
+    for pair, ref in want.items():
+        if got[pair] != ref:
+            raise AssertionError(
+                f"{label} serving diverged from reference on "
+                f"{pair[0]}->{pair[1]}: {got[pair]} != {ref}")

@@ -20,7 +20,15 @@ Observability: ``--trace-out FILE`` serves with lifecycle + round-phase
 tracing enabled and dumps Chrome/Perfetto ``trace_event`` JSON at
 shutdown (open in chrome://tracing or ui.perfetto.dev);
 ``--metrics-out FILE`` writes the Prometheus text exposition of the
-final metrics snapshot + latency histograms.
+final metrics snapshot + latency histograms; ``--metrics-port N``
+additionally serves the LIVE exposition at ``GET /metrics`` on a
+stdlib daemon thread for the whole run.
+
+Scale-out: ``--mesh dp2,tp2`` deploys 2 router-balanced engine
+replicas, each tensor-parallel over its own 2-device ``("model",)``
+mesh (``repro.cluster``) — routed/sharded streams stay token-identical
+to a single-device engine. On CPU force devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
   PYTHONPATH=src python -m repro.launch.serve --arch nllb600m --smoke \
       --policy int4 --requests 6 --gen 8 --temperature 0.7 --top-p 0.9
@@ -34,9 +42,11 @@ import time
 import jax
 import jax.numpy as jnp
 
+from ..cluster import deploy_replicas, parse_mesh_spec, tp_mesh
 from ..configs import REGISTRY
 from ..core import ALIASES, resolve_spec
 from ..data import SyntheticTranslation
+from ..obs import MetricsServer
 from ..serving import (IMPL_CHOICES, EngineSaturated, SamplingParams,
                        SLATarget, TraceConfig, deploy, impl_routes)
 
@@ -95,6 +105,18 @@ def main():
     ap.add_argument("--metrics-out", default=None, metavar="FILE",
                     help="write the final metrics snapshot + latency "
                          "histograms as Prometheus text exposition")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="N",
+                    help="serve the live Prometheus exposition at "
+                         "http://127.0.0.1:N/metrics for the whole run "
+                         "(stdlib http.server daemon thread; 0 = "
+                         "ephemeral port, printed at startup)")
+    ap.add_argument("--mesh", default=None, metavar="SPEC",
+                    help="scale-out spec 'dp<N>,tp<K>' (either factor "
+                         "optional): N router-balanced replicas, each "
+                         "tensor-parallel over K devices; e.g. "
+                         "--mesh dp2,tp2 wants 4 devices (on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=4)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -109,15 +131,26 @@ def main():
         sla = SLATarget(p95_ttft_ms=args.sla_ttft_ms,
                         p95_tpot_ms=args.sla_tpot_ms,
                         window=max(args.requests // 2, 1))
-    pipe = deploy(args.arch, args.policy, slots=args.slots,
-                  max_len=args.max_len, smoke=args.smoke, paged=args.paged,
-                  page_size=args.page_size, num_pages=args.num_pages,
-                  horizon=args.horizon, draft_spec=args.draft_spec,
-                  draft_lookahead=args.draft_lookahead,
-                  overlap=not args.no_overlap, sla=sla,
-                  max_pending=args.max_pending,
-                  trace=TraceConfig() if args.trace_out else None,
-                  **impl_routes(args.impl))
+    dp, tp = parse_mesh_spec(args.mesh) if args.mesh else (1, 1)
+    deploy_kwargs = dict(
+        slots=args.slots, max_len=args.max_len, smoke=args.smoke,
+        paged=args.paged, page_size=args.page_size,
+        num_pages=args.num_pages, horizon=args.horizon,
+        draft_spec=args.draft_spec, draft_lookahead=args.draft_lookahead,
+        overlap=not args.no_overlap, sla=sla,
+        max_pending=args.max_pending,
+        trace=TraceConfig() if args.trace_out else None,
+        **impl_routes(args.impl))
+    if dp > 1:
+        pipe = deploy_replicas(args.arch, args.policy, replicas=dp, tp=tp,
+                               **deploy_kwargs)
+        print(f"cluster: {dp} replicas x tp{tp} over "
+              f"{len(jax.devices())} devices")
+    else:
+        pipe = deploy(args.arch, args.policy,
+                      mesh=tp_mesh(tp) if tp > 1 else None, **deploy_kwargs)
+        if tp > 1:
+            print(f"tensor parallel: tp{tp} ('model',) mesh")
     print(f"model bytes {pipe.fp_bytes/2**20:.1f} MB -> "
           f"{pipe.quantized_bytes/2**20:.1f} MB "
           f"({args.policy} = {pipe.spec_str}, {pipe.compression:.2f}x)")
@@ -131,6 +164,14 @@ def main():
     # independent
     ds = SyntheticTranslation(cfg.vocab_size, cfg.enc_len,
                               seed=0) if cfg.family in ("encdec",) else None
+
+    metrics_srv = None
+    if args.metrics_port is not None:
+        # live scrape endpoint for the whole run; closed gracefully
+        # (socket unbound, thread joined) after the shutdown summary
+        metrics_srv = MetricsServer(pipe.engine.prometheus,
+                                    port=args.metrics_port).start()
+        print(f"metrics: live at {metrics_srv.url}")
 
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -209,7 +250,10 @@ def main():
         with open(args.metrics_out, "w") as f:
             f.write(pipe.engine.prometheus())
         print(f"metrics: prometheus text -> {args.metrics_out}")
-    if pipe.engine.sla is not None:
+    if metrics_srv is not None:
+        metrics_srv.close()
+        print("metrics: endpoint closed")
+    if getattr(pipe.engine, "sla", None) is not None:
         ctl = pipe.engine.sla
         held = ctl.holding()
         print(f"sla: target ttft_p95 {args.sla_ttft_ms} ms / tpot_p95 "

@@ -15,17 +15,23 @@ each request live through?* Two modules:
   ui.perfetto.dev).
 * ``obs.metrics`` — the single nearest-rank ``percentile`` definition
   (shared by ``serving.latency_percentiles`` and the SLA controller), a
-  fixed log-bucket ``Histogram`` with merge, and a Prometheus
-  text-exposition renderer over an ``EngineMetrics`` snapshot plus
-  histograms.
+  fixed log-bucket ``Histogram`` with merge, and Prometheus
+  text-exposition renderers over ``EngineMetrics`` snapshots plus
+  histograms (single-snapshot and per-replica labelled).
+* ``obs.promhttp`` — a stdlib daemon-thread HTTP server exposing any
+  ``prometheus()``-shaped renderer at ``GET /metrics`` (the live
+  scrape endpoint behind ``launch.serve --metrics-port``).
 
 This package imports nothing from ``repro.serving`` (serving imports
 it), so it can also observe future subsystems (mesh replicas, the
 background pump) without a cycle.
 """
 
-from .metrics import Histogram, percentile, render_prometheus
+from .metrics import (Histogram, percentile, render_prometheus,
+                      render_prometheus_labeled)
+from .promhttp import MetricsServer
 from .trace import PHASES, SCHED_TID, TraceConfig, TraceEvent, Tracer
 
-__all__ = ["Histogram", "percentile", "render_prometheus", "PHASES",
-           "SCHED_TID", "TraceConfig", "TraceEvent", "Tracer"]
+__all__ = ["Histogram", "MetricsServer", "percentile", "render_prometheus",
+           "render_prometheus_labeled", "PHASES", "SCHED_TID",
+           "TraceConfig", "TraceEvent", "Tracer"]

@@ -22,9 +22,10 @@ are not retained).
 from __future__ import annotations
 
 import bisect
-from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
-__all__ = ["percentile", "Histogram", "render_prometheus"]
+__all__ = ["percentile", "Histogram", "render_prometheus",
+           "render_prometheus_labeled"]
 
 
 def percentile(vals: Iterable[float], q: float) -> float:
@@ -155,10 +156,23 @@ def _fmt(v: float) -> str:
     return repr(f)
 
 
+def _label_str(labels: Optional[Mapping[str, str]],
+               extra: Optional[Tuple[str, str]] = None) -> str:
+    """Rendered ``{k="v",...}`` block (empty string when no labels)."""
+    pairs = sorted((labels or {}).items())
+    if extra is not None:
+        pairs.append(extra)
+    if not pairs:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in pairs) + "}"
+
+
 def render_prometheus(
     snapshot: object,
     histograms: Optional[Mapping[str, Histogram]] = None,
     prefix: str = "repro_serving",
+    labels: Optional[Mapping[str, str]] = None,
+    emit_type: bool = True,
 ) -> str:
     """Render an ``EngineMetrics``-like snapshot + histograms as
     Prometheus text exposition (version 0.0.4).
@@ -167,12 +181,20 @@ def render_prometheus(
     ``GAUGES`` class attribute names fields that are levels rather than
     monotone counters. Everything else integral is typed ``counter``,
     floats are typed ``gauge`` (derived values such as percentiles).
+
+    ``labels`` stamps every sample line with the same label set (e.g.
+    ``{"replica": "2"}`` for a per-replica cluster section); histogram
+    buckets merge them with their ``le`` label. ``emit_type=False``
+    drops the ``# TYPE`` comments — required when a caller renders one
+    metric family several times with different label values (the text
+    format allows each TYPE declaration at most once per exposition).
     """
     if hasattr(snapshot, "as_dict"):
         d = snapshot.as_dict()  # type: ignore[attr-defined]
     else:
         d = dict(snapshot)  # type: ignore[arg-type]
     gauges = frozenset(getattr(type(snapshot), "GAUGES", ()) or ())
+    lbl = _label_str(labels)
     lines: List[str] = []
     for k in sorted(d):
         v = d[k]
@@ -180,17 +202,59 @@ def render_prometheus(
             continue
         name = f"{prefix}_{k}"
         typ = "gauge" if (k in gauges or isinstance(v, float)) else "counter"
-        lines.append(f"# TYPE {name} {typ}")
-        lines.append(f"{name} {_fmt(v)}")
+        if emit_type:
+            lines.append(f"# TYPE {name} {typ}")
+        lines.append(f"{name}{lbl} {_fmt(v)}")
     for hname in sorted(histograms or {}):
         h = histograms[hname]  # type: ignore[index]
         name = f"{prefix}_{hname}"
-        lines.append(f"# TYPE {name} histogram")
+        if emit_type:
+            lines.append(f"# TYPE {name} histogram")
         cum = 0
         for le, c in zip(h.bounds, h.counts):
             cum += c
-            lines.append(f'{name}_bucket{{le="{_fmt(le)}"}} {cum}')
-        lines.append(f'{name}_bucket{{le="+Inf"}} {h.count}')
-        lines.append(f"{name}_sum {_fmt(h.total)}")
-        lines.append(f"{name}_count {h.count}")
+            bl = _label_str(labels, ("le", _fmt(le)))
+            lines.append(f"{name}_bucket{bl} {cum}")
+        lines.append(f'{name}_bucket{_label_str(labels, ("le", "+Inf"))} '
+                     f"{h.count}")
+        lines.append(f"{name}_sum{lbl} {_fmt(h.total)}")
+        lines.append(f"{name}_count{lbl} {h.count}")
+    return "\n".join(lines) + "\n"
+
+
+def render_prometheus_labeled(
+    snapshots: Sequence[Tuple[Mapping[str, str], object]],
+    prefix: str = "repro_serving",
+) -> str:
+    """One exposition over N label-distinguished snapshots of the same
+    family set (e.g. per-replica EngineMetrics, labelled
+    ``{"replica": "0"}`` .. ``{"replica": "N-1"}``).
+
+    Unlike calling :func:`render_prometheus` once per snapshot and
+    concatenating — which interleaves metric families and repeats TYPE
+    declarations, both invalid in the text format — this groups lines
+    per family: one TYPE comment, then one labelled sample per
+    snapshot, for every field present in any snapshot.
+    """
+    dicts = []
+    gauges: set = set()
+    for labels, snap in snapshots:
+        d = snap.as_dict() if hasattr(snap, "as_dict") else dict(snap)
+        dicts.append((labels, d))
+        gauges.update(getattr(type(snap), "GAUGES", ()) or ())
+    keys = sorted({k for _, d in dicts for k in d})
+    lines: List[str] = []
+    for k in keys:
+        vals = [(labels, d[k]) for labels, d in dicts
+                if k in d and d[k] is not None
+                and not isinstance(d[k], (str, bytes, dict, list, tuple))]
+        if not vals:
+            continue
+        name = f"{prefix}_{k}"
+        typ = ("gauge" if (k in gauges
+                           or any(isinstance(v, float) for _, v in vals))
+               else "counter")
+        lines.append(f"# TYPE {name} {typ}")
+        for labels, v in vals:
+            lines.append(f"{name}{_label_str(labels)} {_fmt(v)}")
     return "\n".join(lines) + "\n"

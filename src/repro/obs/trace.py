@@ -22,7 +22,11 @@ track carrying ``round`` spans with ``admit``/``dispatch``/``sync``/
 ``walk`` phase events; each request gets tid ``rid + 1`` carrying its
 lifecycle span (``request`` wrapping ``queued``, a ``prefill`` complete
 event, ``decode-round``/``verify``/``preempted``/``resumed`` instants,
-and a ``retired`` instant with the finish reason).
+and a ``retired`` instant with the finish reason). A ``resume`` flow
+pair (``flow_start`` at each preemption, ``flow_end`` at the matching
+resume — or at retirement if the stashed request dies queued) links a
+preempted request's two slot residencies, so Perfetto draws the
+continuity arrow across the gap.
 
 Export is the Chrome ``trace_event`` JSON array format — load the file
 in ``chrome://tracing`` or https://ui.perfetto.dev.
@@ -59,7 +63,9 @@ class TraceConfig:
 class TraceEvent:
     """One structured event. ``ph`` follows the Chrome trace_event
     phases this exporter emits: B/E (span begin/end), X (complete, with
-    ``dur_us``), i (instant)."""
+    ``dur_us``), i (instant), s/f (flow start/finish, carrying
+    ``flow_id`` — Perfetto draws an arrow between the slices enclosing
+    the two endpoints)."""
 
     ph: str
     name: str
@@ -67,6 +73,7 @@ class TraceEvent:
     tid: int
     dur_us: float = 0.0
     args: Optional[Dict[str, Any]] = None
+    flow_id: Optional[int] = None
 
     def to_chrome(self) -> Dict[str, Any]:
         d: Dict[str, Any] = {
@@ -77,6 +84,10 @@ class TraceEvent:
             d["dur"] = self.dur_us
         if self.ph == "i":
             d["s"] = "t"  # instant scoped to its thread/track
+        if self.ph in ("s", "f"):
+            d["id"] = self.flow_id
+            if self.ph == "f":
+                d["bp"] = "e"  # bind to the enclosing slice, not the next
         if self.args:
             d["args"] = self.args
         return d
@@ -91,6 +102,7 @@ class Tracer:
         self.events: Deque[TraceEvent] = deque(maxlen=self.config.capacity)
         self.dropped = 0
         self._floor_us = float("-inf")
+        self._next_flow = 0
         self._track_names: Dict[int, str] = {SCHED_TID: "scheduler"}
 
     def __len__(self) -> int:
@@ -134,6 +146,28 @@ class Tracer:
                                 dur_us=max(dur_s, 0.0) * 1e6,
                                 args=args or None))
 
+    def flow_start(self, tid: int, name: str, ts_s: float,
+                   **args: Any) -> int:
+        """Open a flow link (Chrome ``s`` event) and return its fresh
+        flow id. The serving engine links a preempted request's two
+        slot residencies this way: ``flow_start`` at the preemption,
+        ``flow_end`` with the returned id at the resume (or at
+        retirement, if the request dies while stashed) — Perfetto draws
+        the arrow, and :meth:`check` enforces the pairing. Flow stamps
+        are points, un-clamped like instants."""
+        self._next_flow += 1
+        self._record(TraceEvent("s", name, ts_s * 1e6, tid,
+                                args=args or None,
+                                flow_id=self._next_flow))
+        return self._next_flow
+
+    def flow_end(self, tid: int, name: str, ts_s: float, flow_id: int,
+                 **args: Any) -> None:
+        """Close the flow link opened by :meth:`flow_start` under the
+        same ``name`` and the id it returned."""
+        self._record(TraceEvent("f", name, ts_s * 1e6, tid,
+                                args=args or None, flow_id=flow_id))
+
     # ------------------------------------------------------------------
     # Validation — used by bench/CI tripwires and tests.
     # ------------------------------------------------------------------
@@ -146,14 +180,42 @@ class Tracer:
         matching innermost B (same name, end >= begin), child events do
         not start before their enclosing span, a span does not end
         before a child event recorded inside it ended, and nothing is
-        left open. Recorded order is the ground truth for nesting —
+        left open. Flow links are pair-checked globally: every ``f``
+        must consume a prior ``s`` with the same flow id and name at a
+        non-earlier stamp, each id is consumed at most once, and no
+        link is left dangling (the engine closes every preemption link
+        — at the resume, or at retirement if the stashed request dies
+        queued). Recorded order is the ground truth for nesting —
         the engine emits strictly stack-disciplined spans.
         """
         problems: List[str] = []
         # tid -> stack of [begin_event, max_child_end_us]
         stacks: Dict[int, List[List[Any]]] = {}
+        open_flows: Dict[int, TraceEvent] = {}
         for ev in self.events:
             st = stacks.setdefault(ev.tid, [])
+            if ev.ph in ("s", "f"):
+                if ev.ph == "s":
+                    if ev.flow_id in open_flows:
+                        problems.append(
+                            f"tid {ev.tid}: flow {ev.flow_id} started twice")
+                    open_flows[ev.flow_id] = ev
+                else:
+                    s = open_flows.pop(ev.flow_id, None)
+                    if s is None:
+                        problems.append(
+                            f"tid {ev.tid}: f {ev.name!r} flow {ev.flow_id} "
+                            f"without matching s")
+                    else:
+                        if s.name != ev.name:
+                            problems.append(
+                                f"flow {ev.flow_id}: f {ev.name!r} closes "
+                                f"s {s.name!r}")
+                        if ev.ts_us < s.ts_us:
+                            problems.append(
+                                f"flow {ev.flow_id} ({ev.name!r}) ends "
+                                f"before it starts")
+                continue
             if ev.ph == "B":
                 if st and ev.ts_us < st[-1][0].ts_us:
                     problems.append(
@@ -188,6 +250,9 @@ class Tracer:
         for tid, st in stacks.items():
             for b, _ in st:
                 problems.append(f"tid {tid}: span {b.name!r} never closed")
+        for fid, s in open_flows.items():
+            problems.append(
+                f"tid {s.tid}: flow {fid} ({s.name!r}) never finished")
         return problems
 
     def request_spans(self) -> Dict[int, Dict[str, Any]]:
@@ -216,7 +281,7 @@ class Tracer:
                 span["closed"] = True
                 span["end_us"] = ev.ts_us
                 del open_by_tid[ev.tid]
-            elif ev.ph != "E":
+            elif ev.ph not in ("E", "s", "f"):
                 span["events"].append(ev.name)
                 if ev.name == "retired":
                     span["reason"] = (ev.args or {}).get("reason")

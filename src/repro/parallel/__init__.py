@@ -1,7 +1,7 @@
 from .sharding import (activation_spec, batch_axes, batch_shardings,
                        cache_shardings, current_mesh, hint, hint_pick,
-                       param_shardings, set_mesh)
+                       paged_pool_shardings, param_shardings, set_mesh)
 
 __all__ = ["hint", "set_mesh", "current_mesh", "batch_axes",
            "activation_spec", "param_shardings", "batch_shardings",
-           "cache_shardings", "hint_pick"]
+           "cache_shardings", "paged_pool_shardings", "hint_pick"]

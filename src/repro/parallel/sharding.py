@@ -26,7 +26,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["set_mesh", "current_mesh", "hint", "hint_pick", "batch_axes",
            "activation_spec", "param_shardings", "batch_shardings",
-           "cache_shardings"]
+           "cache_shardings", "paged_pool_shardings"]
 
 _MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
     "repro_mesh", default=None)
@@ -289,6 +289,37 @@ def cache_shardings(mesh: Mesh, cache: Any):
                 spec[1] = dp
             if _divides(mesh, "model", shape[2]):
                 spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(visit, cache)
+
+
+def paged_pool_shardings(mesh: Mesh, cache: Any):
+    """Paged-pool shardings for the serving engine's shared page pool.
+
+    Pool leaves are (L, P, ps, Hkv, hd) — the page axis P is shared by
+    all requests (a chain may land on any page), so only the head axes
+    shard: Hkv on "model" when divisible, else hd. Scale leaves
+    (L, P, ps, Hkv) shard Hkv the same way. Per-slot dense cross buffers
+    (L, slots, S, Hkv[, hd]) shard their head dim. Block tables,
+    lengths, and active flags stay host-replicated — the allocator is
+    host-side state and every device needs the full chain view.
+    """
+    def visit(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        shape = getattr(leaf, "shape", ())
+        nd = len(shape)
+        if re.search(r"'(block_tables|len|active|cross_len|pos)'", pstr) or nd <= 1:
+            return NamedSharding(mesh, P())
+        spec = [None] * nd
+        if re.search(r"'(k|v|k_codes|v_codes|cross_k|cross_v|cross_k_codes|cross_v_codes)'", pstr) and nd == 5:
+            if _divides(mesh, "model", shape[3]):
+                spec[3] = "model"
+            elif _divides(mesh, "model", shape[4]):
+                spec[4] = "model"
+        elif re.search(r"'(k_scales|v_scales|cross_k_scales|cross_v_scales)'", pstr) and nd == 4:
+            if _divides(mesh, "model", shape[3]):
+                spec[3] = "model"
         return NamedSharding(mesh, P(*spec))
 
     return jax.tree_util.tree_map_with_path(visit, cache)

@@ -25,6 +25,11 @@ timing, exportable as Chrome/Perfetto JSON (`pipe.tracer.dump_json`);
 `engine.prometheus()` renders the metrics snapshot + ttft/tpot/phase
 histograms as Prometheus text (see `repro.obs`).
 
+Scale-out: `deploy(..., mesh=...)` tensor-shards one engine over a
+`("model",)` device mesh; `repro.cluster` adds the data-parallel
+`ReplicaRouter` / `deploy_replicas` layer on top, aggregating replica
+snapshots with `merge_metrics`.
+
 `greedy_generate` / `translate` remain as deprecated single-shot
 wrappers for legacy callers.
 """
@@ -32,7 +37,7 @@ wrappers for legacy callers.
 from ..obs import TraceConfig, Tracer
 from .engine import ServeEngine, greedy_generate, translate
 from .faults import FaultPlan
-from .metrics import EngineMetrics, SLATarget
+from .metrics import EngineMetrics, SLATarget, merge_metrics
 from .paged_cache import PageAllocator, pages_needed
 from .params import (FINISH_REASONS, GREEDY, EngineSaturated, Request,
                      RequestOutput, RequestStats, SamplingParams,
@@ -46,5 +51,6 @@ __all__ = ["ServeEngine", "greedy_generate", "translate", "SamplingParams",
            "latency_percentiles", "TranslationPipeline", "deploy",
            "PageAllocator", "pages_needed", "impl_routes", "IMPL_CHOICES",
            "DraftArm", "accept_longest_prefix", "build_draft_arm",
-           "EngineMetrics", "SLATarget", "EngineSaturated", "FaultPlan",
+           "EngineMetrics", "SLATarget", "merge_metrics", "EngineSaturated",
+           "FaultPlan",
            "FINISH_REASONS", "ERR_TOKEN", "TraceConfig", "Tracer"]

@@ -152,6 +152,8 @@ import numpy as np
 from ..models.api import decode_block
 from ..models.layers import Ctx
 from ..obs import PHASES, SCHED_TID, Histogram, TraceConfig, Tracer
+from ..parallel import (cache_shardings, paged_pool_shardings,
+                        param_shardings, set_mesh)
 from ..obs.metrics import render_prometheus
 from .metrics import EngineMetrics, SLAController, SLATarget
 from .paged_cache import TRASH_PAGE, PageAllocator, paged_insert, pages_needed
@@ -199,7 +201,8 @@ class ServeEngine:
                  draft: Optional[DraftArm] = None, overlap: bool = True,
                  sla: Optional[SLATarget] = None,
                  max_pending: Optional[int] = None,
-                 preempt_limit: int = 3, faults=None, trace=None):
+                 preempt_limit: int = 3, faults=None, trace=None,
+                 mesh=None):
         if horizon < 1:
             raise ValueError(f"horizon must be >= 1, got {horizon}")
         if max_pending is not None and max_pending < 1:
@@ -210,6 +213,20 @@ class ServeEngine:
         self.model = model
         self.params = params
         self.ctx = ctx or Ctx()
+        # tensor-parallel mesh: params and KV storage are device_put
+        # once at init under NamedSharding (no per-round resharding);
+        # every jitted callable traces under set_mesh(self.mesh) so the
+        # model's hint() constraints resolve against it
+        self.mesh = mesh
+        if mesh is not None:
+            # TP-only weight sharding (fsdp_scope="none"): FSDP would
+            # split contraction dims over the data axis, reordering
+            # float accumulation enough to flip sampled tokens — the
+            # engine's standing invariant is token-identical streams,
+            # and inference weights are read-only so FSDP buys nothing
+            self.params = jax.device_put(
+                self.params,
+                param_shardings(mesh, self.params, fsdp_scope="none"))
         self.kv_dtype = kv_dtype
         self.max_len = max_len
         self.n_slots = slots
@@ -268,6 +285,15 @@ class ServeEngine:
                 if draft is not None:
                     self.draft_cache = model.init_cache(
                         slots, max_len, draft.kv_dtype)
+        if mesh is not None:
+            # one-time placement of the KV storage: paged pools shard
+            # their head axes (block tables / allocator stay replicated
+            # host state), dense caches shard per cache_shardings
+            shard = paged_pool_shardings if self.paged else cache_shardings
+            self.cache = jax.device_put(self.cache, shard(mesh, self.cache))
+            if self.draft_cache is not None:
+                self.draft_cache = jax.device_put(
+                    self.draft_cache, shard(mesh, self.draft_cache))
         self.slots = [_Slot(i) for i in range(slots)]
         self.cur = jnp.zeros((slots, 1), jnp.int32)
         # per-slot sampling state — traced args of the fused step, so
@@ -332,6 +358,7 @@ class ServeEngine:
         self._admit_seq = 0               # victim ordering (youngest)
         self._preempted: Dict[int, list] = {}       # rid -> stashed tokens
         self._preempt_counts: Dict[int, int] = {}   # rid -> eviction count
+        self._flow_ids: Dict[int, int] = {}         # rid -> open trace flow
         self._disp_len: Dict[int, int] = {}  # slot -> dispatched positions
         self._no_poison = jnp.full((slots,), -1, jnp.int32)
         self._preemptions = 0
@@ -364,7 +391,7 @@ class ServeEngine:
                                 jnp.zeros((1,), jnp.int32))[0]
             return one, tok
 
-        self._prefill_fn = jax.jit(_prefill)
+        self._prefill_fn = self._jit(_prefill)
 
         def _step(p, cur, cache, temps, top_ks, top_ps, keys, offsets,
                   poison):
@@ -377,7 +404,7 @@ class ServeEngine:
             nxt = sample_tokens(lg, temps, top_ks, top_ps, keys, offsets)
             return cache, nxt
 
-        self._step_fn = jax.jit(_step)
+        self._step_fn = self._jit(_step)
 
         def _prefill_paged(p, inputs, lengths, slot_ids, page_rows, cache,
                            temps, top_ks, top_ps, keys):
@@ -393,7 +420,7 @@ class ServeEngine:
             cache = paged_insert(cache, mini, slot_ids, page_rows, lengths)
             return cache, toks
 
-        self._prefill_paged_fn = jax.jit(_prefill_paged)
+        self._prefill_paged_fn = self._jit(_prefill_paged)
 
         if draft is not None:
             # the draft arm's prefill mirrors the target's but discards
@@ -404,7 +431,7 @@ class ServeEngine:
                 one, _ = model.prefill(draft.ctx, p, one, batch)
                 return one
 
-            self._draft_prefill_fn = jax.jit(_draft_prefill)
+            self._draft_prefill_fn = self._jit(_draft_prefill)
 
             def _draft_prefill_paged(p, inputs, lengths, slot_ids,
                                      page_rows, cache):
@@ -414,7 +441,7 @@ class ServeEngine:
                 return paged_insert(cache, mini, slot_ids, page_rows,
                                     lengths)
 
-            self._draft_prefill_paged_fn = jax.jit(_draft_prefill_paged)
+            self._draft_prefill_paged_fn = self._jit(_draft_prefill_paged)
 
             # constant sampling args for the draft scan: temperature 0
             # everywhere makes sample_tokens_scan a pure greedy argmax
@@ -425,6 +452,24 @@ class ServeEngine:
             self._no_eos = jnp.full((slots,), -1, jnp.int32)
             self._draft_fns: Dict[int, Callable] = {}
             self._verify_fns: Dict[int, Callable] = {}
+
+    def _jit(self, fn):
+        """jax.jit with the engine mesh active at trace *and* call time.
+
+        hint()/hint_pick() constraints inside the model resolve against
+        the contextvar mesh when the function is traced, so a mesh-less
+        engine compiles exactly the executable it always did (set_mesh
+        is a no-op wrapper only for mesh-armed engines)."""
+        jitted = jax.jit(fn)
+        if self.mesh is None:
+            return jitted
+        mesh = self.mesh
+
+        def call(*args, **kwargs):
+            with set_mesh(mesh):
+                return jitted(*args, **kwargs)
+
+        return call
 
     # ------------------------------------------------------------------
     # request API
@@ -629,6 +674,25 @@ class ServeEngine:
             yield buf.pop(0)
         return out
 
+    def serve_rounds(self, horizon: Optional[int] = None,
+                     max_rounds: int = 1_000_000) -> Iterator[None]:
+        """Round-granular view of the overlapped scheduler loop: each
+        ``next()`` advances exactly one round (admit / dispatch-ahead /
+        sync+walk) and finished outputs accumulate for
+        :meth:`take_finished`. This is the cluster router's drain
+        primitive — interleaving several replicas' generators means
+        each host sync of one replica happens while every OTHER
+        replica's dispatched horizon is still running on its own
+        devices. Closing the generator early walks any
+        dispatched-ahead block, leaving host state consistent."""
+        return self._rounds(horizon, max_rounds=max_rounds)
+
+    def take_finished(self) -> List[RequestOutput]:
+        """Claim (and clear) the outputs of every request that finished
+        since the last claim — the companion to :meth:`serve_rounds`
+        (``step``/``run_until_drained``/``stream`` claim internally)."""
+        return self._take_finished()
+
     def _take_finished(self) -> List[RequestOutput]:
         out, self._finished = self._finished, []
         return out
@@ -704,6 +768,7 @@ class ServeEngine:
         st = self._stats.pop(r.id)
         toks = self._preempted.pop(r.id, [])
         self._preempt_counts.pop(r.id, None)
+        fid = self._flow_ids.pop(r.id, None)
         st.finished_s = self._now()
         if st.first_token_s == 0.0:
             st.first_token_s = st.finished_s
@@ -713,6 +778,11 @@ class ServeEngine:
         if self.trace is not None:
             tid = r.id + 1
             self.trace.end(tid, "queued", st.finished_s)
+            if fid is not None:
+                # stashed request died before its resume: terminate the
+                # residency link at the retirement instead
+                self.trace.flow_end(tid, "resume", st.finished_s, fid,
+                                    reason=reason)
             if reason == "deadline":
                 self.trace.instant(tid, "deadline", st.finished_s)
             self.trace.instant(tid, "retired", st.finished_s,
@@ -1066,6 +1136,14 @@ class ServeEngine:
             hists[f"round_phase_{p}_ms"] = self._phase_hist[p]
         return render_prometheus(self.metrics(), hists)
 
+    def latency_histograms(self) -> Dict[str, Histogram]:
+        """The live TTFT/TPOT Histogram accumulators (one sample per
+        retirement since the last reset). Cluster-level aggregation
+        merges these across replicas via ``Histogram.merge`` — merge
+        into a fresh ``Histogram()``, never in place, or the replica's
+        own percentiles double-count."""
+        return {"ttft_ms": self._ttft_hist, "tpot_ms": self._tpot_hist}
+
     def reset_metrics(self) -> None:
         """Zero every EngineMetrics counter (occupancy/page-utilization/
         host-sync/overlap/speculative-decode accumulators — e.g. after a
@@ -1325,7 +1403,7 @@ class ServeEngine:
                 jnp.arange(K, dtype=jnp.int32))
             return cache, cur, offsets, alive, rem, block
 
-        return jax.jit(_horizon)
+        return self._jit(_horizon)
 
     # -- speculative decode (quantized-draft) --------------------------
 
@@ -1384,7 +1462,7 @@ class ServeEngine:
             return (_rollback(cache, roll), _rollback(dcache, roll),
                     out, n_emit, acc, new_cur[:, None])
 
-        return jax.jit(_verify)
+        return self._jit(_verify)
 
     def _spec_round(self):
         """One speculative round: draft K tokens with the horizon scan
@@ -1566,7 +1644,14 @@ class ServeEngine:
             self._retire(s, "preempted_limit")
             return
         if self.trace is not None:
-            self.trace.begin(r.id + 1, "queued", self._now())
+            now = self._now()
+            self.trace.begin(r.id + 1, "queued", now)
+            # link the two slot residencies: flow_end fires at the
+            # resume (or at retirement, if the stash dies queued), so
+            # Perfetto draws the continuity arrow and Tracer.check()
+            # can insist every preemption link is paired
+            self._flow_ids[r.id] = self.trace.flow_start(
+                r.id + 1, "resume", now, count=n)
         self._preempt_counts[r.id] = n
         self._preempted[r.id] = list(s.tokens)
         s.active = False
@@ -1757,9 +1842,12 @@ class ServeEngine:
                 # at fold len(stash), exactly the pre-eviction state
                 tok = int(stash[-1])
                 self._resumed += 1
+                fid = self._flow_ids.pop(r.id, None)
                 if tr is not None:
                     tr.instant(r.id + 1, "resumed", now,
                                replayed=len(stash))
+                    if fid is not None:
+                        tr.flow_end(r.id + 1, "resume", now, fid)
             else:
                 tok = int(first[i])
             self.cur = self.cur.at[sid, 0].set(tok)

@@ -31,11 +31,11 @@ under ``bench_serving --rate`` Poisson load and bursty real traffic.
 from __future__ import annotations
 
 import dataclasses
-from typing import ClassVar, Dict, List, Optional, Tuple
+from typing import ClassVar, Dict, List, Optional, Sequence, Tuple
 
-from ..obs.metrics import percentile
+from ..obs.metrics import Histogram, percentile
 
-__all__ = ["EngineMetrics", "SLATarget", "SLAController"]
+__all__ = ["EngineMetrics", "SLATarget", "SLAController", "merge_metrics"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +95,81 @@ class EngineMetrics:
     def as_dict(self) -> Dict[str, float]:
         """Plain dict for JSON rows (benchmarks, eval reports)."""
         return dataclasses.asdict(self)
+
+
+def _weighted_mean(pairs: Sequence[Tuple[float, float]]) -> float:
+    """sum(v * w) / sum(w), 0.0 when no weight accumulated."""
+    den = sum(w for _, w in pairs)
+    return sum(v * w for v, w in pairs) / den if den else 0.0
+
+
+def merge_metrics(snapshots: Sequence[EngineMetrics],
+                  ttft_hist: Optional[Histogram] = None,
+                  tpot_hist: Optional[Histogram] = None) -> EngineMetrics:
+    """Aggregate per-replica EngineMetrics into one cluster snapshot.
+
+    Counters and gauges sum. Derived ratios recompute from the summed
+    counters where the snapshot retains both sides of the division
+    (mean_tokens_per_sync, acceptance_rate, mean_accepted_per_verify);
+    occupancy and page_utilization — whose denominators fold in
+    per-engine slot/pool sizes that a snapshot does not carry — merge
+    as decode_steps-weighted means, which equals the pooled ratio when
+    replicas are homogeneous (the router's deployment mode). Latency
+    percentiles come from ``ttft_hist``/``tpot_hist`` when given —
+    build them by ``Histogram.merge``-ing every replica's accumulators
+    into a fresh ``Histogram()`` — and are 0.0 otherwise (a sum or
+    mean of percentiles would be statistically meaningless).
+    """
+    if not snapshots:
+        raise ValueError("merge_metrics needs at least one snapshot")
+
+    def tot(field: str):
+        return sum(getattr(s, field) for s in snapshots)
+
+    decode_syncs = tot("decode_syncs")
+    synced_tokens = tot("synced_tokens")
+    drafted = tot("drafted_tokens")
+    accepted = tot("accepted_tokens")
+    verify_calls = tot("verify_calls")
+
+    def pct(hist: Optional[Histogram], q: float) -> float:
+        return round(hist.percentile(q), 4) if hist is not None else 0.0
+
+    return EngineMetrics(
+        decode_steps=tot("decode_steps"),
+        decode_syncs=decode_syncs,
+        synced_tokens=synced_tokens,
+        active_slot_steps=tot("active_slot_steps"),
+        page_slot_steps=tot("page_slot_steps"),
+        overlap_rounds=tot("overlap_rounds"),
+        verify_calls=verify_calls,
+        drafted_tokens=drafted,
+        accepted_tokens=accepted,
+        rejected_tokens=tot("rejected_tokens"),
+        preemptions=tot("preemptions"),
+        resumed_requests=tot("resumed_requests"),
+        deadline_expirations=tot("deadline_expirations"),
+        admission_rejections=tot("admission_rejections"),
+        slot_errors=tot("slot_errors"),
+        mean_tokens_per_sync=(synced_tokens / decode_syncs
+                              if decode_syncs else 0.0),
+        occupancy=_weighted_mean([(s.occupancy, s.decode_steps)
+                                  for s in snapshots]),
+        page_utilization=_weighted_mean([(s.page_utilization, s.decode_steps)
+                                         for s in snapshots]),
+        acceptance_rate=accepted / drafted if drafted else 0.0,
+        mean_accepted_per_verify=(accepted / verify_calls
+                                  if verify_calls else 0.0),
+        ttft_p50_ms=pct(ttft_hist, 50.0),
+        ttft_p95_ms=pct(ttft_hist, 95.0),
+        tpot_p50_ms=pct(tpot_hist, 50.0),
+        tpot_p95_ms=pct(tpot_hist, 95.0),
+        phase_admit_ms=round(tot("phase_admit_ms"), 4),
+        phase_dispatch_ms=round(tot("phase_dispatch_ms"), 4),
+        phase_sync_ms=round(tot("phase_sync_ms"), 4),
+        phase_walk_ms=round(tot("phase_walk_ms"), 4),
+        kv_cache_bytes=tot("kv_cache_bytes"),
+        prefill_compiles=tot("prefill_compiles"))
 
 
 @dataclasses.dataclass(frozen=True)

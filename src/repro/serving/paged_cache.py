@@ -17,6 +17,16 @@ lengths are shorter. This module replaces that with vLLM-style paging:
     reserved trash page 0, which valid-length masking excludes from
     attention and which absorbs writes from idle slots.
 
+Under tensor parallelism (``deploy(..., mesh=...)``) the pool shards
+on the *head* axes: ``parallel.sharding.paged_pool_shardings`` places
+``Hkv`` (and ``hd`` when heads don't divide the mesh) over the
+``"model"`` axis while ``L``/``P``/``ps`` stay replicated, so a page
+is the same page on every shard and the host-side ``PageAllocator``,
+chains, and block tables need no distribution at all — one free list
+drives every device. Storage is ``device_put`` once at engine init;
+page-walk gathers/scatters then run under GSPMD with no per-round
+resharding.
+
 The page-walk jnp primitives (`gather_pages` / `scatter_token` /
 `scatter_prefill`) live in `kernels/paging.py` — one source of truth
 shared by the model decode paths, this engine layer, and the kernel

@@ -203,8 +203,8 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
            draft_lookahead: int = 4, overlap: bool = True,
            sla: Optional[SLATarget] = None,
            max_pending: Optional[int] = None, preempt_limit: int = 3,
-           faults=None, trace: Union[Tracer, TraceConfig, None] = None
-           ) -> TranslationPipeline:
+           faults=None, trace: Union[Tracer, TraceConfig, None] = None,
+           mesh=None) -> TranslationPipeline:
     """Build a ready-to-serve TranslationPipeline in one call.
 
     arch_or_cfg: registry name (see configs.REGISTRY) or a ModelConfig.
@@ -291,6 +291,17 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
                  ``pipe.tracer.dump_json(path)``). None (default) keeps
                  the round loop observation-free: no events, no extra
                  clock reads, identical token streams and sync counts.
+    mesh:        a ``jax.sharding.Mesh`` for tensor-parallel serving:
+                 quantized params and the KV storage (dense caches or
+                 the paged page pool) are placed once under
+                 NamedSharding at engine init and every jitted serving
+                 callable traces with the mesh active, so prefill and
+                 the decode scan dispatch as GSPMD programs with no
+                 per-round resharding. Block tables and the page
+                 allocator stay host-replicated. Token streams are
+                 identical to the mesh-less engine (CI asserts this on
+                 8 forced host devices). None (default) keeps the
+                 single-device path byte-identical to prior releases.
     """
     spec = resolve_spec(policy)
     cfg = get_config(arch_or_cfg) if isinstance(arch_or_cfg, str) \
@@ -370,7 +381,7 @@ def deploy(arch_or_cfg, policy: Union[str, QuantSpec] = "int4", *,
                          draft=draft, overlap=overlap, sla=sla,
                          max_pending=max_pending,
                          preempt_limit=preempt_limit, faults=faults,
-                         trace=trace)
+                         trace=trace, mesh=mesh)
     name = policy if isinstance(policy, str) else str(spec)
     return TranslationPipeline(cfg, model, params, engine, ctx, name,
                                fp_bytes, spec,

@@ -15,7 +15,10 @@ the repo-wide nearest-rank percentile (one definition shared by
 
 import dataclasses
 import json
+import socket
 import types
+import urllib.error
+import urllib.request
 
 import jax
 import jax.numpy as jnp
@@ -25,8 +28,8 @@ import pytest
 from repro.configs import REGISTRY, reduce_config
 from repro.eval import report as report_mod
 from repro.models import Ctx, build_model
-from repro.obs import (PHASES, SCHED_TID, Histogram, TraceConfig, Tracer,
-                       percentile, render_prometheus)
+from repro.obs import (PHASES, SCHED_TID, Histogram, MetricsServer,
+                       TraceConfig, Tracer, percentile, render_prometheus)
 from repro.serving import (EngineMetrics, FaultPlan, SamplingParams,
                            ServeEngine, SLATarget, deploy,
                            latency_percentiles)
@@ -232,6 +235,88 @@ def test_tracer_clamps_span_stamps_against_backward_clock():
 
 
 # ---------------------------------------------------------------------------
+# flow links: s/f pairs tying a preempted request's two residencies
+# ---------------------------------------------------------------------------
+
+
+def test_tracer_flow_pair_passes_check_and_exports():
+    tr = Tracer(TraceConfig())
+    tr.begin(1, "queued", 1.0)
+    fid = tr.flow_start(1, "resume", 1.0, count=1)
+    tr.end(1, "queued", 2.0)
+    tr.begin(1, "request", 2.0)
+    tr.flow_end(1, "resume", 2.0, fid)
+    tr.end(1, "request", 3.0)
+    assert tr.check() == []
+    chrome = [e for e in tr.to_chrome()["traceEvents"]
+              if e["ph"] in ("s", "f")]
+    assert [e["ph"] for e in chrome] == ["s", "f"]
+    assert chrome[0]["id"] == chrome[1]["id"] == fid
+    assert chrome[1]["bp"] == "e"          # bind to the enclosing slice
+    assert "bp" not in chrome[0]
+
+
+def test_tracer_flow_violations_flagged():
+    tr = Tracer(TraceConfig())
+    tr.flow_end(0, "resume", 1.0, 99)                 # f with no s
+    assert any("without matching s" in p for p in tr.check())
+
+    tr2 = Tracer(TraceConfig())
+    tr2.flow_start(0, "resume", 1.0)                  # s never consumed
+    assert any("never finished" in p for p in tr2.check())
+
+    tr3 = Tracer(TraceConfig())
+    fid = tr3.flow_start(0, "resume", 5.0)
+    tr3.flow_end(0, "resume", 4.0, fid)               # ends before it starts
+    assert any("before it starts" in p for p in tr3.check())
+
+    tr4 = Tracer(TraceConfig())
+    fid = tr4.flow_start(0, "resume", 1.0)
+    tr4.flow_end(0, "other", 2.0, fid)                # name mismatch
+    assert any("closes s" in p for p in tr4.check())
+
+
+def test_preemption_links_residencies_with_flow(lm):
+    """A preempted-and-resumed request's two slot residencies are tied
+    by a ``resume`` flow pair: the Perfetto arrow from the eviction's
+    re-queue to the replayed admission. One pair per round trip, all
+    consumed, and the trace still passes check()."""
+    eng = _engine(lm, paged=True, num_pages=5, preempt_limit=16,
+                  trace=TraceConfig())
+    _serve(eng, (P1, P2), (GREEDY8, GREEDY8))
+    m = eng.metrics()
+    assert m.preemptions >= 1 and m.resumed_requests >= 1
+    starts = [e for e in eng.trace.events if e.ph == "s"]
+    ends = [e for e in eng.trace.events if e.ph == "f"]
+    assert len(starts) == m.preemptions == len(ends)
+    assert {e.name for e in starts + ends} == {"resume"}
+    assert sorted(e.flow_id for e in starts) \
+        == sorted(e.flow_id for e in ends)
+    assert eng.trace.check() == []
+
+
+def test_flow_closed_when_preempted_request_dies_queued(lm):
+    """An abort that lands while the victim sits re-queued must still
+    consume its flow start (flow_end at retirement) — otherwise the
+    trace leaks a dangling ``s`` and check() flags it."""
+    eng = _engine(lm, paged=True, num_pages=5, preempt_limit=16,
+                  trace=TraceConfig())
+    r1 = eng.submit({"tokens": P1}, GREEDY8)
+    r2 = eng.submit({"tokens": P2}, GREEDY8)
+    for _ in range(64):
+        if eng.metrics().preemptions:
+            break
+        eng.step()
+    assert eng.metrics().preemptions >= 1
+    assert eng.num_pending == 1            # the evicted younger request
+    out = eng.abort(r2)
+    assert out.finish_reason == "abort"
+    outs = eng.run_until_drained()
+    assert [o.request_id for o in outs] == [r1]
+    assert eng.trace.check() == []         # no dangling flow starts
+
+
+# ---------------------------------------------------------------------------
 # traced == untraced: streams, syncs, and scheduling are untouched
 # ---------------------------------------------------------------------------
 
@@ -363,6 +448,80 @@ def test_engine_prometheus_export(lm):
 def test_trace_config_validates_capacity():
     with pytest.raises(ValueError, match="capacity"):
         TraceConfig(capacity=4)
+
+
+# ---------------------------------------------------------------------------
+# live /metrics endpoint (obs.promhttp)
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_server_serves_renderer_at_metrics_path():
+    with MetricsServer(lambda: "up 1\n") as srv:
+        assert srv.url == f"http://127.0.0.1:{srv.port}/metrics"
+        with urllib.request.urlopen(srv.url, timeout=5) as resp:
+            assert resp.status == 200
+            assert resp.headers["Content-Type"].startswith("text/plain")
+            assert resp.read() == b"up 1\n"
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(
+                f"http://127.0.0.1:{srv.port}/other", timeout=5)
+        assert ei.value.code == 404
+
+
+def test_metrics_server_scrapes_live_engine(lm):
+    """The renderer runs per scrape: counters served before work differ
+    from counters served after — a live endpoint, not a snapshot."""
+    eng = _engine(lm)
+    with MetricsServer(eng.prometheus) as srv:
+        def scrape():
+            with urllib.request.urlopen(srv.url, timeout=5) as r:
+                return r.read().decode()
+        before = scrape()
+        _serve(eng, (P1,), (GREEDY8,))
+        after = scrape()
+
+    def synced(text):
+        line = [ln for ln in text.splitlines()
+                if ln.startswith("repro_serving_synced_tokens ")]
+        return float(line[0].split()[-1])
+
+    assert synced(before) == 0
+    assert synced(after) > 0
+
+
+def test_metrics_server_render_failure_is_500_and_survives():
+    calls = []
+
+    def render():
+        calls.append(1)
+        if len(calls) == 1:
+            raise RuntimeError("collector down")
+        return "ok 1\n"
+
+    with MetricsServer(render) as srv:
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(srv.url, timeout=5)
+        assert ei.value.code == 500
+        with urllib.request.urlopen(srv.url, timeout=5) as resp:
+            assert resp.read() == b"ok 1\n"    # server outlived the error
+
+
+def test_metrics_server_graceful_shutdown_frees_port():
+    srv = MetricsServer(lambda: "x 0\n").start()
+    port = srv.port
+    urllib.request.urlopen(srv.url, timeout=5).read()
+    srv.close()
+    srv.close()                                # idempotent
+    # the listener is gone: connections are refused, and the port
+    # rebinds immediately (socket closed, not leaked to TIME_WAIT)
+    with pytest.raises(OSError):
+        urllib.request.urlopen(srv.url, timeout=1)
+    s = socket.socket()
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    try:
+        s.bind(("127.0.0.1", port))
+    finally:
+        s.close()
 
 
 def test_metrics_snapshot_carries_histogram_fields():
